@@ -1,0 +1,32 @@
+"""Paper Fig. 3a: estimated cost and latency for the 3-16-3 ANN design
+space; Fig. 3b: normalized latency vs P with the cubic interpolation."""
+import numpy as np
+
+from repro.core.dse import (Candidate, CostModel, LatencyModel,
+                            enumerate_candidates, measure_candidate)
+
+from benchmarks.common import emit
+
+
+def run() -> None:
+    lm, cm = LatencyModel.fit(), CostModel.fit()
+    cands = enumerate_candidates(3, 16)
+    emit("fig3a/design_space_size", 0.0, f"candidates={len(cands)}")
+    for p in range(6):
+        est_lat = lm.predict(3, 16, p)
+        est_cost = cm.predict(3, 16, p)
+        emit(f"fig3a/3-16-3_P{p}", 0.0,
+             f"est_latency_cyc={est_lat:.4f};est_vmem_KiB={est_cost/1024:.0f}")
+    # Fig 3b: normalized actual latencies + interpolation residual
+    sizes = ((3, 4), (3, 8), (3, 16), (4, 8), (4, 16))
+    for p in range(6):
+        norm = [measure_candidate(Candidate(i_dim=i, h_dim=h, p=p))
+                ["per_stream_latency_cycles"] / (i * h) for i, h in sizes]
+        fit = np.polyval(lm.coeffs[("vpu", 4)], float(p))
+        emit(f"fig3b/P{p}", 0.0,
+             f"mean_norm_latency={np.mean(norm):.6f};poly3_fit={fit:.6f};"
+             f"residual={abs(np.mean(norm)-fit)/np.mean(norm):.2%}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Fig. 4: cost as a function of (a) hidden neurons H and (b)
+input/output neurons I — semi-linear relationships behind Eq. 9."""
+import numpy as np
+
+from repro.core.dse import Candidate, vmem_bytes
+
+from benchmarks.common import emit
+
+
+def run() -> None:
+    # (a) vary H at fixed I=3, two parallelism levels (as in the paper)
+    for p in (1, 3):
+        hs = [8, 16, 32, 48, 64, 96, 128]
+        costs = [vmem_bytes(Candidate(i_dim=3, h_dim=h, p=p, t_block=8))
+                 for h in hs]
+        slope = np.polyfit(hs, costs, 1)
+        r = np.corrcoef(hs, costs)[0, 1]
+        emit(f"fig4a/P{p}", 0.0,
+             f"H={hs};vmem_KiB={[c // 1024 for c in costs]};"
+             f"linear_r={r:.4f}")
+    # (b) vary I at fixed H=8
+    for p in (1, 3):
+        is_ = [4, 8, 16, 24, 32]
+        costs = [vmem_bytes(Candidate(i_dim=i, h_dim=8, p=p, t_block=8))
+                 for i in is_]
+        r = np.corrcoef(is_, costs)[0, 1]
+        emit(f"fig4b/P{p}", 0.0,
+             f"I={is_};vmem_KiB={[c // 1024 for c in costs]};"
+             f"linear_r={r:.4f}")
+
+
+if __name__ == "__main__":
+    run()

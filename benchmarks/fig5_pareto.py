@@ -1,0 +1,26 @@
+"""Paper Fig. 5: post-'synthesis' cost/latency design space per ANN size,
+with (a) MXU (DSP analogue) and (b) VPU-only (no-DSP analogue) modes."""
+from repro.core.dse import (CostModel, LatencyModel, enumerate_candidates,
+                            pareto_front)
+
+from benchmarks.common import emit
+
+
+def run() -> None:
+    lm, cm = LatencyModel.fit(), CostModel.fit()
+    for h in (4, 8, 16):
+        for unit in ("mxu", "vpu"):
+            cands = [c for c in enumerate_candidates(3, h, units=(unit,))]
+            front = pareto_front(cands, lm, cm)
+            pts = ";".join(f"P{c.p}:{cost/1024:.0f}KiB@{lat:.3f}cyc"
+                           for c, cost, lat in front[:6])
+            # top-speed and cost-optimized extremes (paper's reading of Fig 5)
+            fastest = min(front, key=lambda t: t[2])
+            cheapest = min(front, key=lambda t: t[1])
+            emit(f"fig5/3-{h}-3_{unit}", 0.0,
+                 f"pareto={pts};fastest_P={fastest[0].p};"
+                 f"cheapest_P={cheapest[0].p}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Paper Table I: operation counts — ANN (Eq. 7) vs RK-4 (Eq. 4)."""
+from repro.core.chaotic import SYSTEMS, ann_op_counts, rk4_op_counts
+
+from benchmarks.common import emit
+
+
+def run() -> None:
+    for sizes in ((3, 4, 3), (3, 8, 3), (3, 16, 3)):
+        mul, add = ann_op_counts(sizes)
+        emit(f"table1/ann_{'-'.join(map(str, sizes))}", 0.0,
+             f"muls={mul};adds={add}")
+    for name, sys_ in sorted(SYSTEMS.items()):
+        mul, add = rk4_op_counts(sys_)
+        emit(f"table1/rk4_{name}", 0.0, f"muls={mul};adds={add}")
+    # the paper's headline comparison
+    ann = ann_op_counts((3, 8, 3))
+    rk4 = rk4_op_counts(SYSTEMS["chen"])
+    emit("table1/ann_vs_rk4_chen", 0.0,
+         f"ann={ann[0]}mul/{ann[1]}add;rk4={rk4[0]}mul/{rk4[1]}add;"
+         f"match_paper={(ann == (48, 59)) and (rk4 == (60, 59))}")
+
+
+if __name__ == "__main__":
+    run()

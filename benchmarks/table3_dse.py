@@ -1,0 +1,35 @@
+"""Paper Table III: DSE estimates vs 'post-synthesis' measurements for the
+three ANN sizes (3-4-3, 3-8-3, 3-16-3) across parallelism levels, in both
+compute-unit modes (MXU=DSP analogue, VPU=LUT-only analogue).
+
+Estimate = Eq. 8/9 fitted models; Actual = microarchitectural measurement
+(the deterministic oracle validated against compiled HLO in tests)."""
+from repro.core.dse import (Candidate, CostModel, LatencyModel,
+                            measure_candidate)
+
+from benchmarks.common import emit
+
+
+def run() -> None:
+    lm, cm = LatencyModel.fit(), CostModel.fit()
+    for h in (4, 8, 16):
+        p_max = 5
+        for p in range(p_max + 1):
+            for unit in ("mxu", "vpu"):
+                c = Candidate(i_dim=3, h_dim=h, p=p, compute_unit=unit)
+                meas = measure_candidate(c)
+                est_lat = lm.predict(3, h, p, unit, c.dtype_bytes)
+                est_cost = cm.predict(3, h, p, unit, c.dtype_bytes)
+                act_lat = meas["per_stream_latency_cycles"]
+                act_cost = meas["vmem_bytes"]
+                emit(f"table3/3-{h}-3_P{p}_{unit}", 0.0,
+                     f"est_lat_cyc={est_lat:.4f};act_lat_cyc={act_lat:.4f};"
+                     f"lat_err={abs(est_lat - act_lat) / act_lat:.1%};"
+                     f"est_vmem={est_cost / 1024:.0f}KiB;"
+                     f"act_vmem={act_cost / 1024:.0f}KiB;"
+                     f"cost_err={abs(est_cost - act_cost) / act_cost:.1%};"
+                     f"samples_per_s={meas['samples_per_sec']:.3e}")
+
+
+if __name__ == "__main__":
+    run()

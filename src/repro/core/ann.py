@@ -1,0 +1,161 @@
+"""The HENNC ANN oscillator model and its trainer (paper §III-A, Table II).
+
+A fully-connected I-H-I regressor approximates the chaotic system's one-step
+map in normalized space.  Keras -> pure JAX; Adam, lr 1e-4, MSE loss, and the
+paper's four regression metrics (MSE/MAE/RMSE/R²).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chaotic import ChaoticDataset, denormalize, get_system, rk4_step
+from repro.train.optimizer import Adam
+
+Array = jax.Array
+
+ACTIVATIONS = {
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AnnConfig:
+    """I-H-I oscillator net.  The paper sweeps H in {4, 8, 16} (Table III)."""
+
+    dim: int = 3              # I: input == output neurons (system dimension)
+    hidden: int = 8           # H: hidden neurons (Zhang: no gain beyond 8)
+    activation: str = "relu"  # Table II winner: ReLU
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def layer_sizes(self) -> Tuple[int, int, int]:
+        return (self.dim, self.hidden, self.dim)
+
+
+def init_params(cfg: AnnConfig, key: jax.Array) -> Dict[str, Array]:
+    k1, k2 = jax.random.split(key)
+    s1 = jnp.sqrt(2.0 / cfg.dim)
+    s2 = jnp.sqrt(2.0 / cfg.hidden)
+    return {
+        "w1": (jax.random.normal(k1, (cfg.dim, cfg.hidden)) * s1).astype(cfg.dtype),
+        "b1": jnp.zeros((cfg.hidden,), cfg.dtype),
+        "w2": (jax.random.normal(k2, (cfg.hidden, cfg.dim)) * s2).astype(cfg.dtype),
+        "b2": jnp.zeros((cfg.dim,), cfg.dtype),
+    }
+
+
+def apply(cfg: AnnConfig, params: Dict[str, Array], x: Array) -> Array:
+    """One oscillator step: y = W2·phi(W1·x + b1) + b2 (paper Eq. 6)."""
+    phi = ACTIVATIONS[cfg.activation]
+    h = phi(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def iterate(cfg: AnnConfig, params: Dict[str, Array], x0: Array, n_steps: int) -> Array:
+    """Autonomous oscillation: feed the output back as the next input (Fig. 1).
+    Returns (n_steps, ...) trajectory, excluding x0."""
+
+    def body(x, _):
+        x_next = apply(cfg, params, x)
+        return x_next, x_next
+
+    _, traj = jax.lax.scan(body, x0, None, length=n_steps)
+    return traj
+
+
+# ---------------------------------------------------------------------------
+# Metrics (paper Table II)
+# ---------------------------------------------------------------------------
+
+def regression_metrics(pred: Array, target: Array) -> Dict[str, float]:
+    pred = jnp.asarray(pred, jnp.float32)
+    target = jnp.asarray(target, jnp.float32)
+    err = pred - target
+    mse = jnp.mean(jnp.square(err))
+    mae = jnp.mean(jnp.abs(err))
+    ss_res = jnp.sum(jnp.square(err))
+    ss_tot = jnp.sum(jnp.square(target - jnp.mean(target, axis=0, keepdims=True)))
+    r2 = 1.0 - ss_res / jnp.maximum(ss_tot, 1e-12)
+    return {
+        "mse": float(mse),
+        "mae": float(mae),
+        "rmse": float(jnp.sqrt(mse)),
+        "r2": float(r2),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Trainer (paper Table II hyperparameters: MSE loss, Adam, lr 1e-4)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg", "opt"))
+def _train_epoch(cfg: AnnConfig, opt: Adam, params, opt_state, xb, yb):
+    """One epoch over pre-batched data xb/yb: (n_batches, B, dim)."""
+
+    def loss_fn(p, x, y):
+        return jnp.mean(jnp.square(apply(cfg, p, x) - y))
+
+    def step(carry, batch):
+        params, opt_state = carry
+        x, y = batch
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return (params, opt_state), loss
+
+    (params, opt_state), losses = jax.lax.scan(step, (params, opt_state), (xb, yb))
+    return params, opt_state, jnp.mean(losses)
+
+
+def train(cfg: AnnConfig, dataset: ChaoticDataset, *, epochs: int = 50,
+          batch_size: int = 256, lr: float = 1e-4, seed: int = 0,
+          target_mse: float | None = None, verbose: bool = False):
+    """Train the oscillator net.  Returns (params, history dict).
+
+    Matches the paper's recipe; ``target_mse`` implements the paper's
+    "training terminates when the model achieves the desired accuracy".
+    """
+    opt = Adam(lr=lr)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = opt.init(params)
+
+    x, y = dataset.x_train, dataset.y_train
+    n_batches = len(x) // batch_size
+    xb = jnp.asarray(x[: n_batches * batch_size].reshape(n_batches, batch_size, -1))
+    yb = jnp.asarray(y[: n_batches * batch_size].reshape(n_batches, batch_size, -1))
+
+    history = {"train_loss": []}
+    for epoch in range(epochs):
+        params, opt_state, loss = _train_epoch(cfg, opt, params, opt_state, xb, yb)
+        history["train_loss"].append(float(loss))
+        if verbose and (epoch % 10 == 0 or epoch == epochs - 1):
+            print(f"  epoch {epoch:4d}  train_mse {float(loss):.6f}")
+        if target_mse is not None and float(loss) <= target_mse:
+            break
+
+    test_pred = apply(cfg, params, jnp.asarray(dataset.x_test))
+    history["test_metrics"] = regression_metrics(test_pred, jnp.asarray(dataset.y_test))
+    return params, history
+
+
+def extract_parameters(params: Dict[str, Array]) -> Dict[str, np.ndarray]:
+    """Paper §III-A: 'the network parameters are extracted for the hardware
+    phase'.  Plain float32 numpy, the hand-off format for DSE + codegen."""
+    return {k: np.asarray(v, dtype=np.float32) for k, v in params.items()}
+
+
+def one_step_reference(system_name: str, dataset: ChaoticDataset, x_norm: Array) -> Array:
+    """RK-4 oracle for the same one-step map in normalized space (testbench)."""
+    sys_ = get_system(system_name)
+    scale = jnp.asarray(dataset.scale)
+    offset = jnp.asarray(dataset.offset)
+    x = denormalize(x_norm, scale, offset)
+    x_next = rk4_step(sys_.f, x, dataset.dt)
+    return (x_next - offset) / scale

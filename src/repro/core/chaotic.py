@@ -1,0 +1,218 @@
+"""Chaotic ODE systems and the RK-4 reference integrator (paper Eqs. 1-5).
+
+The paper generates its training data by numerically solving a chaotic system
+(Chen by default) with ``scipy.integrate.odeint``.  Here the integrator is a
+pure-JAX fixed-step RK-4 (``lax.scan``), which is (a) the method the paper's
+op-count analysis is built on (Eqs. 2-4) and (b) jit/vmap-able so the dataset
+pipeline itself scales.  SciPy remains available in tests as an independent
+oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaoticSystem:
+    """A system of N autonomous ODEs dX/dt = f(X) (paper Eq. 1).
+
+    ``n_mul_dynamic`` / ``n_add_dynamic`` are the dynamic-term operation
+    counts of ``f`` used by the paper's Eq. 4 RK-4 cost model.
+    """
+
+    name: str
+    dim: int
+    f: Callable[[Array], Array]
+    n_mul_dynamic: int
+    n_add_dynamic: int
+    # A point near the attractor, used as the default trajectory seed.
+    x0: Tuple[float, ...] = ()
+    # Integration step that keeps RK-4 stable on the attractor.
+    dt: float = 0.01
+
+    def __post_init__(self):
+        if not self.x0:
+            object.__setattr__(self, "x0", tuple([0.1] * self.dim))
+
+
+def _chen(a: float = 35.0, b: float = 3.0, c: float = 28.0) -> ChaoticSystem:
+    """Chen system (paper Eq. 5): 6 muls, 5 adds in f (paper counts)."""
+
+    def f(x: Array) -> Array:
+        x1, x2, x3 = x[..., 0], x[..., 1], x[..., 2]
+        d1 = a * (x2 - x1)                      # 1 mul, 1 add
+        d2 = (c - a) * x1 - x1 * x3 + c * x2    # 3 mul, 2 add (c-a folded const)
+        d3 = x1 * x2 - b * x3                   # 2 mul, 1 add
+        return jnp.stack([d1, d2, d3], axis=-1)
+
+    return ChaoticSystem("chen", 3, f, n_mul_dynamic=6, n_add_dynamic=5,
+                         x0=(-0.1, 0.5, -0.6), dt=0.002)
+
+
+def _lorenz(sigma: float = 10.0, rho: float = 28.0, beta: float = 8.0 / 3.0) -> ChaoticSystem:
+    def f(x: Array) -> Array:
+        x1, x2, x3 = x[..., 0], x[..., 1], x[..., 2]
+        d1 = sigma * (x2 - x1)
+        d2 = x1 * (rho - x3) - x2
+        d3 = x1 * x2 - beta * x3
+        return jnp.stack([d1, d2, d3], axis=-1)
+
+    return ChaoticSystem("lorenz", 3, f, n_mul_dynamic=5, n_add_dynamic=5,
+                         x0=(1.0, 1.0, 1.0), dt=0.005)
+
+
+def _rossler(a: float = 0.2, b: float = 0.2, c: float = 5.7) -> ChaoticSystem:
+    def f(x: Array) -> Array:
+        x1, x2, x3 = x[..., 0], x[..., 1], x[..., 2]
+        d1 = -x2 - x3
+        d2 = x1 + a * x2
+        d3 = b + x3 * (x1 - c)
+        return jnp.stack([d1, d2, d3], axis=-1)
+
+    return ChaoticSystem("rossler", 3, f, n_mul_dynamic=2, n_add_dynamic=5,
+                         x0=(0.0, 1.0, 0.0), dt=0.02)
+
+
+def _chua(alpha: float = 15.6, beta: float = 28.0,
+          m0: float = -1.143, m1: float = -0.714) -> ChaoticSystem:
+    """Chua's circuit with the piecewise-linear diode (ReLU-expressible)."""
+
+    def f(x: Array) -> Array:
+        x1, x2, x3 = x[..., 0], x[..., 1], x[..., 2]
+        h = m1 * x1 + 0.5 * (m0 - m1) * (jnp.abs(x1 + 1.0) - jnp.abs(x1 - 1.0))
+        d1 = alpha * (x2 - x1 - h)
+        d2 = x1 - x2 + x3
+        d3 = -beta * x2
+        return jnp.stack([d1, d2, d3], axis=-1)
+
+    return ChaoticSystem("chua", 3, f, n_mul_dynamic=4, n_add_dynamic=7,
+                         x0=(0.7, 0.0, 0.0), dt=0.01)
+
+
+SYSTEMS = {s.name: s for s in (_chen(), _lorenz(), _rossler(), _chua())}
+
+
+def get_system(name: str) -> ChaoticSystem:
+    try:
+        return SYSTEMS[name]
+    except KeyError:
+        raise KeyError(f"unknown chaotic system {name!r}; have {sorted(SYSTEMS)}")
+
+
+# ---------------------------------------------------------------------------
+# RK-4 (paper Eqs. 2-3)
+# ---------------------------------------------------------------------------
+
+def rk4_step(f: Callable[[Array], Array], x: Array, dt: float) -> Array:
+    """One classical RK-4 step.  Shapes broadcast; works batched."""
+    k1 = f(x)
+    k2 = f(x + (dt / 2) * k1)
+    k3 = f(x + (dt / 2) * k2)
+    k4 = f(x + dt * k3)
+    return x + (dt / 6) * (k1 + 2 * k2 + 2 * k3 + k4)
+
+
+@partial(jax.jit, static_argnames=("system_name", "n_steps"))
+def integrate(system_name: str, x0: Array, n_steps: int, dt: float | None = None) -> Array:
+    """Integrate ``n_steps`` RK-4 steps.  Returns (n_steps+1, ...) trajectory.
+
+    ``x0`` may be (dim,) or batched (B, dim); the trajectory keeps the batch.
+    """
+    sys_ = get_system(system_name)
+    dt = sys_.dt if dt is None else dt
+
+    def body(x, _):
+        x_next = rk4_step(sys_.f, x, dt)
+        return x_next, x_next
+
+    _, traj = jax.lax.scan(body, x0, None, length=n_steps)
+    return jnp.concatenate([x0[None], traj], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Op-count models (paper Eq. 4 and Eq. 7 / Table I)
+# ---------------------------------------------------------------------------
+
+def rk4_op_counts(system: ChaoticSystem) -> Tuple[int, int]:
+    """Paper Eq. 4: static + dynamic multiplication/addition counts of RK-4."""
+    n = system.dim
+    n_mul = (3 * n * n + 3 * n) + 4 * system.n_mul_dynamic
+    n_add = (3 * n * n + 4 * n) + 4 * system.n_add_dynamic
+    return n_mul, n_add
+
+
+def ann_op_counts(layer_sizes: Tuple[int, ...]) -> Tuple[int, int]:
+    """Paper Eq. 7 for a feed-forward net given (n_1, ..., n_L) neuron counts.
+
+    For 3-8-3: 48 muls, 59 adds (Table I).
+    """
+    n_mul = sum(layer_sizes[i] * layer_sizes[i - 1] for i in range(1, len(layer_sizes)))
+    n_add = sum(layer_sizes[i] * (layer_sizes[i - 1] + 1) for i in range(1, len(layer_sizes)))
+    return n_mul, n_add
+
+
+# ---------------------------------------------------------------------------
+# Dataset generation (paper §III-A)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChaoticDataset:
+    """Labelled one-step pairs: model learns X_t -> X_{t+1} (paper §III-A)."""
+
+    x_train: np.ndarray
+    y_train: np.ndarray
+    x_test: np.ndarray
+    y_test: np.ndarray
+    # Per-dimension affine normalizer mapping attractor range into [-1, 1];
+    # the hardware core runs in normalized space (bounded signals).
+    scale: np.ndarray
+    offset: np.ndarray
+    system: str
+    dt: float
+
+
+def normalize(x: Array, scale: Array, offset: Array) -> Array:
+    return (x - offset) / scale
+
+
+def denormalize(x: Array, scale: Array, offset: Array) -> Array:
+    return x * scale + offset
+
+
+def make_dataset(system_name: str, n_samples: int = 100_000,
+                 train_frac: float = 0.8, burn_in: int = 2_000,
+                 dt: float | None = None, seed: int = 0) -> ChaoticDataset:
+    """Generate the paper's dataset: sample a long RK-4 trajectory; each
+    labelled point is (X_t, X_{t+1}) for consecutive time steps."""
+    sys_ = get_system(system_name)
+    dt = sys_.dt if dt is None else dt
+    x0 = jnp.asarray(sys_.x0, dtype=jnp.float32)
+    # Burn in so samples lie on the attractor, then collect n_samples + 1.
+    traj = integrate(system_name, x0, burn_in + n_samples, dt)
+    traj = np.asarray(traj[burn_in:], dtype=np.float32)       # (n_samples+1, dim)
+
+    lo, hi = traj.min(axis=0), traj.max(axis=0)
+    scale = ((hi - lo) / 2.0).astype(np.float32)
+    scale = np.where(scale == 0, 1.0, scale)
+    offset = ((hi + lo) / 2.0).astype(np.float32)
+    norm = (traj - offset) / scale
+
+    x_all, y_all = norm[:-1], norm[1:]
+    # Shuffle pairs before splitting (trajectory order leaks time otherwise).
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(x_all))
+    x_all, y_all = x_all[perm], y_all[perm]
+    n_train = int(train_frac * len(x_all))
+    return ChaoticDataset(
+        x_train=x_all[:n_train], y_train=y_all[:n_train],
+        x_test=x_all[n_train:], y_test=y_all[n_train:],
+        scale=scale, offset=offset, system=system_name, dt=dt,
+    )

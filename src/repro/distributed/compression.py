@@ -1,0 +1,69 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 per-block quantization applied to gradients before the cross-pod
+all-reduce (the lowest-bandwidth axis carries 4x fewer bytes), with an error
+feedback accumulator so quantization error is re-injected next step —
+convergence-neutral in expectation (Seide et al. 2014; Karimireddy 2019).
+
+Stochastic rounding can be driven by the chaotic PRNG (``rounding='chaotic'``)
+— the paper's oscillator used inside the training loop.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+BLOCK = 256
+
+
+def _quantize_leaf(g: jax.Array, noise: Optional[jax.Array] = None):
+    """int8 symmetric per-block quantization. Returns (q, scales)."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    scaled = blocks / scale
+    if noise is not None:
+        scaled = scaled + noise.reshape(scaled.shape) - 0.5   # stochastic
+    q = jnp.clip(jnp.round(scaled), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_leaf(q: jax.Array, scale: jax.Array, shape, dtype):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_grads(grads: PyTree, error_buf: Optional[PyTree] = None,
+                   noise_fn=None) -> Tuple[PyTree, PyTree]:
+    """Quantize->dequantize each gradient leaf with error feedback.
+
+    Returns (compensated_grads, new_error_buf).  In a real deployment the
+    int8 payload crosses the pod axis; here the quantize/dequantize pair is
+    applied in-graph so the optimizer sees exactly what compressed training
+    would see (and the collective-bytes accounting in the roofline reads the
+    int8 operand sizes when enabled in the train step).
+    """
+    if error_buf is None:
+        error_buf = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        noise = noise_fn(g32.size) if noise_fn is not None else None
+        q, s = _quantize_leaf(g32, noise)
+        deq = _dequantize_leaf(q, s, g.shape, jnp.float32)
+        new_e = g32 - deq
+        return deq.astype(g.dtype), new_e
+
+    pairs = jax.tree.map(one, grads, error_buf)
+    comp = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    errs = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return comp, errs

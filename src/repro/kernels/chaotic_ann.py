@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: fused ANN-based chaotic oscillator (the HENNC core).
+
+TPU adaptation of the paper's chaotic unit (Fig. 1).  On FPGA the unit is a
+MAC array with parallelism ``P`` multipliers; on TPU the throughput unit is a
+*block of independent oscillator streams* mapped onto the vector lanes:
+
+  - streams live on the 128-wide lane axis (``s_block`` a multiple of 128),
+  - the I/H feature dims live on the 8-deep sublane axis,
+  - the oscillator state is carried in a VMEM scratch buffer across the whole
+    time grid — the feedback path (output -> next input) never touches HBM,
+  - only finished trajectory blocks (t_block steps) are streamed out to HBM.
+
+Two compute-unit modes, mirroring the paper's DSP-vs-LUT choice:
+  - ``vpu``: the two tiny matmuls are computed as I (resp. H) broadcast
+    fused-multiply-adds over (H, s_block) / (I, s_block) vregs — full lane
+    utilization, no MXU padding waste (I, H << 128).
+  - ``mxu``: ``jnp.dot`` — contraction dims are MXU-padded to 128; wasteful
+    for I=3 but included as a real design-space axis (it wins for large H).
+
+Grid: (S/s_block, T/t_block); the T axis iterates fastest (TPU grids execute
+sequentially minor-to-major), so the per-stream-block state scratch is
+initialized at t==0 and carried across t blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific memory spaces (present in jax 0.8.x)
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except ImportError:  # pragma: no cover
+    _VMEM = None
+
+LANES = 128
+SUBLANES = 8
+
+
+def _activation(name: str):
+    return {"relu": jax.nn.relu, "tanh": jnp.tanh, "sigmoid": jax.nn.sigmoid}[name]
+
+
+def _pad_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _kernel(w1_ref, b1_ref, w2_ref, b2_ref, x0_ref, out_ref, state_ref,
+            *, t_block: int, unroll: int, activation: str, compute_unit: str,
+            i_dim: int, h_dim: int):
+    """One (stream-block, time-block) grid cell.
+
+    Ref shapes (per block):
+      w1: (I_pad, H_pad)  b1: (H_pad, 1)  w2: (H_pad, I_pad)  b2: (I_pad, 1)
+      x0: (I_pad, s_block)      out: (t_block, I_pad, s_block)
+      state (VMEM scratch): (I_pad, s_block)
+    """
+    t = pl.program_id(1)
+    phi = _activation(activation)
+
+    @pl.when(t == 0)
+    def _init():
+        state_ref[...] = x0_ref[...]
+
+    w1 = w1_ref[...]
+    b1 = b1_ref[...]
+    w2 = w2_ref[...]
+    b2 = b2_ref[...]
+
+    def one_step(x):
+        # x: (I_pad, s). Padded feature rows of the weights are zero, so
+        # padding never contaminates live rows.
+        if compute_unit == "mxu":
+            h = phi(jnp.dot(w1.T, x, preferred_element_type=jnp.float32)
+                    .astype(x.dtype) + b1)
+            y = jnp.dot(w2.T, h, preferred_element_type=jnp.float32)
+            return y.astype(x.dtype) + b2
+        # VPU path: broadcast-FMA over lanes; static unroll over tiny dims.
+        h = jnp.zeros((w1.shape[1], x.shape[1]), x.dtype)
+        for i in range(i_dim):
+            h = h + w1[i, :][:, None] * x[i, :][None, :]
+        h = phi(h + b1)
+        y = jnp.zeros_like(x)
+        for j in range(h_dim):
+            y = y + w2[j, :][:, None] * h[j, :][None, :]
+        return y + b2
+
+    def unrolled_chunk(x, base):
+        for u in range(unroll):
+            x = one_step(x)
+            out_ref[base + u] = x
+        return x
+
+    x = state_ref[...]
+    n_chunks = t_block // unroll
+    if n_chunks == 1:
+        x = unrolled_chunk(x, 0)
+    else:
+        def body(c, x):
+            return unrolled_chunk(x, c * unroll)
+        x = jax.lax.fori_loop(0, n_chunks, body, x)
+    state_ref[...] = x
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_steps", "s_block", "t_block", "unroll", "activation",
+                     "compute_unit", "interpret"),
+)
+def chaotic_ann_pallas(w1, b1, w2, b2, x0, *, n_steps: int,
+                       s_block: int = 256, t_block: int = 128, unroll: int = 1,
+                       activation: str = "relu", compute_unit: str = "vpu",
+                       interpret: bool = False):
+    """Run the fused oscillator kernel.
+
+    Args:
+      w1 (I, H), b1 (H,), w2 (H, I), b2 (I,), x0 (S, I).
+      n_steps: total steps (padded up to a multiple of t_block internally).
+      s_block/t_block/unroll/compute_unit: DSE-searchable microarchitecture.
+    Returns:
+      (n_steps, S, I) trajectory matching ``ref.chaotic_ann_ref``.
+    """
+    i_dim, h_dim = w1.shape
+    s_total = x0.shape[0]
+    dtype = x0.dtype
+    if t_block % unroll:
+        raise ValueError(f"t_block {t_block} must be divisible by unroll {unroll}")
+
+    i_pad = _pad_to(max(i_dim, 1), SUBLANES)
+    h_pad = _pad_to(max(h_dim, 1), SUBLANES)
+    s_pad = _pad_to(s_total, s_block)
+    t_pad = _pad_to(n_steps, t_block)
+
+    w1p = jnp.zeros((i_pad, h_pad), dtype).at[:i_dim, :h_dim].set(w1.astype(dtype))
+    b1p = jnp.zeros((h_pad, 1), dtype).at[:h_dim, 0].set(b1.astype(dtype))
+    w2p = jnp.zeros((h_pad, i_pad), dtype).at[:h_dim, :i_dim].set(w2.astype(dtype))
+    b2p = jnp.zeros((i_pad, 1), dtype).at[:i_dim, 0].set(b2.astype(dtype))
+    # (S, I) -> (I_pad, S_pad): streams on lanes.
+    x0p = jnp.zeros((i_pad, s_pad), dtype).at[:i_dim, :s_total].set(x0.T.astype(dtype))
+
+    grid = (s_pad // s_block, t_pad // t_block)
+    scratch = [_VMEM((i_pad, s_block), dtype)] if _VMEM is not None else []
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, t_block=t_block, unroll=unroll,
+                          activation=activation, compute_unit=compute_unit,
+                          i_dim=i_dim, h_dim=h_dim),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((i_pad, h_pad), lambda s, t: (0, 0)),    # w1
+            pl.BlockSpec((h_pad, 1), lambda s, t: (0, 0)),        # b1
+            pl.BlockSpec((h_pad, i_pad), lambda s, t: (0, 0)),    # w2
+            pl.BlockSpec((i_pad, 1), lambda s, t: (0, 0)),        # b2
+            pl.BlockSpec((i_pad, s_block), lambda s, t: (0, s)),  # x0
+        ],
+        out_specs=pl.BlockSpec((t_block, i_pad, s_block), lambda s, t: (t, 0, s)),
+        out_shape=jax.ShapeDtypeStruct((t_pad, i_pad, s_pad), dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(w1p, b1p, w2p, b2p, x0p)
+
+    # (t_pad, I_pad, s_pad) -> (n_steps, S, I)
+    return out[:n_steps, :i_dim, :s_total].transpose(0, 2, 1)

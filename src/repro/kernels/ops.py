@@ -1,0 +1,77 @@
+"""Public jit'd entry points for the kernels package.
+
+``chaotic_trajectory`` selects the Pallas kernel (interpret-mode on CPU,
+compiled on TPU) or the pure-jnp reference, with a uniform (S, I) API.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.chaotic_ann import chaotic_ann_pallas
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+def chaotic_trajectory(params: Dict[str, jax.Array], x0: jax.Array, n_steps: int,
+                       *, activation: str = "relu", backend: str = "auto",
+                       s_block: int = 256, t_block: int = 128, unroll: int = 1,
+                       compute_unit: str = "vpu") -> jax.Array:
+    """Generate (n_steps, S, I) oscillator trajectories.
+
+    backend: 'auto' | 'pallas' | 'pallas_interpret' | 'ref'.
+    'auto' uses the compiled Pallas kernel on TPU and interpret mode on CPU.
+    """
+    w1, b1, w2, b2 = params["w1"], params["b1"], params["w2"], params["b2"]
+    if backend == "ref":
+        return ref.chaotic_ann_ref(w1, b1, w2, b2, x0, n_steps, activation)
+    interpret = (backend == "pallas_interpret") or (backend == "auto" and not _ON_TPU)
+    return chaotic_ann_pallas(
+        w1, b1, w2, b2, x0, n_steps=n_steps, s_block=s_block, t_block=t_block,
+        unroll=unroll, activation=activation, compute_unit=compute_unit,
+        interpret=interpret)
+
+
+def uniform_from_trajectory(traj: jax.Array, scale_bits: int = 23) -> jax.Array:
+    """Map trajectory floats in [-1, 1]-ish range to uniform [0, 1) floats by
+    keeping the chaotic low-order mantissa bits (the PRNG post-processing
+    stage of the paper's Fig. 1 oscillator-as-PRNG usage)."""
+    bits = bits_from_trajectory(traj)
+    return bits.astype(jnp.float32) / jnp.float32(2 ** 32)
+
+
+def bits_from_trajectory(traj: jax.Array) -> jax.Array:
+    """Extract uint32 words from chaotic samples.
+
+    Chaotic trajectories are smooth at the top of the mantissa but the low
+    mantissa bits decorrelate in a few steps (positive Lyapunov exponent).
+    Following the standard chaotic-PRNG recipe, we take the low 16 mantissa
+    bits of each f32 sample and pack two consecutive samples per u32 word,
+    XOR-folded with a golden-ratio Weyl sequence to whiten residual bias.
+    Input (..., I) floats; output (...,) uint32 (I folded in).
+    """
+    x = traj.astype(jnp.float32)
+    u = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    lo = u & jnp.uint32(0xFFFF)
+    # Fold the I system dimensions together (they are strongly coupled but
+    # their low bits differ; XOR with odd shifts mixes them).
+    folded = lo[..., 0]
+    for i in range(1, traj.shape[-1]):
+        folded = folded ^ (lo[..., i] << jnp.uint32(5 * i % 16))
+    # Pack pairs along the leading (time) axis into 32-bit words.
+    t = folded.shape[0] // 2
+    words = (folded[0:2 * t:2] << jnp.uint32(16)) | folded[1:2 * t:2]
+    # Weyl whitening.
+    idx = jnp.arange(t, dtype=jnp.uint32)
+    weyl = idx * jnp.uint32(0x9E3779B9)
+    words = words ^ weyl.reshape((t,) + (1,) * (words.ndim - 1))
+    # Final avalanche (xorshift-multiply, Murmur3 finalizer style).
+    words = words ^ (words >> jnp.uint32(16))
+    words = words * jnp.uint32(0x85EBCA6B)
+    words = words ^ (words >> jnp.uint32(13))
+    words = words * jnp.uint32(0xC2B2AE35)
+    words = words ^ (words >> jnp.uint32(16))
+    return words

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels (the co-simulation references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def chaotic_ann_ref(w1: Array, b1: Array, w2: Array, b2: Array,
+                    x0: Array, n_steps: int, activation: str = "relu") -> Array:
+    """Iterate the I-H-I oscillator ``n_steps`` times for a batch of streams.
+
+    Args:
+      w1: (I, H); b1: (H,); w2: (H, I); b2: (I,)
+      x0: (S, I) initial states, one independent oscillator per row.
+    Returns:
+      (n_steps, S, I) trajectory (excluding x0), in x0's dtype.
+    """
+    phi = {"relu": jax.nn.relu, "tanh": jnp.tanh, "sigmoid": jax.nn.sigmoid}[activation]
+    dtype = x0.dtype
+
+    def step(x, _):
+        h = phi(x @ w1.astype(dtype) + b1.astype(dtype))
+        y = h @ w2.astype(dtype) + b2.astype(dtype)
+        return y, y
+
+    _, traj = jax.lax.scan(step, x0, None, length=n_steps)
+    return traj

@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on the
+production mesh (single-pod 16x16 = 256 chips; multi-pod 2x16x16 = 512) and
+record memory/cost/collective analyses for the roofline.
+
+The two lines above MUST run before any jax import (device count locks at
+first init); do not set them globally — smoke tests and benches see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+      --shape train_4k --mesh single --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import pathlib           # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shapes_for  # noqa: E402
+from repro.configs.registry import ALIASES, ARCH_IDS, get_config  # noqa: E402
+from repro.distributed.sharding import (MeshSpec, make_shard_fn, named,  # noqa: E402
+                                        plan_batch, plan_decode_state,
+                                        plan_params, strip_dp_axes)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import transformer as tf  # noqa: E402
+from repro.serve.engine import make_serve_step  # noqa: E402
+from repro.train.optimizer import Adam  # noqa: E402
+from repro.train.train_step import (TrainState, TrainStepConfig, batch_spec,  # noqa: E402
+                                    make_train_step)
+
+# desired gradient-accumulation microbatches per arch for train_4k
+# (sized so per-device activations fit 16 GB HBM; see DESIGN.md §6)
+MICROBATCHES = {
+    "codeqwen1_5_7b": 4, "llama3_2_3b": 4, "gemma_7b": 4, "qwen2_72b": 16,
+    "chameleon_34b": 8, "rwkv6_1_6b": 2, "zamba2_1_2b": 4, "mixtral_8x7b": 8,
+    "qwen3_moe_30b_a3b": 8, "musicgen_large": 4,
+}
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\b")
+SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+# per-device link-traffic factor per collective kind (ring algorithms)
+_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def parse_collectives(hlo_text: str):
+    """Sum per-device payload bytes of collective ops in partitioned HLO."""
+    totals = {k: 0.0 for k in _FACTOR}
+    counts = {k: 0 for k in _FACTOR}
+    for line in hlo_text.splitlines():
+        if "= " not in line:
+            continue
+        m = COLLECTIVE_RE.search(line.split("= ", 1)[1].split("(", 1)[0])
+        if not m:
+            continue
+        if "-done" in line:          # started payload already counted
+            continue
+        kind = m.group(1)
+        best = 0
+        for dt, dims in SHAPE_RE.findall(line):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            best = max(best, n * _DTYPE_BYTES[dt])
+        totals[kind] += best
+        counts[kind] += 1
+    link_bytes = sum(_FACTOR[k] * v for k, v in totals.items())
+    return {"per_kind_bytes": totals, "per_kind_count": counts,
+            "weighted_link_bytes_per_device": link_bytes}
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               sequence_parallel: bool = False, compress_grads: bool = False,
+               remat_policy: str = "none", num_microbatches: int = 0,
+               params_fsdp: bool = True, moe_dispatch_bf16: bool = False,
+               moe_group_size: int = 0, kv_shard_seq: bool = False):
+    """Returns (fn, args_shape_structs, in_shardings, donate).
+
+    Hillclimb levers (see EXPERIMENTS.md §Perf):
+      num_microbatches: override the per-arch gradient-accumulation depth
+      params_fsdp=False: TP-only param sharding (kills the per-step FSDP
+        all-gather — the serving-appropriate layout)
+      moe_dispatch_bf16 / moe_group_size: MoE dispatch cost levers
+    """
+    spec = MeshSpec.from_mesh(mesh, sequence_parallel=sequence_parallel)
+    shard_fn = make_shard_fn(spec)
+    if remat_policy != "none":
+        cfg = dataclasses.replace(cfg, remat=(remat_policy != "off"))
+    if moe_dispatch_bf16:
+        cfg = dataclasses.replace(cfg, moe_dispatch_dtype="bfloat16")
+    if moe_group_size:
+        cfg = dataclasses.replace(cfg, moe_group_size=moe_group_size)
+
+    params_shape = jax.eval_shape(lambda: tf.init(cfg, jax.random.PRNGKey(0)))
+    params_spec = plan_params(params_shape, spec, n_layers_hint=cfg.n_layers)
+    if not params_fsdp:
+        params_spec = strip_dp_axes(params_spec, spec)
+
+    if shape.kind == "train":
+        opt = Adam(lr=1e-4, clip_norm=1.0)
+        n_mb = num_microbatches or min(MICROBATCHES.get(cfg.name, 1),
+                                       max(shape.global_batch // spec.dp_size, 1))
+        ts_cfg = TrainStepConfig(num_microbatches=n_mb,
+                                 compress_grads=compress_grads)
+        step = make_train_step(cfg, opt, ts_cfg, shard_fn=shard_fn)
+
+        def make_state():
+            params = tf.init(cfg, jax.random.PRNGKey(0))
+            return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                              opt=opt.init(params), error_buf=None)
+
+        state_shape = jax.eval_shape(make_state)
+        P = jax.sharding.PartitionSpec
+        state_spec = TrainState(
+            step=P(), params=params_spec,
+            opt=type(state_shape.opt)(step=P(), mu=params_spec, nu=params_spec),
+            error_buf=None)
+        batch = batch_spec(cfg, shape)
+        batch_sh = plan_batch(batch, spec)
+        args = (state_shape, batch)
+        in_sh = (named(spec, state_spec), named(spec, batch_sh))
+        return step, args, in_sh, (0,)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            logits, aux, states = tf.forward(
+                cfg, params, batch.get("tokens"), embeds=batch.get("embeds"),
+                shard_fn=shard_fn, last_only=True, return_state=True)
+            return logits, states
+
+        batch = dict(batch_spec(cfg, shape))
+        batch.pop("labels")
+        batch_sh = plan_batch(batch, spec)
+        args = (params_shape, batch)
+        in_sh = (named(spec, params_spec), named(spec, batch_sh))
+        return prefill_step, args, in_sh, ()
+
+    # decode: one new token against a seq_len-deep cache
+    serve = make_serve_step(cfg, shard_fn=shard_fn)
+    state_shape = jax.eval_shape(
+        lambda: tf.init_decode_state(cfg, shape.global_batch, shape.seq_len))
+    state_spec = plan_decode_state(
+        state_shape, spec, n_layers_hint=cfg.n_layers,
+        attn_kv_shard="seq" if kv_shard_seq else "head")
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_sh = plan_batch(tokens, spec)
+    args = (params_shape, state_shape, tokens)
+    in_sh = (named(spec, params_spec), named(spec, state_spec),
+             named(spec, tok_sh))
+    return serve, args, in_sh, (1,)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str = "results/dryrun", **build_kw):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.size
+    t0 = time.time()
+    record = {
+        "arch": cfg.name, "shape": shape_name, "mesh": mesh_kind,
+        "devices": n_dev, "status": "error",
+        "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+        "build_kw": {k: str(v) for k, v in build_kw.items()},
+    }
+    try:
+        fn, args, in_sh, donate = build_cell(cfg, shape, mesh, **build_kw)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+
+            try:
+                mem = compiled.memory_analysis()
+                record["memory_analysis"] = {
+                    k: int(getattr(mem, k)) for k in (
+                        "argument_size_in_bytes", "output_size_in_bytes",
+                        "temp_size_in_bytes", "generated_code_size_in_bytes",
+                        "alias_size_in_bytes")
+                    if hasattr(mem, k)}
+            except Exception as e:  # CPU backend may not implement all fields
+                record["memory_analysis"] = {"error": str(e)}
+
+            try:
+                cost = compiled.cost_analysis()
+                if isinstance(cost, (list, tuple)):
+                    cost = cost[0]
+                record["cost_analysis"] = {
+                    k: float(v) for k, v in cost.items()
+                    if isinstance(v, (int, float)) and (
+                        k in ("flops", "transcendentals", "bytes accessed")
+                        or k.startswith("bytes accessed"))}
+            except Exception as e:
+                record["cost_analysis"] = {"error": str(e)}
+
+            hlo = compiled.as_text()
+            record["collectives"] = parse_collectives(hlo)
+            # loop-aware static analysis (cost_analysis visits while bodies
+            # once, undercounting scan-over-layers models by the trip count)
+            from repro.launch.hlo_analysis import analyze_hlo
+            static = analyze_hlo(hlo)
+            static["weighted_link_bytes_per_device"] = sum(
+                _FACTOR[k] * v for k, v in static["collective_bytes"].items())
+            record["hlo_static"] = static
+            record["hlo_bytes"] = len(hlo)
+            del hlo
+        record["status"] = "ok"
+        record["lower_s"] = round(t_lower - t0, 2)
+        record["compile_s"] = round(t_compile - t_lower, 2)
+    except Exception as e:
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    record["total_s"] = round(time.time() - t0, 2)
+
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    tag = "_".join([cfg.name, shape_name, mesh_kind] +
+                   [f"{k}-{v}" for k, v in sorted(build_kw.items())
+                    if v or v is False])
+    (out / f"{tag}.json").write_text(json.dumps(record, indent=2))
+    status = record["status"]
+    err = ("" if status == "ok" else " :: " + record.get("error", ""))
+    print(f"[dryrun] {tag}: {status} ({record['total_s']}s){err}", flush=True)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(list(ALIASES) + list(ARCH_IDS)))
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true", help="run every assigned cell")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--sequence-parallel", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--num-microbatches", type=int, default=0)
+    ap.add_argument("--no-params-fsdp", action="store_true")
+    ap.add_argument("--moe-dispatch-bf16", action="store_true")
+    ap.add_argument("--moe-group-size", type=int, default=0)
+    ap.add_argument("--kv-shard-seq", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    kw = dict(sequence_parallel=args.sequence_parallel,
+              compress_grads=args.compress_grads,
+              num_microbatches=args.num_microbatches,
+              moe_dispatch_bf16=args.moe_dispatch_bf16,
+              moe_group_size=args.moe_group_size,
+              kv_shard_seq=args.kv_shard_seq)
+    kw = {k: v for k, v in kw.items() if v}
+    if args.no_params_fsdp:
+        kw["params_fsdp"] = False
+
+    if args.all:
+        n_ok = n_fail = 0
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            for shape in shapes_for(cfg):
+                for mesh_kind in meshes:
+                    rec = run_cell(arch, shape.name, mesh_kind, args.out, **kw)
+                    n_ok += rec["status"] == "ok"
+                    n_fail += rec["status"] != "ok"
+        print(f"[dryrun] DONE: {n_ok} ok, {n_fail} failed")
+        raise SystemExit(1 if n_fail else 0)
+
+    if not (args.arch and args.shape):
+        ap.error("--arch and --shape required (or --all)")
+    recs = [run_cell(args.arch, args.shape, m, args.out, **kw) for m in meshes]
+    raise SystemExit(0 if all(r["status"] == "ok" for r in recs) else 1)
+
+
+if __name__ == "__main__":
+    main()

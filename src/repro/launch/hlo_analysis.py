@@ -1,0 +1,367 @@
+"""Loop-aware static analysis of optimized (post-SPMD) HLO text.
+
+XLA's ``HloCostAnalysis`` (and thus ``compiled.cost_analysis()``) visits a
+``while`` body ONCE, so for scan-over-layers models it undercounts FLOPs,
+bytes and collective traffic by the trip count (80x for qwen2!).  This
+module parses the printed HLO module, recovers while trip counts from the
+loop condition, and aggregates:
+
+  - dot FLOPs: 2 * prod(result dims) * prod(lhs contracting dims)
+  - elementwise/reduce FLOPs (coarse: prod(result dims))
+  - materialized-buffer traffic: for every top-level (post-fusion) op,
+    unique operand bytes + result bytes — the analytical HBM-traffic model
+  - collective payload bytes per kind (per-device, ring-factor-weighted by
+    the caller)
+
+All quantities are multiplied through nested fusion/call/while scopes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+# result def:  %name = type[dims]{layout} opcode(...)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?)([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+"
+    r"([a-z][\w\-]*)\((.*)$")
+# tuple-result def: %name = (type[..], ...) opcode(...)
+_TUPLE_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*\((.*?)\)\s+([a-z][\w\-]*)\((.*)$")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_ATTR_COMP_RE = {
+    "body": re.compile(r"body=%?([\w.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w.\-]+)"),
+    "calls": re.compile(r"calls=%?([\w.\-]+)"),
+    "to_apply": re.compile(r"to_apply=%?([\w.\-]+)"),
+}
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "select",
+    "compare", "and", "or", "xor", "clamp",
+}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    dtype: str
+    dims: Tuple[int, ...]
+    opcode: str
+    rest: str          # text after the opening paren (operands + attrs)
+    tuple_shapes: Optional[List[Tuple[str, Tuple[int, ...]]]] = None
+
+    @property
+    def result_bytes(self) -> int:
+        if self.tuple_shapes is not None:
+            return sum(_nelem(d) * _DTYPE_BYTES.get(t, 4)
+                       for t, d in self.tuple_shapes)
+        return _nelem(self.dims) * _DTYPE_BYTES.get(self.dtype, 4)
+
+    @property
+    def result_elems(self) -> int:
+        if self.tuple_shapes is not None:
+            return sum(_nelem(d) for _, d in self.tuple_shapes)
+        return _nelem(self.dims)
+
+
+def _nelem(dims: Tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _parse_dims(s: str) -> Tuple[int, ...]:
+    return tuple(int(x) for x in s.split(",") if x) if s else ()
+
+
+def parse_module(text: str) -> Dict[str, List[Instr]]:
+    """computation name -> instruction list."""
+    comps: Dict[str, List[Instr]] = {}
+    current: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        stripped = line.strip()
+        # computation headers: "%name (params...) -> type {"
+        if stripped.endswith("{") and "->" in stripped and "=" not in stripped.split("(")[0]:
+            m = _COMP_HDR_RE.match(stripped)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                continue
+        if stripped == "}" or stripped.startswith("}"):
+            continue
+        if current is None:
+            continue
+        m = _INSTR_RE.match(stripped)
+        if m and not m.group(2):
+            name, _, dtype, dims, opcode, rest = m.groups()
+            comps[current].append(
+                Instr(name, dtype, _parse_dims(dims), opcode, rest))
+            continue
+        mt = _TUPLE_INSTR_RE.match(stripped)
+        if mt:
+            name, shapes_s, opcode, rest = mt.groups()
+            shapes = [(t, _parse_dims(d)) for t, d in _SHAPE_RE.findall(shapes_s)]
+            comps[current].append(
+                Instr(name, shapes[0][0] if shapes else "f32",
+                      shapes[0][1] if shapes else (), opcode, rest,
+                      tuple_shapes=shapes))
+    return comps
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    def add(self, other: "Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        for k in COLLECTIVES:
+            self.collective_bytes[k] += other.collective_bytes[k] * mult
+            self.collective_counts[k] += other.collective_counts[k] * mult
+
+
+class HloAnalyzer:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self.shapes: Dict[str, Instr] = {}
+        for instrs in self.comps.values():
+            for ins in instrs:
+                self.shapes[ins.name] = ins
+        self._memo: Dict[str, Totals] = {}
+        # entry = last computation with ENTRY marker; fall back to the one
+        # named like 'main' or the longest
+        self.entry = None
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_HDR_RE.match(line.strip())
+                if m:
+                    self.entry = m.group(1)
+        if self.entry is None:
+            self.entry = max(self.comps, key=lambda c: len(self.comps[c]))
+
+    # -- trip counts ---------------------------------------------------
+    def trip_count(self, cond_comp: str) -> float:
+        """Recover while trip count from its condition computation.
+
+        XLA lowers scan conditions to ``compare(induction, constant(N))``,
+        possibly wrapped in a kLoop fusion.  The condition computation is
+        tiny and its only integer constant is the bound, so we take the max
+        integer constant found in the condition and any computation it
+        calls; direction LE adds one.
+        """
+        best = 0
+        le = False
+        stack = [cond_comp]
+        seen = set()
+        while stack:
+            comp = stack.pop()
+            if comp in seen:
+                continue
+            seen.add(comp)
+            for ins in self.comps.get(comp, []):
+                if ins.opcode == "constant":
+                    mc = re.match(r"(\d+)\)", ins.rest)
+                    if mc:
+                        best = max(best, int(mc.group(1)))
+                if "direction=LE" in ins.rest:
+                    le = True
+                called = _ATTR_COMP_RE["calls"].search(ins.rest) or \
+                    _ATTR_COMP_RE["to_apply"].search(ins.rest)
+                if called:
+                    stack.append(called.group(1))
+        if best == 0:
+            return 1.0
+        return float(best + 1 if le else best)
+
+    # -- per-instruction costs ------------------------------------------
+    def _operand_names(self, ins: Instr) -> List[str]:
+        head = ins.rest.split("), ")[0] if "), " in ins.rest else ins.rest.rstrip(")")
+        return _OPERAND_RE.findall(head)
+
+    def _dot_flops(self, ins: Instr) -> float:
+        """Raw MAC-based FLOPs (dtype-agnostic).
+
+        NOTE: f32 dots run at ~1/4 MXU bf16 peak, but the CPU backend's
+        float-normalization rewrites EVERY bf16 dot to f32 before this HLO
+        is printed, so operand dtype here cannot distinguish genuine f32
+        compute from normalized bf16.  dtype-efficiency claims (e.g. the
+        bf16 MoE-dispatch lever) are therefore made analytically in
+        EXPERIMENTS.md §Perf rather than from this count."""
+        ops = self._operand_names(ins)
+        contract = 1
+        m = _LHS_CONTRACT_RE.search(ins.rest)
+        if m and ops:
+            lhs = self.shapes.get(ops[0])
+            if lhs is not None:
+                for idx in _parse_dims(m.group(1)):
+                    if idx < len(lhs.dims):
+                        contract *= lhs.dims[idx]
+        return 2.0 * ins.result_elems * contract
+
+    def _instr_totals(self, ins: Instr) -> Totals:
+        t = Totals()
+        op = ins.opcode
+        if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast", "after-all", "partition-id", "replica-id"):
+            return t
+        # nested computations
+        if op == "while":
+            body = _ATTR_COMP_RE["body"].search(ins.rest)
+            cond = _ATTR_COMP_RE["condition"].search(ins.rest)
+            trips = self.trip_count(cond.group(1)) if cond else 1.0
+            if body:
+                t.add(self.comp_totals(body.group(1)), trips)
+            return t
+        if op == "fusion":
+            called = _ATTR_COMP_RE["calls"].search(ins.rest)
+            if called:
+                inner = self.comp_totals(called.group(1))
+                t.flops += inner.flops     # fusion internals: flops only
+            # In-place update fusions (scan-carried caches/stacked buffers):
+            # XLA aliases the result onto the big operand, so real traffic is
+            # the update window, not the whole buffer.  Count operands that
+            # are NOT shape-aliased to the result, times 2 (window RMW).
+            if "dynamic-update-slice" in ins.name or "dynamic-update-slice" in ins.rest[:40]:
+                small = 0
+                for o in self._operand_names(ins):
+                    src = self.shapes.get(o)
+                    if src is not None and src.result_bytes != ins.result_bytes:
+                        small += src.result_bytes
+                t.bytes_accessed += 2.0 * small
+                return t
+            # traffic: the fusion's materialized operands + result
+            t.bytes_accessed += self._traffic(ins)
+            return t
+        if op in ("call", "custom-call", "conditional"):
+            called = _ATTR_COMP_RE["to_apply"].search(ins.rest) or \
+                _ATTR_COMP_RE["calls"].search(ins.rest)
+            if called:
+                t.add(self.comp_totals(called.group(1)))
+            t.bytes_accessed += self._traffic(ins)
+            return t
+        # collectives
+        for kind in COLLECTIVES:
+            if op.startswith(kind):
+                if op.endswith("-done"):
+                    return t
+                payload = max(ins.result_bytes, 0)
+                t.collective_bytes[kind] += payload
+                t.collective_counts[kind] += 1
+                t.bytes_accessed += self._traffic(ins)
+                return t
+        # compute ops
+        if op == "dot":
+            t.flops += self._dot_flops(ins)
+        elif op in ("convolution",):
+            t.flops += 2.0 * ins.result_elems  # lower bound without kernel dims
+        elif op in ELEMENTWISE or op in ("reduce", "reduce-window", "exponential-minus-one"):
+            t.flops += float(ins.result_elems)
+
+        # HBM-traffic model ("perfect layout fusion"): pure layout/copy ops
+        # are assumed fused away on TPU (the CPU backend materializes them,
+        # which would overstate TPU traffic several-fold); window ops count
+        # only the window, not the full operand.
+        if op in ("copy", "convert", "bitcast", "transpose", "reshape",
+                  "broadcast", "iota", "reverse"):
+            return t
+        if op in ("slice", "dynamic-slice", "gather"):
+            t.bytes_accessed += 2.0 * ins.result_bytes   # read window + write
+            return t
+        if op == "dynamic-update-slice":
+            ops_ = self._operand_names(ins)
+            upd = self.shapes.get(ops_[1]) if len(ops_) > 1 else None
+            upd_bytes = upd.result_bytes if upd else ins.result_bytes
+            t.bytes_accessed += 2.0 * upd_bytes          # in-place window RMW
+            return t
+        t.bytes_accessed += self._traffic(ins)
+        return t
+
+    def _traffic(self, ins: Instr) -> float:
+        total = float(ins.result_bytes)
+        seen = set()
+        for o in self._operand_names(ins):
+            if o in seen:
+                continue
+            seen.add(o)
+            src = self.shapes.get(o)
+            if src is not None:
+                total += src.result_bytes
+        return total
+
+    def comp_totals(self, comp: str) -> Totals:
+        if comp in self._memo:
+            return self._memo[comp]
+        t = Totals()
+        self._memo[comp] = t          # break cycles defensively
+        for ins in self.comps.get(comp, []):
+            t.add(self._instr_totals(ins))
+        return t
+
+    def analyze(self) -> Dict:
+        t = self.comp_totals(self.entry)
+        return {
+            "flops": t.flops,
+            "bytes_accessed": t.bytes_accessed,
+            "collective_bytes": dict(t.collective_bytes),
+            "collective_counts": dict(t.collective_counts),
+        }
+
+
+    # -- diagnostics ----------------------------------------------------
+    def _walk(self, comp: str, mult: float, out: List, depth: int = 0):
+        if depth > 20:
+            return
+        for ins in self.comps.get(comp, []):
+            op = ins.opcode
+            if op == "while":
+                body = _ATTR_COMP_RE["body"].search(ins.rest)
+                cond = _ATTR_COMP_RE["condition"].search(ins.rest)
+                trips = self.trip_count(cond.group(1)) if cond else 1.0
+                if body:
+                    self._walk(body.group(1), mult * trips, out, depth + 1)
+                continue
+            if op in ("call", "conditional"):
+                called = _ATTR_COMP_RE["to_apply"].search(ins.rest) or \
+                    _ATTR_COMP_RE["calls"].search(ins.rest)
+                if called:
+                    self._walk(called.group(1), mult, out, depth + 1)
+            t = self._instr_totals(ins)
+            coll = sum(t.collective_bytes.values())
+            if t.bytes_accessed or t.flops or coll:
+                out.append((mult * t.bytes_accessed, mult * t.flops,
+                            mult * coll, ins.opcode, ins.name, mult))
+
+    def top_contributors(self, n: int = 20, key: str = "bytes") -> List:
+        """Largest per-instruction costs (scope-multiplied).  key: bytes|flops|coll."""
+        out: List = []
+        self._walk(self.entry, 1.0, out)
+        idx = {"bytes": 0, "flops": 1, "coll": 2}[key]
+        out.sort(key=lambda r: -r[idx])
+        return out[:n]
+
+
+def analyze_hlo(text: str) -> Dict:
+    return HloAnalyzer(text).analyze()

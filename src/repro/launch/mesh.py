@@ -1,0 +1,25 @@
+"""Production mesh construction (single-pod 16x16 and multi-pod 2x16x16).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (device count is locked at first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 512 if multi_pod else 256
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types,
+                         devices=jax.devices()[:n])
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for subprocess-based distributed tests."""
+    n = n_data * n_model
+    axis_types = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((n_data, n_model), ("data", "model"), axis_types,
+                         devices=jax.devices()[:n])

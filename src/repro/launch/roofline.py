@@ -1,0 +1,142 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Terms per (arch x shape x mesh), TPU v5e constants:
+  compute    = HLO_FLOPs_global / (chips * 197e12)
+  memory     = HLO_bytes_global / (chips * 819e9)
+  collective = weighted_link_bytes_per_device / 50e9
+               (per-device link traffic with ring factors AR:2, AG/RS/CP/A2A:1
+                — see dryrun.parse_collectives; equivalent to the global form
+                collective_bytes/(chips*link_bw) since traffic is uniform
+                across chips)
+
+``compiled.cost_analysis()`` reports the PER-DEVICE partitioned module, so
+flops/bytes are multiplied by the device count for the global numerators.
+
+MODEL_FLOPS uses 6*N*D for training (N params, D tokens) and 2*N_active*D
+for inference (fwd only); the ratio MODEL_FLOPS/HLO_FLOPs exposes remat and
+padding waste (remat recompute makes HLO > model for training).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+
+def model_flops(rec: Dict) -> float:
+    """Paper-style useful-FLOPs for the cell."""
+    n_active = rec["n_active_params"]
+    shape = rec["shape"]
+    if shape == "train_4k":
+        tokens = 256 * 4096
+        return 6.0 * n_active * tokens
+    if shape == "prefill_32k":
+        tokens = 32 * 32768
+        return 2.0 * n_active * tokens
+    if shape == "decode_32k":
+        return 2.0 * n_active * 128          # one token x batch 128
+    if shape == "long_500k":
+        return 2.0 * n_active * 1
+    raise ValueError(shape)
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["devices"]
+    static = rec.get("hlo_static")
+    if static:  # loop-aware static analysis (preferred source)
+        flops_dev = static["flops"]
+        bytes_dev = static["bytes_accessed"]
+        link_dev = static["weighted_link_bytes_per_device"]
+    else:       # fallback: XLA cost analysis (undercounts while bodies)
+        ca = rec.get("cost_analysis", {})
+        if "flops" not in ca:
+            return None
+        flops_dev = ca["flops"]
+        bytes_dev = ca.get("bytes accessed", 0.0)
+        link_dev = rec["collectives"]["weighted_link_bytes_per_device"]
+
+    compute_s = flops_dev / PEAK_FLOPS            # = global/(chips*peak)
+    memory_s = bytes_dev / HBM_BW
+    collective_s = link_dev / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = terms[dominant]
+
+    mf = model_flops(rec)
+    mf_dev = mf / chips
+    useful_ratio = mf_dev / flops_dev if flops_dev else 0.0
+    # roofline fraction: useful model FLOP/s achieved at the bound, vs peak
+    step_s = max(compute_s, memory_s, collective_s)
+    roofline_frac = (mf / (chips * PEAK_FLOPS)) / step_s if step_s else 0.0
+
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips, **{k: float(v) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "bound_s": float(bound_s),
+        "model_flops": mf, "hlo_flops_global": flops_dev * chips,
+        "useful_flop_ratio": float(useful_ratio),
+        "roofline_frac": float(roofline_frac),
+        "collective_counts": rec["collectives"]["per_kind_count"],
+    }
+
+
+def load_all(dryrun_dir: str | pathlib.Path) -> List[Dict]:
+    out = []
+    for p in sorted(pathlib.Path(dryrun_dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        a = analyze(rec)
+        if a is not None:
+            a["file"] = p.name
+            out.append(a)
+    return out
+
+
+def to_markdown(rows: List[Dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | useful/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+            f"{r['dominant']} | {r['useful_flop_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = load_all(args.dir)
+    if args.json_out:
+        pathlib.Path(args.json_out).write_text(json.dumps(rows, indent=2))
+    print(to_markdown(rows, args.mesh))
+    worst = [r for r in rows if r["mesh"] == args.mesh]
+    worst.sort(key=lambda r: r["roofline_frac"])
+    print("\nworst roofline fractions:")
+    for r in worst[:5]:
+        print(f"  {r['arch']}/{r['shape']}: {r['roofline_frac']:.4f} "
+              f"({r['dominant']}-bound)")
+    coll = [r for r in rows if r["mesh"] == args.mesh
+            and r["dominant"] == "collective"]
+    print(f"\ncollective-bound cells: {[(r['arch'], r['shape']) for r in coll]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Production training launcher: wires configs, mesh, sharding planner, data
+pipeline and the fault-tolerant loop for any assigned arch.
+
+On a real pod:
+  python -m repro.launch.train --arch qwen2-72b --shape train_4k \
+      --mesh single --steps 1000 --ckpt-dir gs://.../ckpts
+
+On this CPU container use --smoke: the same code path at reduced config on a
+2x2 debug mesh (this is exercised by tests/test_launch_train.py).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", choices=("single", "multi", "debug"), default="single")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + debug mesh + tiny batch (CPU)")
+    ap.add_argument("--sequence-parallel", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--chaotic-shuffle", action="store_true")
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_config, get_smoke_config
+    from repro.data.pipeline import SyntheticLMDataset
+    from repro.distributed.sharding import (MeshSpec, make_shard_fn, named,
+                                            plan_batch, plan_params)
+    from repro.launch.mesh import make_debug_mesh, make_production_mesh
+    from repro.train.loop import LoopConfig, run
+    from repro.train.optimizer import Adam, warmup_cosine
+    from repro.train.train_step import (TrainStepConfig, init_train_state,
+                                        make_train_step)
+
+    shape = SHAPES[args.shape]
+    if args.smoke:
+        cfg = get_smoke_config(args.arch)
+        mesh = make_debug_mesh(2, 2)
+        global_batch, seq_len, n_mb = 8, 64, 2
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        global_batch, seq_len = shape.global_batch, shape.seq_len
+        from repro.launch.dryrun import MICROBATCHES
+        spec0 = MeshSpec.from_mesh(mesh)
+        n_mb = min(MICROBATCHES.get(cfg.name, 1),
+                   max(global_batch // spec0.dp_size, 1))
+
+    spec = MeshSpec.from_mesh(mesh, sequence_parallel=args.sequence_parallel)
+    shard_fn = make_shard_fn(spec)
+    opt = Adam(lr=warmup_cosine(args.lr, min(100, args.steps // 10 + 1), args.steps),
+               clip_norm=1.0, weight_decay=0.01)
+    ts_cfg = TrainStepConfig(num_microbatches=n_mb,
+                             compress_grads=args.compress_grads)
+    step_fn = make_train_step(cfg, opt, ts_cfg, shard_fn=shard_fn)
+
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0),
+                             use_compression=args.compress_grads)
+    with mesh:
+        pspec = plan_params(jax.eval_shape(lambda: state.params), spec,
+                            n_layers_hint=cfg.n_layers)
+        state = state._replace(
+            params=jax.device_put(state.params, named(spec, pspec)),
+            opt=state.opt._replace(
+                mu=jax.device_put(state.opt.mu, named(spec, pspec)),
+                nu=jax.device_put(state.opt.nu, named(spec, pspec))),
+            error_buf=(jax.device_put(state.error_buf, named(spec, pspec))
+                       if state.error_buf is not None else None))
+
+        ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                                global_batch=global_batch, seed=0,
+                                use_chaotic_shuffle=args.chaotic_shuffle)
+        bspec = named(spec, plan_batch(
+            {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+             for k, v in ds.batch_at(0).items()}, spec))
+
+        def put_batch(b):
+            return {k: jax.device_put(jnp.asarray(v), bspec[k])
+                    for k, v in b.items()}
+
+        jitted = jax.jit(step_fn, donate_argnums=0)
+        res = run(state, jitted, ds.batch_at,
+                  LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                             ckpt_every=args.ckpt_every),
+                  put_batch=put_batch)
+    print(f"[launch.train] finished at step {int(res.final_state.step)}; "
+          f"preempted={res.preempted} stragglers={len(res.straggler_steps)}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

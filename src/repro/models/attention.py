@@ -1,0 +1,261 @@
+"""GQA attention: full-causal, sliding-window, chunked-flash and decode paths.
+
+Design notes (TPU):
+  - training / short prefill uses the plain (B, H, S, S) score path;
+  - long prefill (S > FLASH_THRESHOLD) switches to a double-``lax.scan``
+    online-softmax formulation (flash structure) so 32 k x 32 k score
+    matrices are never materialized — O(S·blk) live memory;
+  - decode attends one query against a (ring-buffered, for SWA) KV cache;
+  - GQA is expressed by reshaping q to (B, S, KV, G, hd) and contracting
+    k/v per KV head — XLA maps this onto the MXU without materializing
+    repeated KV heads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+Array = jax.Array
+
+FLASH_THRESHOLD = 8192   # seq len beyond which the scan-flash path is used
+FLASH_BLOCK_Q = 1024
+FLASH_BLOCK_KV = 1024
+MASK_VALUE = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    window: Optional[int] = None
+    rope_theta: float = 10_000.0
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, n, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    sin = jnp.sin(angles)[..., None, :]                # (..., S, 1, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def attn_init(key, d_model: int, dims: AttnDims, dtype) -> Dict[str, Array]:
+    ks = jax.random.split(key, 6)
+    h, kv, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    p = {
+        "wq": dense_init(ks[0], d_model, (d_model, h * hd), dtype),
+        "wk": dense_init(ks[1], d_model, (d_model, kv * hd), dtype),
+        "wv": dense_init(ks[2], d_model, (d_model, kv * hd), dtype),
+        "wo": dense_init(ks[3], h * hd, (h * hd, d_model), dtype),
+    }
+    if dims.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if dims.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _project_qkv(p, x: Array, dims: AttnDims, positions: Array):
+    b, s, _ = x.shape
+    h, kv, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if dims.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if dims.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, dims.rope_theta)
+    k = apply_rope(k, positions, dims.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q: Array, k: Array) -> Array:
+    """q: (B,Sq,KV,G,hd), k: (B,Skv,KV,hd) -> (B,KV,G,Sq,Skv)."""
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k)
+
+
+def _gqa_out(probs: Array, v: Array) -> Array:
+    """probs: (B,KV,G,Sq,Skv), v: (B,Skv,KV,hd) -> (B,Sq,KV,G,hd)."""
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+
+
+def _causal_mask(sq: int, skv: int, q_off: Array, window: Optional[int]) -> Array:
+    qpos = q_off + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def _plain_attention(q, k, v, dims: AttnDims) -> Array:
+    b, s, h, hd = q.shape
+    kv = dims.n_kv_heads
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = _gqa_scores(qg, k).astype(jnp.float32) / (hd ** 0.5)
+    mask = _causal_mask(s, s, jnp.zeros((), jnp.int32), dims.window)
+    scores = jnp.where(mask, scores, MASK_VALUE)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = _gqa_out(probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def _flash_attention(q, k, v, dims: AttnDims) -> Array:
+    """Double-scan online-softmax attention (no S×S materialization)."""
+    b, s, h, hd = q.shape
+    kv = dims.n_kv_heads
+    g = h // kv
+    bq, bkv = FLASH_BLOCK_Q, FLASH_BLOCK_KV
+    nq, nkv = s // bq, s // bkv
+    assert s % bq == 0 and s % bkv == 0, f"seq {s} not divisible by flash blocks"
+
+    qg = q.reshape(b, nq, bq, kv, g, hd).transpose(1, 0, 3, 4, 2, 5)  # (nq,b,kv,g,bq,hd)
+    kb = k.reshape(b, nkv, bkv, kv, hd).transpose(1, 0, 3, 2, 4)      # (nkv,b,kv,bkv,hd)
+    vb = v.reshape(b, nkv, bkv, kv, hd).transpose(1, 0, 3, 2, 4)
+    scale = 1.0 / (hd ** 0.5)
+
+    def q_block(carry, qi_and_q):
+        qi, qblk = qi_and_q   # qblk: (b,kv,g,bq,hd)
+
+        def kv_block(acc, ki_and_kv):
+            ki, kblk, vblk = ki_and_kv
+            m_prev, l_prev, o_prev = acc
+            s_blk = jnp.einsum("bkgqh,bksh->bkgqs", qblk, kblk).astype(jnp.float32) * scale
+            q_off = qi * bq
+            k_off = ki * bkv
+            qpos = q_off + jnp.arange(bq)[:, None]
+            kpos = k_off + jnp.arange(bkv)[None, :]
+            mask = kpos <= qpos
+            if dims.window is not None:
+                mask &= kpos > qpos - dims.window
+            s_blk = jnp.where(mask, s_blk, MASK_VALUE)
+            m_new = jnp.maximum(m_prev, s_blk.max(axis=-1))
+            p = jnp.exp(s_blk - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + p.sum(axis=-1)
+            o_new = o_prev * corr[..., None] + jnp.einsum(
+                "bkgqs,bksh->bkgqh", p.astype(qblk.dtype), vblk).astype(jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((b, kv, g, bq), MASK_VALUE, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, bq), jnp.float32)
+        o0 = jnp.zeros((b, kv, g, bq, hd), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            kv_block, (m0, l0, o0),
+            (jnp.arange(nkv), kb, vb))
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        return carry, o.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_block, None, (jnp.arange(nq), qg))
+    # blocks: (nq, b, kv, g, bq, hd) -> (b, s, h, hd)
+    out = blocks.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, h, hd)
+    return out
+
+
+def attn_apply(p, x: Array, dims: AttnDims, positions: Optional[Array] = None) -> Array:
+    """Full-sequence (train / prefill) attention."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, x, dims, positions)
+    if s > FLASH_THRESHOLD:
+        out = _flash_attention(q, k, v, dims)
+    else:
+        out = _plain_attention(q, k, v, dims)
+    return out.reshape(b, s, dims.n_heads * dims.head_dim) @ p["wo"]
+
+
+def attn_apply_with_kv(p, x: Array, dims: AttnDims,
+                       positions: Optional[Array] = None):
+    """Prefill: also return the rotated k/v for KV-cache production.  For
+    sliding-window attention only the last ``window`` positions are kept
+    (the ring cache contents after a full prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, x, dims, positions)
+    if s > FLASH_THRESHOLD:
+        out = _flash_attention(q, k, v, dims)
+    else:
+        out = _plain_attention(q, k, v, dims)
+    k_keep, v_keep = k, v
+    if dims.window is not None and s > dims.window:
+        k_keep = k[:, -dims.window:]
+        v_keep = v[:, -dims.window:]
+    return (out.reshape(b, s, dims.n_heads * dims.head_dim) @ p["wo"],
+            {"k": k_keep, "v": v_keep})
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache (full or ring/SWA)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, max_len: int, dims: AttnDims, dtype) -> Dict[str, Array]:
+    cache_len = min(max_len, dims.window) if dims.window else max_len
+    return {
+        "k": jnp.zeros((batch, cache_len, dims.n_kv_heads, dims.head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, dims.n_kv_heads, dims.head_dim), dtype),
+    }
+
+
+def attn_decode(p, x: Array, cache: Dict[str, Array], pos: Array,
+                dims: AttnDims) -> Tuple[Array, Dict[str, Array]]:
+    """One-token decode. x: (B, 1, D); pos: scalar int32 (current index)."""
+    b = x.shape[0]
+    h, kv, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, dims, positions)
+
+    cache_len = cache["k"].shape[1]
+    slot = pos % cache_len if dims.window else pos
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+
+    g = h // kv
+    qg = q.reshape(b, 1, kv, g, hd)
+    scores = _gqa_scores(qg, k_cache).astype(jnp.float32) / (hd ** 0.5)  # (b,kv,g,1,C)
+
+    idx = jnp.arange(cache_len)
+    if dims.window:
+        # ring buffer: valid entries are the last min(pos+1, window) writes
+        age = (slot - idx) % cache_len
+        valid = age < jnp.minimum(pos + 1, cache_len)
+    else:
+        valid = idx <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores, MASK_VALUE)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v_cache).reshape(b, 1, h * hd)
+    return out @ p["wo"], {"k": k_cache, "v": v_cache}

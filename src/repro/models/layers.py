@@ -1,0 +1,97 @@
+"""Shared neural building blocks (pure functional, dict-pytree params)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def truncated_normal_init(key, shape, scale: float, dtype) -> Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, shape, dtype) -> Array:
+    return truncated_normal_init(key, shape, (1.0 / d_in) ** 0.5, dtype)
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Optional[Array], eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    x = x * (1.0 + scale.astype(jnp.float32))
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dtype)
+
+
+def activation_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# MLP (optionally gated: SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, glu: bool, dtype) -> Dict[str, Array]:
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], d_model, (d_model, d_ff), dtype),
+        "wo": dense_init(ks[1], d_ff, (d_ff, d_model), dtype),
+    }
+    if glu:
+        p["wg"] = dense_init(ks[2], d_model, (d_model, d_ff), dtype)
+    return p
+
+
+def mlp_apply(p: Dict[str, Array], x: Array, activation: str, glu: bool) -> Array:
+    act = activation_fn(activation)
+    h = x @ p["wi"]
+    if glu:
+        h = act(x @ p["wg"]) * h
+    else:
+        h = act(h)
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, tie: bool, dtype) -> Dict[str, Array]:
+    ks = jax.random.split(key, 2)
+    p = {"embedding": truncated_normal_init(ks[0], (vocab, d_model), 1.0, dtype)}
+    if not tie:
+        p["unembed"] = dense_init(ks[1], d_model, (d_model, vocab), dtype)
+    return p
+
+
+def embed_apply(p: Dict[str, Array], tokens: Array, scale: bool = False) -> Array:
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(x.shape[-1] ** 0.5, x.dtype)
+    return x
+
+
+def unembed_apply(p: Dict[str, Array], x: Array) -> Array:
+    if "unembed" in p:
+        return x @ p["unembed"]
+    return x @ p["embedding"].T.astype(x.dtype)

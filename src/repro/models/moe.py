@@ -1,0 +1,100 @@
+"""Mixture-of-Experts layer: top-k router + GShard-style capacity dispatch.
+
+Group-wise dispatch keeps the one-hot combine tensors bounded: tokens are
+split into groups of ``group_size``; each group dispatches to per-group
+expert capacity C = ceil(top_k * group_size * capacity_factor / E).  The
+dispatch/combine einsums lower onto the MXU, and when the expert dim is
+sharded over a mesh axis GSPMD inserts the canonical all-to-all pair.
+
+Aux losses: load-balancing (Switch) + router z-loss, returned to the caller.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation_fn, dense_init
+
+Array = jax.Array
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, glu: bool, dtype) -> Dict[str, Array]:
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], d_model, (d_model, n_experts), jnp.float32),
+        "wi": dense_init(ks[1], d_model, (n_experts, d_model, d_ff), dtype),
+        "wo": dense_init(ks[2], d_ff, (n_experts, d_ff, d_model), dtype),
+    }
+    if glu:
+        p["wg"] = dense_init(ks[3], d_model, (n_experts, d_model, d_ff), dtype)
+    return p
+
+
+def moe_apply(p: Dict[str, Array], x: Array, *, top_k: int, activation: str,
+              glu: bool, capacity_factor: float = 1.25,
+              group_size: int = 1024,
+              dispatch_dtype=jnp.float32) -> Tuple[Array, Dict[str, Array]]:
+    """x: (B, S, D) -> (B, S, D), aux metrics dict.
+
+    ``dispatch_dtype``: numeric type of the dispatch/combine einsums.  The
+    one-hot dispatch tensors are exact in bf16 (0/1 and top-k gate values),
+    so bf16 dispatch quarters the f32-MXU cost of the dispatch matmuls at
+    <1e-2 output perturbation (validated in tests).
+    """
+    b, s, d = x.shape
+    e = p["wi"].shape[0]
+    n_tok = b * s
+    g_sz = min(group_size, n_tok)
+    assert n_tok % g_sz == 0, f"{n_tok} tokens not divisible by group {g_sz}"
+    n_grp = n_tok // g_sz
+    cap = max(int(top_k * g_sz * capacity_factor / e), 1)
+
+    xt = x.reshape(n_grp, g_sz, d)
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (G, t, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # --- top-k gating with renormalization (Mixtral-style) ---
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (G, t, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- capacity assignment: position of each (token, choice) in its expert queue
+    sel_onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)        # (G,t,k,E)
+    # priority: iterate choices first (all 1st choices ranked before 2nd)
+    sel_flat = sel_onehot.transpose(0, 2, 1, 3).reshape(n_grp, top_k * g_sz, e)
+    pos_in_expert = jnp.cumsum(sel_flat, axis=1) - sel_flat            # (G,k*t,E)
+    pos_in_expert = pos_in_expert.reshape(n_grp, top_k, g_sz, e).transpose(0, 2, 1, 3)
+    within_cap = pos_in_expert < cap                                    # (G,t,k,E)
+    kept = (sel_onehot * within_cap).sum(-1)                           # (G,t,k)
+
+    # --- dispatch/combine tensors ---
+    dd = dispatch_dtype
+    cap_onehot = jax.nn.one_hot(
+        jnp.clip(pos_in_expert, 0, cap - 1).astype(jnp.int32), cap, dtype=dd)
+    dispatch = jnp.einsum("gtke,gtkec->gtec",
+                          (sel_onehot * within_cap).astype(dd), cap_onehot)
+    combine = jnp.einsum("gtk,gtke,gtkec->gtec",
+                         (gate_vals * kept).astype(dd), sel_onehot.astype(dd),
+                         cap_onehot)
+
+    xe = jnp.einsum("gtd,gtec->gecd", xt.astype(dd), dispatch).astype(x.dtype)
+
+    # --- expert FFN: (G,E,C,D) x (E,D,F) ---
+    h = jnp.einsum("gecd,edf->gecf", xe, p["wi"])
+    if glu:
+        h = activation_fn(activation)(jnp.einsum("gecd,edf->gecf", xe, p["wg"])) * h
+    else:
+        h = activation_fn(activation)(h)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+
+    out = jnp.einsum("gecd,gtec->gtd", ye.astype(dd), combine)
+    out = out.reshape(b, s, d).astype(x.dtype)
+
+    # --- aux losses ---
+    me = probs.mean(axis=(0, 1))                     # mean router prob per expert
+    ce = sel_onehot.sum(2).mean(axis=(0, 1))         # fraction routed per expert
+    lb_loss = e * jnp.sum(me * ce) / top_k
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - kept.mean()
+    return out, {"lb_loss": lb_loss, "z_loss": z_loss, "dropped_frac": dropped}

@@ -1,0 +1,233 @@
+"""RWKV-6 "Finch": token-shift with data-dependent interpolation and the WKV
+linear-attention recurrence with data-dependent per-channel decay
+(arXiv:2404.05892), adapted for TPU.
+
+Three execution paths over the same parameters:
+  - ``wkv_recurrent``: exact per-step ``lax.scan`` (oracle; O(S) sequential)
+  - ``wkv_chunked``:  chunk-parallel form — within a chunk the decay products
+    are bounded (cumulative log-decays are monotone decreasing), so the
+    intra-chunk part is two MXU matmuls; chunks are linked by a short scan.
+    Default for training/prefill.
+  - ``wkv_step``: single-token state update for decode.
+
+State per head: s in R^{K x V} plus the token-shift buffer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+Array = jax.Array
+
+# per-step log-decay is clamped to [-DECAY_CLAMP, ~0); with chunk length
+# CHUNK, intra-chunk exp() arguments are bounded by CHUNK*DECAY_CLAMP < 88
+# (f32 exp overflow threshold).
+CHUNK = 16
+DECAY_CLAMP = 5.0
+
+
+def rwkv_init(key, d_model: int, head_dim: int, dtype) -> Dict[str, Array]:
+    ks = jax.random.split(key, 12)
+    n_heads = d_model // head_dim
+    lora = max(d_model // 16, 32)
+    p = {
+        # data-dependent token-shift mixers (r,k,v,w,g)
+        "mix_base": (jax.random.uniform(ks[0], (5, d_model)) * 0.5).astype(dtype),
+        "mix_lora_a": dense_init(ks[1], d_model, (d_model, lora), dtype),
+        "mix_lora_b": dense_init(ks[2], lora, (5, lora, d_model), dtype),
+        # projections
+        "wr": dense_init(ks[3], d_model, (d_model, d_model), dtype),
+        "wk": dense_init(ks[4], d_model, (d_model, d_model), dtype),
+        "wv": dense_init(ks[5], d_model, (d_model, d_model), dtype),
+        "wg": dense_init(ks[6], d_model, (d_model, d_model), dtype),
+        "wo": dense_init(ks[7], d_model, (d_model, d_model), dtype),
+        # data-dependent decay lora: w_t = exp(-exp(decay_base + lora(x)))
+        "decay_base": (jax.random.normal(ks[8], (d_model,)) * 0.5 - 4.0).astype(jnp.float32),
+        "decay_lora_a": dense_init(ks[9], d_model, (d_model, lora), dtype),
+        "decay_lora_b": dense_init(ks[10], lora, (lora, d_model), dtype),
+        # per-channel bonus for the current token
+        "bonus": (jax.random.normal(ks[11], (n_heads, head_dim)) * 0.1).astype(jnp.float32),
+        "ln_out": jnp.zeros((d_model,), dtype),
+    }
+    return p
+
+
+def _token_shift(x: Array, x_prev: Array) -> Array:
+    """Shift sequence right by one; x_prev fills position 0. (B,S,D)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p, x: Array, xs: Array):
+    """RWKV6 data-dependent interpolation producing (r,k,v,w,g) inputs."""
+    base = p["mix_base"]                               # (5, D)
+    lora = jnp.tanh(x @ p["mix_lora_a"])               # (B,S,L)
+    delta = jnp.einsum("bsl,mld->mbsd", lora, p["mix_lora_b"])  # (5,B,S,D)
+    mix = jnp.clip(base[:, None, None, :] + delta, 0.0, 1.0)
+    return x[None] + (xs - x)[None] * mix              # (5,B,S,D)
+
+
+def _project(p, x: Array, head_dim: int):
+    """Returns r,k,v,g: (B,S,H,hd); log_w: (B,S,H,hd) fp32 (clamped)."""
+    b, s, d = x.shape
+    h = d // head_dim
+    xs = _token_shift(x, jnp.zeros((b, d), x.dtype))
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xs)
+    r = (xr @ p["wr"]).reshape(b, s, h, head_dim)
+    k = (xk @ p["wk"]).reshape(b, s, h, head_dim)
+    v = (xv @ p["wv"]).reshape(b, s, h, head_dim)
+    g = jax.nn.silu(xg @ p["wg"])
+    dec = p["decay_base"] + (jnp.tanh(xw @ p["decay_lora_a"]) @ p["decay_lora_b"]).astype(jnp.float32)
+    log_w = -jnp.exp(jnp.clip(dec, -10.0, jnp.log(DECAY_CLAMP)))   # in [-CLAMP, ~0)
+    log_w = log_w.reshape(b, s, h, head_dim)
+    return r, k, v, g, log_w
+
+
+def wkv_recurrent(r, k, v, log_w, bonus, s0=None):
+    """Exact recurrence. r/k/v/log_w: (B,S,H,K); bonus: (H,K).
+    Returns out (B,S,H,K[v-dim]) and final state (B,H,K,V)."""
+    b, s, h, kd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, kd, kd), jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, lwt = inp   # (B,H,K) each
+        kv = kt[..., :, None] * vt[..., None, :]             # (B,H,K,V)
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         state + jnp.exp(bonus)[None, :, :, None] * kv)
+        state = jnp.exp(lwt)[..., None] * state + kv
+        return state, out
+
+    xs = (r.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          log_w.transpose(1, 0, 2, 3))
+    state, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2, 3), state
+
+
+def wkv_chunked(r, k, v, log_w, bonus, s0=None, chunk: int = CHUNK):
+    """Chunk-parallel WKV.  Equivalent to wkv_recurrent (tested)."""
+    b, s, h, kd = r.shape
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    n = s // chunk
+    if s0 is None:
+        s0 = jnp.zeros((b, h, kd, kd), jnp.float32)
+
+    f32 = lambda x: x.astype(jnp.float32)
+    # (n, B, H, L, K)
+    rc = f32(r).reshape(b, n, chunk, h, kd).transpose(1, 0, 3, 2, 4)
+    kc = f32(k).reshape(b, n, chunk, h, kd).transpose(1, 0, 3, 2, 4)
+    vc = f32(v).reshape(b, n, chunk, h, kd).transpose(1, 0, 3, 2, 4)
+    wc = log_w.reshape(b, n, chunk, h, kd).transpose(1, 0, 3, 2, 4)
+
+    cum = jnp.cumsum(wc, axis=3)                 # S_t: inclusive cumsum per chunk
+    cum_prev = cum - wc                          # S_{t-1} (exclusive)
+    total = cum[:, :, :, -1:, :]                 # (n,B,H,1,K)
+
+    # intra-chunk pairwise decay matrix via bounded factors:
+    #   A[t,τ] = Σ_c r~[t,c]·k~[τ,c],  r~ = r·exp(S_{t-1}),  k~ = k·exp(-S_τ)
+    # |S| ≤ chunk·DECAY_CLAMP < 88 keeps both exps finite in fp32.
+    r_in = rc * jnp.exp(cum_prev)
+    k_in = kc * jnp.exp(-cum)
+    att = jnp.einsum("nbhtk,nbhsk->nbhts", r_in, k_in)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    att = jnp.where(mask, att, 0.0)
+    # current-token bonus (diagonal)
+    diag = jnp.einsum("nbhtk,nbhtk->nbht", rc * jnp.exp(bonus)[None, None, :, None, :], kc)
+    intra = jnp.einsum("nbhts,nbhsv->nbhtv", att, vc) + diag[..., None] * vc
+
+    # cross-chunk: contribution of carried state + state update per chunk
+    k_out = kc * jnp.exp(total - cum)            # k scaled to chunk end
+
+    def link(state, inp):
+        r_in_c, k_out_c, v_c, total_c, intra_c = inp
+        inter = jnp.einsum("bhtk,bhkv->bhtv", r_in_c, state)
+        new_state = jnp.exp(total_c[:, :, 0, :])[..., None] * state \
+            + jnp.einsum("bhtk,bhtv->bhkv", k_out_c, v_c)
+        return new_state, intra_c + inter
+
+    state, outs = jax.lax.scan(link, s0, (r_in, k_out, vc, total, intra))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, kd)
+    return out, state
+
+
+def wkv_step(r, k, v, log_w, bonus, state):
+    """Decode: r/k/v/log_w (B,H,K); state (B,H,K,V)."""
+    kv = k[..., :, None] * v[..., None, :]
+    out = jnp.einsum("bhk,bhkv->bhv", r, state + jnp.exp(bonus)[None, :, :, None] * kv)
+    state = jnp.exp(log_w)[..., None] * state + kv
+    return out, state
+
+
+def rwkv_apply(p, x: Array, head_dim: int, *, chunked: bool = True) -> Array:
+    """Full-sequence time-mix block (B,S,D) -> (B,S,D)."""
+    return _rwkv_apply(p, x, head_dim, chunked, False)[0]
+
+
+def rwkv_apply_with_state(p, x: Array, head_dim: int, *, chunked: bool = True):
+    """Prefill variant: also return {'wkv', 'shift'} final state."""
+    return _rwkv_apply(p, x, head_dim, chunked, True)
+
+
+def _rwkv_apply(p, x: Array, head_dim: int, chunked: bool, want_state: bool):
+    b, s, d = x.shape
+    r, k, v, g, log_w = _project(p, x, head_dim)
+    fn = wkv_chunked if (chunked and s % CHUNK == 0) else wkv_recurrent
+    out, state = fn(r, k, v, log_w, p["bonus"])
+    out = rms_norm(out.reshape(b, s, d).astype(x.dtype), p["ln_out"]) * g
+    y = out @ p["wo"]
+    if want_state:
+        return y, {"wkv": state, "shift": x[:, -1, :].astype(jnp.float32)}
+    return y, None
+
+
+def rwkv_init_state(batch: int, d_model: int, head_dim: int) -> Dict[str, Array]:
+    h = d_model // head_dim
+    return {
+        "wkv": jnp.zeros((batch, h, head_dim, head_dim), jnp.float32),
+        "shift": jnp.zeros((batch, d_model), jnp.float32),
+        "ffn_shift": jnp.zeros((batch, d_model), jnp.float32),
+    }
+
+
+def rwkv_decode(p, x: Array, state: Dict[str, Array], head_dim: int
+                ) -> Tuple[Array, Dict[str, Array]]:
+    """x: (B, 1, D) single token."""
+    b, _, d = x.shape
+    h = d // head_dim
+    xs = state["shift"].astype(x.dtype)[:, None, :]
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xs)
+    r = (xr @ p["wr"]).reshape(b, h, head_dim).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(b, h, head_dim).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(b, h, head_dim).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])[:, 0]
+    dec = p["decay_base"] + (jnp.tanh(xw @ p["decay_lora_a"]) @ p["decay_lora_b"]).astype(jnp.float32)
+    log_w = -jnp.exp(jnp.clip(dec, -10.0, jnp.log(DECAY_CLAMP))).reshape(b, h, head_dim)
+    out, wkv = wkv_step(r, k, v, log_w, p["bonus"], state["wkv"])
+    out = rms_norm(out.reshape(b, d).astype(x.dtype), p["ln_out"]) * g
+    y = (out @ p["wo"])[:, None, :]
+    return y, {"wkv": wkv, "shift": x[:, 0, :].astype(jnp.float32)}
+
+
+def rwkv_channel_mix_init(key, d_model: int, d_ff: int, dtype) -> Dict[str, Array]:
+    ks = jax.random.split(key, 3)
+    return {
+        "mix_k": (jax.random.uniform(ks[0], (d_model,)) * 0.5).astype(dtype),
+        "wk": dense_init(ks[1], d_model, (d_model, d_ff), dtype),
+        "wv": dense_init(ks[2], d_ff, (d_ff, d_model), dtype),
+    }
+
+
+def rwkv_channel_mix(p, x: Array, x_prev: Array | None = None) -> Array:
+    """RWKV FFN with token shift and squared-relu (full-sequence form)."""
+    b = x.shape[0]
+    if x_prev is None:
+        x_prev = jnp.zeros((b, x.shape[-1]), x.dtype)
+    xs = _token_shift(x, x_prev)
+    xk = x + (xs - x) * p["mix_k"]
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return h @ p["wv"]

@@ -1,0 +1,196 @@
+"""Mamba-2 (SSD) block: chunked state-space dual form + recurrent oracle +
+single-step decode (arXiv:2405.21060 as used by Zamba2, arXiv:2411.15242).
+
+Mamba-2 uses a *scalar* decay per head (a_t = exp(-Δ_t·A_h)), which makes the
+chunked form exact with plain matmuls: the intra-chunk pairwise decay matrix
+L[t,τ] = exp(cum_t - cum_τ) is a bounded (chunk × chunk) tensor per head.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+Array = jax.Array
+
+CHUNK = 64
+
+
+def mamba_init(key, d_model: int, ssm_state: int, head_dim: int,
+               conv_width: int, dtype) -> Dict[str, Array]:
+    d_inner = 2 * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection: [x, z, B, C, dt]
+        "in_proj": dense_init(ks[0], d_model,
+                              (d_model, d_inner * 2 + 2 * ssm_state + n_heads), dtype),
+        "conv": (jax.random.normal(ks[1], (conv_width, d_inner + 2 * ssm_state))
+                 * 0.1).astype(dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], d_inner, (d_inner, d_model), dtype),
+    }
+
+
+def _split_proj(p, x: Array, ssm_state: int, head_dim: int):
+    d_model = x.shape[-1]
+    d_inner = 2 * d_model
+    n_heads = d_inner // head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * ssm_state], axis=-1)
+    return z, xbc, dt, d_inner, n_heads
+
+
+def _causal_conv(xbc: Array, w: Array, state: Array | None = None):
+    """Depthwise causal conv over (B,S,C) with width-k filter (k,C)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(xh, dt, a_log, b, c, chunk: int = CHUNK, h0=None):
+    """Chunked SSD.  xh: (B,S,H,P); dt: (B,S,H); b,c: (B,S,N).
+    Returns (out (B,S,H,P), final state (B,H,P,N))."""
+    bsz, s, h, pdim = xh.shape
+    n = b.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32))                    # (B,S,H)
+    loga = -jnp.exp(a_log)[None, None, :] * dt                      # (B,S,H) ≤ 0
+    xdt = xh.astype(jnp.float32) * dt[..., None]                    # x·Δ
+
+    # reshape to chunks: (nc, B, H, L, ...)
+    loga_c = loga.reshape(bsz, nc, chunk, h).transpose(1, 0, 3, 2)          # (nc,B,H,L)
+    x_c = xdt.reshape(bsz, nc, chunk, h, pdim).transpose(1, 0, 3, 2, 4)     # (nc,B,H,L,P)
+    b_c = b.astype(jnp.float32).reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)  # (nc,B,L,N)
+    c_c = c.astype(jnp.float32).reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    cum = jnp.cumsum(loga_c, axis=-1)                               # (nc,B,H,L)
+    total = cum[..., -1:]
+
+    # intra-chunk: out[t] = Σ_{τ≤t} exp(cum_t - cum_τ)·(c_t·b_τ)·x_τ
+    # mask INSIDE the exponent: upper-triangle entries are positive and can
+    # overflow exp(); 0*inf would poison gradients through jnp.where.
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    gap = cum[..., :, None] - cum[..., None, :]                     # (nc,B,H,L,L)
+    decay = jnp.exp(jnp.where(mask, gap, -jnp.inf))
+    cb = jnp.einsum("nbtq,nbsq->nbts", c_c, b_c)                    # (nc,B,L,L)
+    att = cb[:, :, None] * decay                                    # (nc,B,H,L,L)
+    intra = jnp.einsum("nbhts,nbhsp->nbhtp", att, x_c)
+
+    # chunk-state: S_c = Σ_τ exp(total - cum_τ)·b_τ ⊗ x_τ
+    b_scaled = jnp.einsum("nbsq,nbhs->nbhsq", b_c, jnp.exp(total - cum))
+    chunk_states = jnp.einsum("nbhsq,nbhsp->nbhpq", b_scaled, x_c)  # (nc,B,H,P,N)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, pdim, n), jnp.float32)
+
+    def link(state, inp):
+        cum_i, total_i, c_i, cs_i, intra_i = inp
+        # inter-chunk contribution: c_t · exp(cum_t) · state
+        inter = jnp.einsum("btq,bhpq,bht->bhtp", c_i, state, jnp.exp(cum_i))
+        new_state = jnp.exp(total_i[..., 0])[..., None, None] * state + cs_i
+        return new_state, intra_i + inter
+
+    state, outs = jax.lax.scan(
+        link, h0, (cum, total, c_c, chunk_states, intra))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(bsz, s, h, pdim)
+    return out, state
+
+
+def ssd_recurrent(xh, dt, a_log, b, c, h0=None):
+    """Exact per-step recurrence (oracle)."""
+    bsz, s, h, pdim = xh.shape
+    n = b.shape[-1]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    loga = -jnp.exp(a_log)[None, None, :] * dt
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, pdim, n), jnp.float32)
+
+    def step(state, inp):
+        x_t, la_t, b_t, c_t = inp
+        state = jnp.exp(la_t)[..., None, None] * state \
+            + jnp.einsum("bhp,bq->bhpq", x_t, b_t)
+        out = jnp.einsum("bhpq,bq->bhp", state, c_t)
+        return state, out
+
+    xs = (xdt.transpose(1, 0, 2, 3), loga.transpose(1, 0, 2),
+          b.astype(jnp.float32).transpose(1, 0, 2), c.astype(jnp.float32).transpose(1, 0, 2))
+    state, outs = jax.lax.scan(step, h0, xs)
+    return outs.transpose(1, 0, 2, 3), state
+
+
+def mamba_apply(p, x: Array, *, ssm_state: int, head_dim: int,
+                chunked: bool = True) -> Array:
+    """Full-sequence Mamba-2 block (B,S,D) -> (B,S,D)."""
+    return _mamba_apply(p, x, ssm_state, head_dim, chunked, False)[0]
+
+
+def mamba_apply_with_state(p, x: Array, *, ssm_state: int, head_dim: int,
+                           chunked: bool = True):
+    """Prefill variant: also return {'ssm', 'conv'} final state."""
+    return _mamba_apply(p, x, ssm_state, head_dim, chunked, True)
+
+
+def _mamba_apply(p, x: Array, ssm_state: int, head_dim: int,
+                 chunked: bool, want_state: bool):
+    bsz, s, d_model = x.shape
+    z, xbc_raw, dt, d_inner, n_heads = _split_proj(p, x, ssm_state, head_dim)
+    xbc, _ = _causal_conv(xbc_raw, p["conv"])
+    xh, b, c = jnp.split(xbc, [d_inner, d_inner + ssm_state], axis=-1)
+    xh = xh.reshape(bsz, s, n_heads, head_dim)
+    dt = dt + p["dt_bias"]
+    fn = ssd_chunked if (chunked and s % CHUNK == 0) else ssd_recurrent
+    out, final = fn(xh, dt, p["a_log"], b, c)
+    out = out + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    out = out.reshape(bsz, s, d_inner).astype(x.dtype)
+    out = rms_norm(out, p["norm"]) * jax.nn.silu(z)
+    y = out @ p["out_proj"]
+    if want_state:
+        kw = p["conv"].shape[0]
+        conv_state = xbc_raw[:, -(kw - 1):, :].astype(jnp.float32)
+        return y, {"ssm": final, "conv": conv_state}
+    return y, None
+
+
+def mamba_init_state(batch: int, d_model: int, ssm_state: int, head_dim: int,
+                     conv_width: int) -> Dict[str, Array]:
+    d_inner = 2 * d_model
+    n_heads = d_inner // head_dim
+    return {
+        "ssm": jnp.zeros((batch, n_heads, head_dim, ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d_inner + 2 * ssm_state), jnp.float32),
+    }
+
+
+def mamba_decode(p, x: Array, state: Dict[str, Array], *, ssm_state: int,
+                 head_dim: int) -> Tuple[Array, Dict[str, Array]]:
+    """x: (B,1,D) single-token decode."""
+    bsz, _, d_model = x.shape
+    z, xbc, dt, d_inner, n_heads = _split_proj(p, x, ssm_state, head_dim)
+    xbc, conv_state = _causal_conv(xbc, p["conv"], state["conv"])
+    xh, b, c = jnp.split(xbc[:, 0], [d_inner, d_inner + ssm_state], axis=-1)
+    xh = xh.reshape(bsz, n_heads, head_dim)
+    dtv = jax.nn.softplus((dt[:, 0] + p["dt_bias"]).astype(jnp.float32))
+    loga = -jnp.exp(p["a_log"])[None, :] * dtv
+    s_new = jnp.exp(loga)[..., None, None] * state["ssm"] + jnp.einsum(
+        "bhp,bq->bhpq", xh.astype(jnp.float32) * dtv[..., None], b.astype(jnp.float32))
+    out = jnp.einsum("bhpq,bq->bhp", s_new, c.astype(jnp.float32))
+    out = out + p["d_skip"][None, :, None] * xh.astype(jnp.float32)
+    out = out.reshape(bsz, d_inner).astype(x.dtype)
+    out = rms_norm(out, p["norm"]) * jax.nn.silu(z[:, 0])
+    return (out @ p["out_proj"])[:, None, :], {"ssm": s_new, "conv": conv_state}

@@ -1,0 +1,396 @@
+"""Transformer assembly: init / forward / loss / decode for every assigned
+architecture family (dense, GQA, MoE, RWKV-6, Mamba-2, Zamba2-hybrid,
+VLM/audio backbones).
+
+Structure:
+  - per-layer params are stacked on a leading L axis and the layer loop is a
+    single ``lax.scan`` (tractable HLO for 80-layer models, natural remat
+    boundary);
+  - ``jax.checkpoint`` wraps the block body when cfg.remat;
+  - Zamba2 hybrid: mamba2 backbone scanned; ONE shared attention+MLP block
+    (unstacked params, closure-captured) applied every ``hybrid_shared_every``
+    layers via ``lax.cond`` — weight reuse exactly as the paper describes;
+  - decode threads per-layer caches through the same scan;
+  - optional ``shard_fn(tag, x)`` lets the distribution layer inject
+    ``with_sharding_constraint`` without the model knowing about meshes.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (embed_apply, embed_init, mlp_apply, mlp_init,
+                                 rms_norm, unembed_apply)
+
+Array = jax.Array
+PyTree = Any
+ShardFn = Callable[[str, Array], Array]
+
+_IDENTITY: ShardFn = lambda tag, x: x
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _attn_dims(cfg: ModelConfig) -> attn_mod.AttnDims:
+    return attn_mod.AttnDims(
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, qkv_bias=cfg.qkv_bias,
+        qk_norm=cfg.qk_norm, window=cfg.attn_window, rope_theta=cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _block_init(cfg: ModelConfig, key) -> Dict[str, PyTree]:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, PyTree] = {"norm1": jnp.zeros((cfg.d_model,), dt)}
+    if cfg.block_type == "attn":
+        p["attn"] = attn_mod.attn_init(ks[0], cfg.d_model, _attn_dims(cfg), dt)
+    elif cfg.block_type == "rwkv6":
+        p["rwkv"] = rwkv_mod.rwkv_init(ks[0], cfg.d_model, cfg.ssm_head_dim, dt)
+    elif cfg.block_type == "mamba2":
+        p["mamba"] = ssm_mod.mamba_init(ks[0], cfg.d_model, cfg.ssm_state,
+                                        cfg.ssm_head_dim, cfg.conv_width, dt)
+    else:
+        raise ValueError(cfg.block_type)
+
+    if cfg.block_type != "mamba2":   # mamba2 blocks carry no separate FFN
+        p["norm2"] = jnp.zeros((cfg.d_model,), dt)
+        if cfg.is_moe:
+            p["moe"] = moe_mod.moe_init(ks[1], cfg.d_model, cfg.d_ff,
+                                        cfg.n_experts, cfg.glu, dt)
+        elif cfg.block_type == "rwkv6":
+            p["ffn"] = rwkv_mod.rwkv_channel_mix_init(ks[1], cfg.d_model, cfg.d_ff, dt)
+        else:
+            p["ffn"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.glu, dt)
+    return p
+
+
+def init(cfg: ModelConfig, key) -> Dict[str, PyTree]:
+    dt = _dtype(cfg)
+    k_embed, k_blocks, k_shared, k_final = jax.random.split(key, 4)
+    params: Dict[str, PyTree] = {
+        "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model,
+                            cfg.tie_embeddings, dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if cfg.scan_layers:
+        block_keys = jax.random.split(k_blocks, cfg.n_layers)
+        params["blocks"] = jax.vmap(lambda k: _block_init(cfg, k))(block_keys)
+    else:
+        params["blocks"] = [
+            _block_init(cfg, k) for k in jax.random.split(k_blocks, cfg.n_layers)]
+
+    if cfg.hybrid_shared_every:
+        ks = jax.random.split(k_shared, 3)
+        params["shared"] = {
+            "norm1": jnp.zeros((cfg.d_model,), dt),
+            "attn": attn_mod.attn_init(ks[0], cfg.d_model, _attn_dims(cfg), dt),
+            "norm2": jnp.zeros((cfg.d_model,), dt),
+            "ffn": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.glu, dt),
+        }
+    return params
+
+
+def n_shared_invocations(cfg: ModelConfig) -> int:
+    if not cfg.hybrid_shared_every:
+        return 0
+    return (cfg.n_layers + cfg.hybrid_shared_every - 1) // cfg.hybrid_shared_every
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _shared_block_apply(cfg: ModelConfig, sp, x: Array, shard: ShardFn,
+                        return_kv: bool = False):
+    h = rms_norm(x, sp["norm1"], cfg.norm_eps)
+    if return_kv:
+        y, kv = attn_mod.attn_apply_with_kv(sp["attn"], h, _attn_dims(cfg))
+    else:
+        y = attn_mod.attn_apply(sp["attn"], h, _attn_dims(cfg))
+    x = x + shard("residual", y)
+    h = rms_norm(x, sp["norm2"], cfg.norm_eps)
+    x = x + shard("residual", mlp_apply(sp["ffn"], h, cfg.activation, cfg.glu))
+    if return_kv:
+        return x, kv
+    return x
+
+
+def _zero_kv_like(cfg: ModelConfig, x: Array):
+    dims = _attn_dims(cfg)
+    b, s, _ = x.shape
+    z = jnp.zeros((b, s, dims.n_kv_heads, dims.head_dim), x.dtype)
+    return {"k": z, "v": z}
+
+
+def _block_apply(cfg: ModelConfig, bp, x: Array, layer_idx: Array,
+                 shared_params, shard: ShardFn,
+                 return_state: bool = False) -> Tuple[Array, Dict[str, Array]]:
+    aux = {"lb_loss": jnp.zeros((), jnp.float32),
+           "z_loss": jnp.zeros((), jnp.float32)}
+    state = {}
+    h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+    h = shard("activation", h)
+    # return_state layouts mirror init_decode_state's per-layer cache keys,
+    # so prefill output is directly usable as the decode state.
+    if cfg.block_type == "attn":
+        if return_state:
+            y, kv = attn_mod.attn_apply_with_kv(bp["attn"], h, _attn_dims(cfg))
+            state.update(kv)                      # {"k", "v"}
+        else:
+            y = attn_mod.attn_apply(bp["attn"], h, _attn_dims(cfg))
+    elif cfg.block_type == "rwkv6":
+        if return_state:
+            y, st = rwkv_mod.rwkv_apply_with_state(bp["rwkv"], h, cfg.ssm_head_dim)
+            state.update(st)                      # {"wkv", "shift"}
+        else:
+            y = rwkv_mod.rwkv_apply(bp["rwkv"], h, cfg.ssm_head_dim)
+    else:
+        if return_state:
+            y, st = ssm_mod.mamba_apply_with_state(
+                bp["mamba"], h, ssm_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim)
+            state.update(st)                      # {"ssm", "conv"}
+        else:
+            y = ssm_mod.mamba_apply(bp["mamba"], h, ssm_state=cfg.ssm_state,
+                                    head_dim=cfg.ssm_head_dim)
+    x = x + shard("residual", y)
+
+    if "norm2" in bp:
+        h = rms_norm(x, bp["norm2"], cfg.norm_eps)
+        h = shard("activation", h)
+        if cfg.is_moe:
+            y, moe_aux = moe_mod.moe_apply(
+                bp["moe"], h, top_k=cfg.n_experts_per_tok,
+                activation=cfg.activation, glu=cfg.glu,
+                capacity_factor=cfg.capacity_factor,
+                group_size=cfg.moe_group_size,
+                dispatch_dtype=jnp.dtype(cfg.moe_dispatch_dtype))
+            aux["lb_loss"] += moe_aux["lb_loss"]
+            aux["z_loss"] += moe_aux["z_loss"]
+        elif cfg.block_type == "rwkv6":
+            y = rwkv_mod.rwkv_channel_mix(bp["ffn"], h)
+            if return_state:
+                state["ffn_shift"] = h[:, -1, :].astype(jnp.float32)
+        else:
+            y = mlp_apply(bp["ffn"], h, cfg.activation, cfg.glu)
+        x = x + shard("residual", y)
+
+    if cfg.hybrid_shared_every and shared_params is not None:
+        every = cfg.hybrid_shared_every
+        if return_state:
+            x, shared_kv = jax.lax.cond(
+                (layer_idx % every) == (every - 1),
+                lambda v: _shared_block_apply(cfg, shared_params, v, shard,
+                                              return_kv=True),
+                lambda v: (v, _zero_kv_like(cfg, v)), x)
+            state["shared_kv"] = shared_kv
+        else:
+            x = jax.lax.cond(
+                (layer_idx % every) == (every - 1),
+                lambda v: _shared_block_apply(cfg, shared_params, v, shard),
+                lambda v: v, x)
+    if return_state:
+        return x, (aux, state)
+    return x, aux
+
+
+def forward(cfg: ModelConfig, params, tokens: Optional[Array] = None, *,
+            embeds: Optional[Array] = None, shard_fn: ShardFn = _IDENTITY,
+            last_only: bool = False, return_state: bool = False):
+    """Full-sequence forward.
+
+    Returns (logits, aux) or (logits, aux, layer_states) when
+    ``return_state`` (prefill: per-layer KV / recurrent states stacked on L).
+    ``last_only`` computes logits for the final position only — the serving
+    prefill contract (avoids a (B, S, V) logits buffer at 32 k).
+    """
+    if embeds is not None:
+        x = embeds.astype(_dtype(cfg))       # modality-stub path (vlm/audio)
+    else:
+        x = embed_apply(params["embed"], tokens, cfg.embed_scale)
+    x = shard_fn("activation", x)
+    shared = params.get("shared")
+
+    def scan_body(x, inp):
+        bp, idx = inp
+        return _block_apply(cfg, bp, x, idx, shared, shard_fn,
+                            return_state=return_state)
+
+    if cfg.remat and not return_state:
+        scan_body = jax.checkpoint(
+            scan_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.scan_layers:
+        x, ys = jax.lax.scan(
+            scan_body, x, (params["blocks"], jnp.arange(cfg.n_layers)))
+        if return_state:
+            auxs, states = ys
+        else:
+            auxs, states = ys, None
+        aux = jax.tree.map(jnp.sum, auxs)
+    else:
+        aux = {"lb_loss": jnp.zeros((), jnp.float32),
+               "z_loss": jnp.zeros((), jnp.float32)}
+        states_list = []
+        for i, bp in enumerate(params["blocks"]):
+            x, y = scan_body(x, (bp, jnp.asarray(i)))
+            if return_state:
+                a, st = y
+                states_list.append(st)
+            else:
+                a = y
+            aux = jax.tree.map(jnp.add, aux, a)
+        states = (jax.tree.map(lambda *ls: jnp.stack(ls), *states_list)
+                  if return_state else None)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:, :]
+    logits = unembed_apply(params["embed"], x)
+    logits = shard_fn("logits", logits)
+    if return_state:
+        return logits, aux, states
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, Array], *,
+            shard_fn: ShardFn = _IDENTITY,
+            lb_coef: float = 0.01, z_coef: float = 1e-3):
+    """Next-token cross-entropy (+ MoE aux).  batch: tokens/embeds + labels."""
+    logits, aux = forward(cfg, params, batch.get("tokens"),
+                          embeds=batch.get("embeds"), shard_fn=shard_fn)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = ce
+    if cfg.is_moe:
+        total = total + lb_coef * aux["lb_loss"] + z_coef * aux["z_loss"]
+    metrics = {"ce": ce, "lb_loss": aux["lb_loss"], "z_loss": aux["z_loss"]}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token, cached)
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, PyTree]:
+    """Per-layer caches stacked on L (matching the scanned block params)."""
+    dt = _dtype(cfg)
+    dims = _attn_dims(cfg)
+    L = cfg.n_layers
+
+    def stack(make_one):
+        one = make_one()
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape), one)
+
+    state: Dict[str, PyTree] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.block_type == "attn":
+        state["layers"] = stack(lambda: attn_mod.init_kv_cache(batch, max_len, dims, dt))
+    elif cfg.block_type == "rwkv6":
+        state["layers"] = stack(lambda: rwkv_mod.rwkv_init_state(
+            batch, cfg.d_model, cfg.ssm_head_dim))
+    else:
+        state["layers"] = stack(lambda: ssm_mod.mamba_init_state(
+            batch, cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim, cfg.conv_width))
+    if cfg.hybrid_shared_every:
+        n_inv = n_shared_invocations(cfg)
+        one = attn_mod.init_kv_cache(batch, max_len, dims, dt)
+        state["shared_layers"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_inv,) + a.shape), one)
+    return state
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens: Array, *,
+                shard_fn: ShardFn = _IDENTITY):
+    """tokens: (B, 1) -> (logits (B,1,V), new state)."""
+    pos = state["pos"]
+    x = embed_apply(params["embed"], tokens, cfg.embed_scale)
+    x = shard_fn("activation", x)
+    dims = _attn_dims(cfg)
+    shared = params.get("shared")
+    every = cfg.hybrid_shared_every
+
+    def shared_apply(carry_x, shared_cache, inv_idx):
+        h = rms_norm(carry_x, shared["norm1"], cfg.norm_eps)
+        cache_i = jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(
+            a, inv_idx, 0, keepdims=False), shared_cache)
+        y, new_cache_i = attn_mod.attn_decode(shared["attn"], h, cache_i, pos, dims)
+        carry_x = carry_x + y
+        h = rms_norm(carry_x, shared["norm2"], cfg.norm_eps)
+        carry_x = carry_x + mlp_apply(shared["ffn"], h, cfg.activation, cfg.glu)
+        shared_cache = jax.tree.map(
+            lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                full, new.astype(full.dtype), inv_idx, 0),
+            shared_cache, new_cache_i)
+        return carry_x, shared_cache
+
+    def scan_body(carry, inp):
+        x, shared_cache = carry
+        bp, layer_cache, idx = inp
+        h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+        if cfg.block_type == "attn":
+            y, new_cache = attn_mod.attn_decode(bp["attn"], h, layer_cache, pos, dims)
+        elif cfg.block_type == "rwkv6":
+            y, new_cache = rwkv_mod.rwkv_decode(
+                bp["rwkv"], h,
+                {"wkv": layer_cache["wkv"], "shift": layer_cache["shift"]},
+                cfg.ssm_head_dim)
+        else:
+            y, new_cache = ssm_mod.mamba_decode(bp["mamba"], h, layer_cache,
+                                                ssm_state=cfg.ssm_state,
+                                                head_dim=cfg.ssm_head_dim)
+        x = x + y
+        if "norm2" in bp:
+            h = rms_norm(x, bp["norm2"], cfg.norm_eps)
+            if cfg.is_moe:
+                # decode: capacity = top_k * batch (cf = E) => never drops,
+                # exact top-k mixture (serving must not lose tokens)
+                y, _ = moe_mod.moe_apply(
+                    bp["moe"], h, top_k=cfg.n_experts_per_tok,
+                    activation=cfg.activation, glu=cfg.glu,
+                    capacity_factor=float(cfg.n_experts),
+                    group_size=min(cfg.moe_group_size, h.shape[0]),
+                    dispatch_dtype=jnp.dtype(cfg.moe_dispatch_dtype))
+            elif cfg.block_type == "rwkv6":
+                y = rwkv_mod.rwkv_channel_mix(
+                    bp["ffn"], h, x_prev=layer_cache["ffn_shift"].astype(h.dtype))
+                new_cache["ffn_shift"] = h[:, 0, :].astype(jnp.float32)
+            else:
+                y = mlp_apply(bp["ffn"], h, cfg.activation, cfg.glu)
+            x = x + y
+        if every and shared is not None:
+            x, shared_cache = jax.lax.cond(
+                (idx % every) == (every - 1),
+                lambda args: shared_apply(args[0], args[1], idx // every),
+                lambda args: args,
+                (x, shared_cache))
+        return (x, shared_cache), new_cache
+
+    shared_cache = state.get("shared_layers")
+    (x, shared_cache), new_layer_caches = jax.lax.scan(
+        scan_body, (x, shared_cache),
+        (params["blocks"], state["layers"], jnp.arange(cfg.n_layers)))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed_apply(params["embed"], x)
+    new_state = {"pos": pos + 1, "layers": new_layer_caches}
+    if shared_cache is not None:
+        new_state["shared_layers"] = shared_cache
+    return logits, new_state

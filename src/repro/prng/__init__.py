@@ -1,0 +1,4 @@
+from repro.prng.stream import ChaoticStream, default_stream
+from repro.prng.nist import run_nist_subset
+
+__all__ = ["ChaoticStream", "default_stream", "run_nist_subset"]

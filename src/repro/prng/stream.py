@@ -1,0 +1,104 @@
+"""Chaotic-oscillator PRNG streams (the paper's end application).
+
+The trained ANN oscillator (paper Fig. 1: MUX selecting seed vs feedback)
+becomes a batched, jit-able random-bit source.  It is plugged into the LM
+training stack as a first-class substrate: data-pipeline shuffling, dropout
+masks, and stochastic rounding for gradient compression all draw from it.
+
+Seeding: stream seeds are derived from a counter via a splitmix64-style hash
+and placed in the normalized attractor box; sensitivity to initial conditions
+gives stream independence after a short burn-in (Lyapunov decorrelation),
+which the NIST subset in tests verifies empirically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+_DEFAULT_WEIGHTS: Optional[Dict[str, np.ndarray]] = None
+
+
+def _splitmix_seeds(counter: jax.Array, n_streams: int, dim: int) -> jax.Array:
+    """Derive (S, I) normalized seeds in [-0.9, 0.9] from an integer counter."""
+    idx = counter.astype(jnp.uint32) * jnp.uint32(0x9E3779B9) + jnp.arange(
+        n_streams * dim, dtype=jnp.uint32).reshape(n_streams, dim) * jnp.uint32(0x85EBCA77)
+    z = idx
+    z = (z ^ (z >> jnp.uint32(16))) * jnp.uint32(0x7FEB352D)
+    z = (z ^ (z >> jnp.uint32(15))) * jnp.uint32(0x846CA68B)
+    z = z ^ (z >> jnp.uint32(16))
+    return (z.astype(jnp.float32) / jnp.float32(2 ** 32) - 0.5) * 1.8
+
+
+@dataclasses.dataclass
+class ChaoticStream:
+    """Stateful convenience wrapper over the stateless ``draw_*`` API."""
+
+    params: Dict[str, jax.Array]
+    activation: str = "relu"
+    n_streams: int = 256
+    burn_in: int = 16
+    backend: str = "auto"
+    counter: int = 0
+
+    @classmethod
+    def from_trained(cls, params, **kw) -> "ChaoticStream":
+        return cls(params={k: jnp.asarray(v) for k, v in params.items()}, **kw)
+
+    def _draw_words(self, n_words: int) -> jax.Array:
+        p = self.params
+        words = draw_words(p["w1"], p["b1"], p["w2"], p["b2"], self.counter,
+                           n_words, self.n_streams, self.burn_in,
+                           self.activation, self.backend)
+        self.counter += 1
+        return words
+
+    def uniform(self, shape: Tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+        n = int(np.prod(shape)) if shape else 1
+        words = self._draw_words(n)
+        return (words[:n].astype(jnp.float32) / jnp.float32(2 ** 32)).reshape(shape).astype(dtype)
+
+    def bits(self, n_words: int) -> jax.Array:
+        return self._draw_words(n_words)[:n_words]
+
+    def bernoulli(self, p: float, shape: Tuple[int, ...]) -> jax.Array:
+        return self.uniform(shape) < p
+
+    def permutation(self, n: int) -> jax.Array:
+        """Random permutation via argsort of chaotic keys (shuffling)."""
+        return jnp.argsort(self.bits(n))
+
+
+@functools.partial(jax.jit, static_argnames=("n_words", "n_streams", "burn_in",
+                                             "activation", "backend"))
+def draw_words(w1, b1, w2, b2, counter: int, n_words: int, n_streams: int,
+               burn_in: int, activation: str, backend: str) -> jax.Array:
+    params = {"w1": w1, "b1": b1, "w2": w2, "b2": b2}
+    dim = params["w1"].shape[0]
+    x0 = _splitmix_seeds(jnp.asarray(counter, jnp.uint32), n_streams, dim)
+    # 2 samples -> 1 word; streams interleave in the flattened output.
+    steps_needed = 2 * ((n_words + n_streams - 1) // n_streams) + 2 * burn_in
+    steps_needed = max(steps_needed, 4)
+    traj = ops.chaotic_trajectory(params, x0, steps_needed,
+                                  activation=activation, backend=backend)
+    words = ops.bits_from_trajectory(traj[2 * burn_in // 2:])  # drop burn-in
+    return words.reshape(-1)[:n_words]
+
+
+def default_stream(n_streams: int = 256, seed: int = 0) -> ChaoticStream:
+    """A ready-to-use stream over a Chen oscillator trained at import time
+    (cached). Training takes ~3 s once per process."""
+    global _DEFAULT_WEIGHTS
+    if _DEFAULT_WEIGHTS is None:
+        from repro.core.ann import AnnConfig, extract_parameters, train
+        from repro.core.chaotic import make_dataset
+        ds = make_dataset("chen", n_samples=20_000, seed=seed)
+        params, _ = train(AnnConfig(hidden=8), ds, epochs=120, lr=3e-3, seed=seed)
+        _DEFAULT_WEIGHTS = extract_parameters(params)
+    return ChaoticStream.from_trained(_DEFAULT_WEIGHTS, n_streams=n_streams)

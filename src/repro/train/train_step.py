@@ -1,0 +1,121 @@
+"""Train-step builder: microbatched gradient accumulation, remat, mixed
+precision, optional gradient compression — one jit-able function per
+(model config, shape, mesh) cell.
+
+The returned ``train_step(state, batch)`` is pure and pjit-friendly:
+  - grads accumulate in fp32 with the same sharding as the (FSDP) params,
+  - gradient accumulation is a ``lax.scan`` over microbatches (each
+    microbatch re-runs the remat'd forward),
+  - optional int8 error-feedback compression before the optimizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.compression import compress_grads
+from repro.models import transformer as tf
+from repro.train.optimizer import Adam, AdamState, global_norm
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: PyTree
+    opt: AdamState
+    error_buf: Optional[PyTree] = None   # gradient-compression feedback
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    num_microbatches: int = 1
+    compress_grads: bool = False
+    lb_coef: float = 0.01
+    z_coef: float = 1e-3
+
+
+def init_train_state(cfg: ModelConfig, opt: Adam, key,
+                     use_compression: bool = False) -> TrainState:
+    params = tf.init(cfg, key)
+    ebuf = None
+    if use_compression:
+        ebuf = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt=opt.init(params), error_buf=ebuf)
+
+
+def make_train_step(cfg: ModelConfig, opt: Adam, ts_cfg: TrainStepConfig,
+                    shard_fn=None) -> Callable:
+    """Build the train_step.  batch leaves have leading dim global_batch
+    (per-process view); microbatching splits dim 0."""
+    shard = shard_fn or (lambda tag, x: x)
+
+    def loss(params, mb):
+        return tf.loss_fn(cfg, params, mb, shard_fn=shard,
+                          lb_coef=ts_cfg.lb_coef, z_coef=ts_cfg.z_coef)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        n_mb = ts_cfg.num_microbatches
+        if n_mb == 1:
+            (l, metrics), grads = grad_fn(state.params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            # (B, ...) -> (n_mb, B/n_mb, ...) with the *kept* batch dim
+            # carrying the dp sharding: row r = i*n_mb + j maps to
+            # microbatch j, so every microbatch spans all dp shards.
+            mbs = jax.tree.map(
+                lambda a: a.reshape(
+                    (a.shape[0] // n_mb, n_mb) + a.shape[1:]).swapaxes(0, 1),
+                batch)
+
+            def accum(carry, mb):
+                (l_acc, g_acc) = carry
+                (l, metrics), g = grad_fn(state.params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / n_mb, g_acc, g)
+                return (l_acc + l / n_mb, g_acc), metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (l, grads), metrics_all = jax.lax.scan(
+                accum, (jnp.zeros((), jnp.float32), zeros), mbs)
+            metrics = jax.tree.map(lambda m: m[-1], metrics_all)
+
+        error_buf = state.error_buf
+        if ts_cfg.compress_grads and error_buf is not None:
+            grads, error_buf = compress_grads(grads, error_buf)
+
+        gnorm = global_norm(grads)
+        params, opt_state = opt.update(grads, state.opt, state.params)
+        metrics = dict(metrics, loss=l, grad_norm=gnorm)
+        new_state = TrainState(step=state.step + 1, params=params,
+                               opt=opt_state, error_buf=error_buf)
+        return new_state, metrics
+
+    return train_step
+
+
+def batch_spec(cfg: ModelConfig, shape: ShapeConfig,
+               dtype=jnp.int32) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one global batch (dry-run inputs)."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.frontend != "text" and shape.kind in ("train", "prefill"):
+        # modality stub: precomputed patch/frame embeddings
+        specs = {
+            "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype)),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    else:
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    return specs

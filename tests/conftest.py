@@ -1,0 +1,9 @@
+import os
+
+# Keep CPU device count at 1 for smoke tests/benches (the dry-run sets its
+# own 512-device flag in-process, in a subprocess when tested).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,111 @@
+"""DSE estimation models (paper Eqs. 8-9, Figs. 3-5) and selection modes."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dse import (Candidate, CostModel, LatencyModel, VMEM_USABLE,
+                            enumerate_candidates, measure_candidate,
+                            pareto_front, select, vmem_bytes)
+
+
+@pytest.fixture(scope="module")
+def models():
+    return LatencyModel.fit(), CostModel.fit()
+
+
+def test_latency_decreases_with_parallelism(models):
+    """Paper Fig. 3b: normalized latency falls with P."""
+    lm, _ = models
+    for unit in ("vpu", "mxu"):
+        lats = [lm.predict(3, 8, p, unit, 4) for p in range(6)]
+        assert all(a >= b for a, b in zip(lats, lats[1:])), (unit, lats)
+
+
+def test_latency_scales_with_ih(models):
+    """Eq. 8: latency proportional to I*H at fixed P."""
+    lm, _ = models
+    l1 = lm.predict(3, 8, 2)
+    l2 = lm.predict(3, 16, 2)
+    assert abs(l2 / l1 - 2.0) < 0.05   # (I*H) doubles
+
+
+def test_cost_increases_with_parallelism(models):
+    """Paper: higher parallelism -> more hardware (VMEM here)."""
+    _, cm = models
+    costs = [cm.predict(3, 8, p) for p in range(6)]
+    assert all(a < b for a, b in zip(costs, costs[1:])), costs
+
+
+def test_cost_model_accuracy(models):
+    """Eq. 9 linear fit tracks the measured VMEM within 5% (paper Table III
+    style estimate-vs-actual)."""
+    _, cm = models
+    for p in (0, 2, 4):
+        for i, h in ((3, 4), (3, 8), (3, 16), (4, 8)):
+            c = Candidate(i_dim=i, h_dim=h, p=p)
+            actual = vmem_bytes(c)
+            est = cm.predict(i, h, p)
+            assert abs(est - actual) / actual < 0.05, (p, i, h, est, actual)
+
+
+def test_latency_model_accuracy(models):
+    """Eq. 8 cubic fit tracks per-config measurements within 15%."""
+    lm, _ = models
+    for p in range(6):
+        c = Candidate(i_dim=3, h_dim=8, p=p)
+        actual = measure_candidate(c)["per_stream_latency_cycles"]
+        est = lm.predict(3, 8, p)
+        assert abs(est - actual) / actual < 0.15, (p, est, actual)
+
+
+def test_mxu_vs_vpu_tradeoff():
+    """VPU wins for tiny H (I=3, H=8: MXU pads 3->128); the padding waste
+    shrinks as H grows (the paper's DSP-vs-LUT analogue trade-off)."""
+    vpu8 = measure_candidate(Candidate(h_dim=8, compute_unit="vpu"))
+    mxu8 = measure_candidate(Candidate(h_dim=8, compute_unit="mxu"))
+    assert vpu8["cycles_per_step"] < mxu8["cycles_per_step"]
+    # ratio improves for MXU with larger H
+    vpu64 = measure_candidate(Candidate(h_dim=64, compute_unit="vpu"))
+    mxu64 = measure_candidate(Candidate(h_dim=64, compute_unit="mxu"))
+    assert (mxu64["cycles_per_step"] / vpu64["cycles_per_step"]
+            < mxu8["cycles_per_step"] / vpu8["cycles_per_step"])
+
+
+def test_enumerate_respects_vmem():
+    cands = enumerate_candidates(3, 16)
+    assert cands
+    assert all(vmem_bytes(c) <= VMEM_USABLE for c in cands)
+
+
+def test_pareto_front_is_nondominated(models):
+    lm, cm = models
+    front = pareto_front(enumerate_candidates(3, 16), lm, cm)
+    assert len(front) >= 3
+    for i, (_, c1, l1) in enumerate(front):
+        for j, (_, c2, l2) in enumerate(front):
+            if i != j:
+                assert not (c2 <= c1 and l2 <= l1 and (c2 < c1 or l2 < l1))
+
+
+def test_selection_modes(models):
+    lm, cm = models
+    fast = select(3, 8, "min_latency", latency_model=lm, cost_model=cm)
+    cheap = select(3, 8, "lowest_cost", latency_model=lm, cost_model=cm)
+    assert fast.p > cheap.p   # paper: min-latency = max parallelism
+    mid = select(3, 8, "pareto", p=2, latency_model=lm, cost_model=cm)
+    assert mid.p == 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(i=st.integers(2, 8), h=st.integers(4, 64), p=st.integers(0, 5),
+       unit=st.sampled_from(["vpu", "mxu"]), dt=st.sampled_from([2, 4]))
+def test_measure_candidate_invariants(i, h, p, unit, dt):
+    """Property: measurements are finite, positive; throughput = streams /
+    cycles * clock; vmem grows monotonically in every size knob."""
+    c = Candidate(i_dim=i, h_dim=h, p=p, compute_unit=unit, dtype_bytes=dt)
+    m = measure_candidate(c)
+    assert m["cycles_per_step"] > 0 and np.isfinite(m["cycles_per_step"])
+    assert m["per_stream_latency_cycles"] * c.s_block == pytest.approx(
+        m["cycles_per_step"])
+    assert vmem_bytes(c) < vmem_bytes(
+        Candidate(i_dim=i, h_dim=h, p=p + 1, compute_unit=unit, dtype_bytes=dt))

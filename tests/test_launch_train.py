@@ -1,0 +1,38 @@
+"""The production launcher end-to-end at smoke scale (2x2 debug mesh)."""
+import subprocess
+import sys
+
+
+def test_launch_train_smoke(tmp_path):
+    script = (
+        "import os; os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=4';"
+        "from repro.launch.train import main;"
+        f"r = main(['--arch','llama3.2-3b','--smoke','--steps','6',"
+        f"'--ckpt-dir','{tmp_path}','--ckpt-every','3','--chaotic-shuffle']);"
+        "assert int(r.final_state.step) == 6"
+    )
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=560,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu", "HOME": "/root"})
+    assert r.returncode == 0, (r.stdout[-800:], r.stderr[-3000:])
+
+
+def test_launch_train_resume(tmp_path):
+    base = (
+        "import os; os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=4';"
+        "from repro.launch.train import main;"
+    )
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+           "JAX_PLATFORMS": "cpu", "HOME": "/root"}
+    r1 = subprocess.run([sys.executable, "-c", base +
+                         f"main(['--arch','rwkv6-1.6b','--smoke','--steps','3',"
+                         f"'--ckpt-dir','{tmp_path}','--ckpt-every','3'])"],
+                        capture_output=True, text=True, timeout=560, env=env)
+    assert r1.returncode == 0, r1.stderr[-3000:]
+    r2 = subprocess.run([sys.executable, "-c", base +
+                         f"r = main(['--arch','rwkv6-1.6b','--smoke','--steps','6',"
+                         f"'--ckpt-dir','{tmp_path}','--ckpt-every','3']);"
+                         "assert r.resumed_from == 3, r.resumed_from"],
+                        capture_output=True, text=True, timeout=560, env=env)
+    assert r2.returncode == 0, r2.stderr[-3000:]

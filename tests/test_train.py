@@ -1,0 +1,216 @@
+"""Training substrate: optimizer, microbatching, compression, checkpointing,
+fault-tolerant loop."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_smoke_config
+from repro.data.pipeline import SyntheticLMDataset
+from repro.distributed.compression import compress_grads
+from repro.models import transformer as tf
+from repro.train import checkpoint as ckpt
+from repro.train.loop import LoopConfig, run
+from repro.train.optimizer import Adam, global_norm, warmup_cosine
+from repro.train.train_step import (TrainState, TrainStepConfig,
+                                    init_train_state, make_train_step)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+def test_adam_matches_reference():
+    """One Adam step against a hand-computed reference."""
+    opt = Adam(lr=0.1, b1=0.9, b2=0.999, eps=1e-8)
+    params = {"w": jnp.asarray([1.0, -2.0])}
+    grads = {"w": jnp.asarray([0.5, 0.5])}
+    state = opt.init(params)
+    new_params, state = opt.update(grads, state, params)
+    # step1: mhat = g, vhat = g^2 -> update = lr * g/(|g|+eps) = lr*sign(g)
+    np.testing.assert_allclose(np.asarray(new_params["w"]),
+                               [1.0 - 0.1, -2.0 - 0.1], rtol=1e-5)
+
+
+def test_adam_clip_norm():
+    opt = Adam(lr=1.0, clip_norm=1.0)
+    params = {"w": jnp.zeros(4)}
+    grads = {"w": jnp.full(4, 100.0)}
+    st_ = opt.init(params)
+    _, st2 = opt.update(grads, st_, params)
+    assert float(global_norm(st2.mu)) <= 0.1 * 1.0 + 1e-6  # (1-b1)*clipped
+
+
+def test_warmup_cosine_schedule():
+    sch = warmup_cosine(1e-3, warmup_steps=10, total_steps=100)
+    assert float(sch(jnp.asarray(0))) == 0.0
+    assert float(sch(jnp.asarray(10))) == pytest.approx(1e-3, rel=1e-3)
+    assert float(sch(jnp.asarray(100))) == pytest.approx(1e-4, rel=1e-2)
+    assert float(sch(jnp.asarray(5))) == pytest.approx(5e-4, rel=1e-3)
+
+
+def test_weight_decay_decoupled():
+    opt = Adam(lr=0.1, weight_decay=0.1)
+    params = {"w": jnp.asarray([10.0])}
+    grads = {"w": jnp.asarray([0.0])}
+    st_ = opt.init(params)
+    new_params, _ = opt.update(grads, st_, params)
+    np.testing.assert_allclose(np.asarray(new_params["w"]), [10.0 - 0.1 * 0.1 * 10.0])
+
+
+# ---------------------------------------------------------------------------
+# Microbatching
+# ---------------------------------------------------------------------------
+
+def test_microbatched_equals_full_batch():
+    """Gradient accumulation over microbatches == single big batch."""
+    cfg = get_smoke_config("llama3_2_3b")
+    opt = Adam(lr=1e-3)
+    key = jax.random.PRNGKey(0)
+    state = init_train_state(cfg, opt, key)
+    toks = jax.random.randint(key, (8, 33), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    s1 = jax.jit(make_train_step(cfg, opt, TrainStepConfig(num_microbatches=1)))
+    s4 = jax.jit(make_train_step(cfg, opt, TrainStepConfig(num_microbatches=4)))
+    st1, m1 = s1(state, batch)
+    st4, m4 = s4(state, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=2e-3)
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), st1.params, st4.params)
+    assert max(jax.tree.leaves(d)) < 5e-2   # bf16 params, fp32 accum
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_bounded_error():
+    g = {"a": jnp.asarray(np.random.default_rng(0).normal(size=(1000,)), jnp.float32)}
+    comp, err = compress_grads(g)
+    # int8 per-block: |error| <= scale/2 = max|block|/254
+    assert float(jnp.max(jnp.abs(err["a"]))) <= float(jnp.max(jnp.abs(g["a"]))) / 254 + 1e-7
+    np.testing.assert_allclose(np.asarray(comp["a"] + err["a"]),
+                               np.asarray(g["a"]), atol=1e-6)
+
+
+def test_compression_error_feedback_accumulates():
+    """Repeating the same gradient with feedback converges to the true mean:
+    sum of compressed updates tracks sum of raw gradients."""
+    rng = np.random.default_rng(1)
+    g = {"a": jnp.asarray(rng.normal(size=(512,)) * 1e-3, jnp.float32)}
+    err = None
+    total = jnp.zeros(512)
+    for _ in range(50):
+        comp, err = compress_grads(g, err)
+        total = total + comp["a"]
+    np.testing.assert_allclose(np.asarray(total), 50 * np.asarray(g["a"]),
+                               atol=float(jnp.max(jnp.abs(g["a"]))) / 100)
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(1e-6, 1e3), n=st.integers(10, 300))
+def test_compression_property(scale, n):
+    rng = np.random.default_rng(n)
+    g = {"a": jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)}
+    comp, err = compress_grads(g)
+    assert comp["a"].shape == g["a"].shape
+    # reconstruction identity: comp + err == g
+    np.testing.assert_allclose(np.asarray(comp["a"] + err["a"]),
+                               np.asarray(g["a"]), rtol=1e-4, atol=scale * 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_smoke_config("rwkv6_1_6b")
+    opt = Adam(lr=1e-3)
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    ckpt.save(tmp_path, 7, state)
+    assert ckpt.latest_step(tmp_path) == 7
+    restored = ckpt.restore(tmp_path, state)
+    for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(restored.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_k(tmp_path):
+    state = {"w": jnp.arange(4.0)}
+    for step in (1, 2, 3, 4, 5):
+        ckpt.save(tmp_path, step, state, keep=2)
+    assert ckpt.all_steps(tmp_path) == [4, 5]
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    state = {"w": jnp.arange(4.0)}
+    ckpt.save(tmp_path, 1, state)
+    # a stale tmp dir must not be visible as a checkpoint
+    (tmp_path / ".tmp_step_0000000099").mkdir()
+    assert ckpt.all_steps(tmp_path) == [1]
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ckpt.save(tmp_path, 1, {"w": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        ckpt.restore(tmp_path, {"w": jnp.zeros((5,))})
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerant loop
+# ---------------------------------------------------------------------------
+
+def _tiny_setup():
+    cfg = get_smoke_config("llama3_2_3b")
+    opt = Adam(lr=1e-3)
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, opt, TrainStepConfig()))
+    ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    batch_at = lambda i: {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+    return state, step, batch_at
+
+
+def test_loop_runs_and_checkpoints(tmp_path):
+    state, step, batch_at = _tiny_setup()
+    res = run(state, step, batch_at,
+              LoopConfig(total_steps=6, ckpt_dir=str(tmp_path), ckpt_every=3,
+                         log_every=100), log_fn=lambda s: None)
+    assert int(res.final_state.step) == 6
+    assert ckpt.latest_step(tmp_path) == 6
+    assert not res.preempted
+
+
+def test_loop_resume_exact(tmp_path):
+    """Crash/restart: resumed run must land on the same final params as an
+    uninterrupted run (deterministic data + state restore)."""
+    state, step, batch_at = _tiny_setup()
+    full = run(state, step, batch_at,
+               LoopConfig(total_steps=8, ckpt_dir=None, log_every=100),
+               log_fn=lambda s: None)
+
+    run(state, step, batch_at,
+        LoopConfig(total_steps=4, ckpt_dir=str(tmp_path), ckpt_every=4,
+                   log_every=100), log_fn=lambda s: None)
+    resumed = run(state, step, batch_at,
+                  LoopConfig(total_steps=8, ckpt_dir=str(tmp_path),
+                             ckpt_every=4, log_every=100), log_fn=lambda s: None)
+    assert resumed.resumed_from == 4
+    for a, b in zip(jax.tree.leaves(full.final_state.params),
+                    jax.tree.leaves(resumed.final_state.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_data_pipeline_deterministic_and_resumable():
+    ds = SyntheticLMDataset(vocab_size=100, seq_len=16, global_batch=4, seed=3)
+    b5a = ds.batch_at(5)
+    b5b = SyntheticLMDataset(vocab_size=100, seq_len=16, global_batch=4, seed=3).batch_at(5)
+    np.testing.assert_array_equal(b5a["tokens"], b5b["tokens"])
+    it = ds.iterate(start_step=5)
+    np.testing.assert_array_equal(next(it)["tokens"], b5a["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(ds.batch_at(0)["labels"][:, :-1],
+                                  ds.batch_at(0)["tokens"][:, 1:])
