@@ -22,6 +22,7 @@ def main() -> None:
         "fig4": fig4_cost_curves.run,
         "fig5": fig5_pareto.run,
         "throughput": throughput.run,
+        "throughput_fused": throughput.run_fused,
     }
     selected = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

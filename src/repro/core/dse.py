@@ -24,8 +24,9 @@ is the ground-truth oracle (the paper's Vivado report), `LatencyModel` /
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -280,3 +281,66 @@ def select(i_dim: int, h_dim: int, mode: str = "pareto", p: int | None = None,
             return min((c for c, _, _ in front), key=lambda c: abs(c.p - p))
         return front[len(front) // 2][0]
     raise ValueError(f"unknown mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Autotuner: the DSE output driving the hot path (per-process cached)
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "f32": 4, "bf16": 2, 4: 4, 2: 2}
+
+
+@functools.lru_cache(maxsize=None)
+def _fitted_models() -> Tuple[LatencyModel, CostModel]:
+    """Eq. 8/9 estimators, fitted once per process (~ms; pure numpy)."""
+    return LatencyModel.fit(), CostModel.fit()
+
+
+@functools.lru_cache(maxsize=None)
+def select_config(i_dim: int, h_dim: int, s_total: Optional[int] = None,
+                  dtype: object = "float32", unit: Optional[str] = None,
+                  objective: str = "min_latency") -> Candidate:
+    """Pick (s_block, t_block, unroll, compute_unit) for a kernel launch.
+
+    The autotuned replacement for hand-picked per-call-site defaults: scores
+    the enumerated design space with the *fitted* Eq. 8/9 estimators (the
+    paper's DSE runs on estimates, not measurements), breaking ties between
+    same-(P, unit) candidates with the analytic per-step overhead terms that
+    the estimators normalize away.
+
+    Args:
+      s_total: number of streams the caller will actually launch; candidates
+        whose stream block exceeds the padded stream count are dropped (they
+        would only compute padding lanes).
+      dtype: 'float32' | 'bfloat16' (or 4 | 2 byte widths, or a jnp dtype).
+      unit: restrict to 'vpu' or 'mxu'; None searches both.
+      objective: 'min_latency' | 'lowest_cost'.
+    """
+    key = dtype if isinstance(dtype, (str, int)) else np.dtype(dtype).name
+    dt = _DTYPE_BYTES.get(key)
+    if dt is None:
+        raise ValueError(f"unknown dtype {dtype!r}")
+    units = (unit,) if unit else ("vpu", "mxu")
+    cands = enumerate_candidates(i_dim, h_dim, units=units, dtypes=(dt,))
+    if s_total is not None:
+        # p=0 (s_block=128) always fits the cap, so this never empties cands.
+        s_cap = max(LANES, _pad(s_total, LANES))
+        cands = [c for c in cands if c.s_block <= s_cap]
+    if not cands:
+        raise ValueError(f"no feasible candidate for I={i_dim} H={h_dim}")
+    lm, cm = _fitted_models()
+
+    def score(c: Candidate) -> Tuple[float, float]:
+        if objective == "lowest_cost":
+            primary = cm.predict(i_dim, h_dim, c.p, c.compute_unit, c.dtype_bytes)
+        elif objective == "min_latency":
+            primary = lm.predict(i_dim, h_dim, c.p, c.compute_unit, c.dtype_bytes)
+        else:
+            raise ValueError(f"unknown objective {objective!r}")
+        # The estimators are blind to (t_block, unroll); break ties with the
+        # analytic control-overhead share per step.
+        overhead = (GRID_STEP_OVERHEAD_CYCLES / c.t_block
+                    + LOOP_ITER_OVERHEAD_CYCLES / c.unroll)
+        return (primary, overhead)
+
+    return min(cands, key=score)

@@ -24,6 +24,7 @@ initialized at t==0 and carried across t blocks.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -47,31 +48,16 @@ def _pad_to(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
 
 
-def _kernel(w1_ref, b1_ref, w2_ref, b2_ref, x0_ref, out_ref, state_ref,
-            *, t_block: int, unroll: int, activation: str, compute_unit: str,
-            i_dim: int, h_dim: int):
-    """One (stream-block, time-block) grid cell.
+def _make_step(w1, b1, w2, b2, *, activation: str, compute_unit: str,
+               i_dim: int, h_dim: int):
+    """Shared oscillator update used by every kernel in this module.
 
-    Ref shapes (per block):
-      w1: (I_pad, H_pad)  b1: (H_pad, 1)  w2: (H_pad, I_pad)  b2: (I_pad, 1)
-      x0: (I_pad, s_block)      out: (t_block, I_pad, s_block)
-      state (VMEM scratch): (I_pad, s_block)
+    Operates on x of shape (I_pad, s): padded feature rows of the weights are
+    zero, so padding never contaminates live rows.
     """
-    t = pl.program_id(1)
     phi = _activation(activation)
 
-    @pl.when(t == 0)
-    def _init():
-        state_ref[...] = x0_ref[...]
-
-    w1 = w1_ref[...]
-    b1 = b1_ref[...]
-    w2 = w2_ref[...]
-    b2 = b2_ref[...]
-
     def one_step(x):
-        # x: (I_pad, s). Padded feature rows of the weights are zero, so
-        # padding never contaminates live rows.
         if compute_unit == "mxu":
             h = phi(jnp.dot(w1.T, x, preferred_element_type=jnp.float32)
                     .astype(x.dtype) + b1)
@@ -86,6 +72,29 @@ def _kernel(w1_ref, b1_ref, w2_ref, b2_ref, x0_ref, out_ref, state_ref,
         for j in range(h_dim):
             y = y + w2[j, :][:, None] * h[j, :][None, :]
         return y + b2
+
+    return one_step
+
+
+def _kernel(w1_ref, b1_ref, w2_ref, b2_ref, x0_ref, out_ref, state_ref,
+            *, t_block: int, unroll: int, activation: str, compute_unit: str,
+            i_dim: int, h_dim: int):
+    """One (stream-block, time-block) grid cell.
+
+    Ref shapes (per block):
+      w1: (I_pad, H_pad)  b1: (H_pad, 1)  w2: (H_pad, I_pad)  b2: (I_pad, 1)
+      x0: (I_pad, s_block)      out: (t_block, I_pad, s_block)
+      state (VMEM scratch): (I_pad, s_block)
+    """
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        state_ref[...] = x0_ref[...]
+
+    one_step = _make_step(w1_ref[...], b1_ref[...], w2_ref[...], b2_ref[...],
+                          activation=activation, compute_unit=compute_unit,
+                          i_dim=i_dim, h_dim=h_dim)
 
     def unrolled_chunk(x, base):
         for u in range(unroll):
@@ -163,3 +172,183 @@ def chaotic_ann_pallas(w1, b1, w2, b2, x0, *, n_steps: int,
 
     # (t_pad, I_pad, s_pad) -> (n_steps, S, I)
     return out[:n_steps, :i_dim, :s_total].transpose(0, 2, 1)
+
+
+# ---------------------------------------------------------------------------
+# Fused bit-extraction kernel: the trajectory never leaves VMEM in float form.
+# ---------------------------------------------------------------------------
+
+_GOLDEN = 0x9E3779B9          # Weyl increment (2^32 / phi)
+
+
+def _fold16(x, i_dim: int):
+    """Low-mantissa fold of one oscillator sample block.
+
+    x: (I_pad, s) floats -> (1, s) uint32, the low mantissa bits of each
+    live system dimension XOR-folded with odd shifts.  Bit-exact twin of
+    the per-sample stage of ``ops.bits_from_trajectory`` — including the
+    half-width rule: bf16 is bitcast at its own width and masked to its
+    7 mantissa bits (an upcast to f32 would zero the low 16 bits and kill
+    the entropy).
+    """
+    if x.dtype.itemsize == 2:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.uint32)
+        lo = u & jnp.uint32((1 << jnp.finfo(x.dtype).nmant) - 1)
+    else:
+        u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+        lo = u & jnp.uint32(0xFFFF)
+    folded = lo[0:1, :]
+    for i in range(1, i_dim):
+        folded = folded ^ (lo[i:i + 1, :] << jnp.uint32(5 * i % 16))
+    return folded
+
+
+def _finalize(w):
+    """Murmur3-style avalanche, identical to ``ops.bits_from_trajectory``."""
+    w = w ^ (w >> jnp.uint32(16))
+    w = w * jnp.uint32(0x85EBCA6B)
+    w = w ^ (w >> jnp.uint32(13))
+    w = w * jnp.uint32(0xC2B2AE35)
+    w = w ^ (w >> jnp.uint32(16))
+    return w
+
+
+def _bits_kernel(w1_ref, b1_ref, w2_ref, b2_ref, x0_ref, off_ref,
+                 words_ref, state_ref, *, t_block: int, unroll: int,
+                 activation: str, compute_unit: str, i_dim: int, h_dim: int):
+    """One (stream-block, time-block) grid cell of the fused PRNG kernel.
+
+    Per block:
+      off:   (1, s_block) uint32  per-stream word-row offset (Weyl counter)
+      words: (t_block//2, s_block) uint32  output words
+      state: (I_pad, s_block)  output, doubles as the VMEM carry across the
+             time grid (same output block revisited for every t), so the
+             float trajectory is never written to HBM.
+    """
+    t = pl.program_id(1)
+    rows_per_block = t_block // 2
+
+    @pl.when(t == 0)
+    def _init():
+        state_ref[...] = x0_ref[...]
+
+    one_step = _make_step(w1_ref[...], b1_ref[...], w2_ref[...], b2_ref[...],
+                          activation=activation, compute_unit=compute_unit,
+                          i_dim=i_dim, h_dim=h_dim)
+    offs = off_ref[...]
+
+    def one_row(x, r):
+        """Two oscillator steps -> one packed uint32 word row."""
+        x1 = one_step(x)
+        x2 = one_step(x1)
+        word = (_fold16(x1, i_dim) << jnp.uint32(16)) | _fold16(x2, i_dim)
+        row_idx = offs + (t * rows_per_block + r).astype(jnp.uint32)
+        word = word ^ (row_idx * jnp.uint32(_GOLDEN))
+        words_ref[pl.ds(r, 1), :] = _finalize(word)
+        return x2
+
+    def chunk(x, base):
+        for u in range(unroll):
+            x = one_row(x, base + u)
+        return x
+
+    x = state_ref[...]
+    n_chunks = rows_per_block // unroll
+    if n_chunks == 1:
+        x = chunk(x, 0)
+    else:
+        x = jax.lax.fori_loop(0, n_chunks,
+                              lambda c, x: chunk(x, c * unroll), x)
+    state_ref[...] = x
+
+
+def _bits_blocks(n_steps: int, t_block: int, unroll: int):
+    """Largest legal (t_block, unroll) not exceeding the requested ones.
+
+    The fused kernel must run *exactly* n_steps (the final state is part of
+    the contract), so t_block has to divide n_steps; it must also be even
+    (2 samples -> 1 word) and unroll counts word rows, so it must divide
+    t_block // 2.
+    """
+    t_block = max(2, t_block - (t_block % 2))
+    tb = math.gcd(t_block, n_steps)
+    un = max(1, math.gcd(unroll, tb // 2))
+    return tb, un
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_steps", "s_block", "t_block", "unroll", "activation",
+                     "compute_unit", "interpret"),
+)
+def chaotic_ann_bits_pallas(w1, b1, w2, b2, x0, word_offset=0, *,
+                            n_steps: int, s_block: int = 256,
+                            t_block: int = 128, unroll: int = 1,
+                            activation: str = "relu",
+                            compute_unit: str = "vpu",
+                            interpret: bool = False):
+    """Fused oscillator + bit-extraction: streams PRNG words straight out.
+
+    Runs the same update as ``chaotic_ann_pallas`` but packs the low-mantissa
+    bits of each pair of consecutive samples into one uint32 word *inside the
+    kernel* (Weyl-whitened + Murmur3-finalized, bit-exact with
+    ``ops.bits_from_trajectory``), so only ~1/4 of the trajectory bytes ever
+    reach HBM and no second extraction pass is needed.
+
+    Args:
+      w1 (I, H), b1 (H,), w2 (H, I), b2 (I,), x0 (S, I).
+      word_offset: scalar or (S,) uint32 — the global word-row counter(s) of
+        the first emitted row; makes chunked draws resume the exact Weyl
+        sequence of one long draw.
+      n_steps: steps to run; must be even (2 samples -> 1 word row).
+    Returns:
+      words: (n_steps // 2, S) uint32 word rows,
+      final_state: (S, I) oscillator state after n_steps (resume handle).
+    """
+    if n_steps < 2 or n_steps % 2:
+        raise ValueError(f"n_steps must be even and >= 2, got {n_steps}")
+    i_dim, h_dim = w1.shape
+    s_total = x0.shape[0]
+    dtype = x0.dtype
+    t_block, unroll = _bits_blocks(n_steps, t_block, unroll)
+
+    i_pad = _pad_to(max(i_dim, 1), SUBLANES)
+    h_pad = _pad_to(max(h_dim, 1), SUBLANES)
+    s_pad = _pad_to(s_total, s_block)
+    n_rows = n_steps // 2
+
+    w1p = jnp.zeros((i_pad, h_pad), dtype).at[:i_dim, :h_dim].set(w1.astype(dtype))
+    b1p = jnp.zeros((h_pad, 1), dtype).at[:h_dim, 0].set(b1.astype(dtype))
+    w2p = jnp.zeros((h_pad, i_pad), dtype).at[:h_dim, :i_dim].set(w2.astype(dtype))
+    b2p = jnp.zeros((i_pad, 1), dtype).at[:i_dim, 0].set(b2.astype(dtype))
+    x0p = jnp.zeros((i_pad, s_pad), dtype).at[:i_dim, :s_total].set(x0.T.astype(dtype))
+    off = jnp.asarray(word_offset, jnp.uint32)
+    offp = jnp.zeros((1, s_pad), jnp.uint32).at[0, :s_total].set(
+        jnp.broadcast_to(off, (s_total,)))
+
+    grid = (s_pad // s_block, n_steps // t_block)
+    words, state = pl.pallas_call(
+        functools.partial(_bits_kernel, t_block=t_block, unroll=unroll,
+                          activation=activation, compute_unit=compute_unit,
+                          i_dim=i_dim, h_dim=h_dim),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((i_pad, h_pad), lambda s, t: (0, 0)),    # w1
+            pl.BlockSpec((h_pad, 1), lambda s, t: (0, 0)),        # b1
+            pl.BlockSpec((h_pad, i_pad), lambda s, t: (0, 0)),    # w2
+            pl.BlockSpec((i_pad, 1), lambda s, t: (0, 0)),        # b2
+            pl.BlockSpec((i_pad, s_block), lambda s, t: (0, s)),  # x0
+            pl.BlockSpec((1, s_block), lambda s, t: (0, s)),      # offsets
+        ],
+        out_specs=[
+            pl.BlockSpec((t_block // 2, s_block), lambda s, t: (t, s)),
+            pl.BlockSpec((i_pad, s_block), lambda s, t: (0, s)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_rows, s_pad), jnp.uint32),
+            jax.ShapeDtypeStruct((i_pad, s_pad), dtype),
+        ],
+        interpret=interpret,
+    )(w1p, b1p, w2p, b2p, x0p, offp)
+
+    return words[:, :s_total], state[:i_dim, :s_total].T

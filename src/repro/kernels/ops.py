@@ -5,34 +5,75 @@ compiled on TPU) or the pure-jnp reference, with a uniform (S, I) API.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.chaotic_ann import chaotic_ann_pallas
+from repro.kernels.chaotic_ann import (chaotic_ann_bits_pallas,
+                                       chaotic_ann_pallas)
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+def _kernel_kwargs(config) -> Dict[str, object]:
+    """Kernel microarchitecture kwargs from a DSE ``Candidate``."""
+    return dict(s_block=config.s_block, t_block=config.t_block,
+                unroll=config.unroll, compute_unit=config.compute_unit)
 
 
 def chaotic_trajectory(params: Dict[str, jax.Array], x0: jax.Array, n_steps: int,
                        *, activation: str = "relu", backend: str = "auto",
                        s_block: int = 256, t_block: int = 128, unroll: int = 1,
-                       compute_unit: str = "vpu") -> jax.Array:
+                       compute_unit: str = "vpu", config=None) -> jax.Array:
     """Generate (n_steps, S, I) oscillator trajectories.
 
     backend: 'auto' | 'pallas' | 'pallas_interpret' | 'ref'.
     'auto' uses the compiled Pallas kernel on TPU and interpret mode on CPU.
+    config: optional ``repro.core.dse.Candidate`` — when given, overrides the
+    explicit (s_block, t_block, unroll, compute_unit) arguments so the DSE
+    output drives the kernel instantiation.
     """
     w1, b1, w2, b2 = params["w1"], params["b1"], params["w2"], params["b2"]
     if backend == "ref":
         return ref.chaotic_ann_ref(w1, b1, w2, b2, x0, n_steps, activation)
+    kw = dict(s_block=s_block, t_block=t_block, unroll=unroll,
+              compute_unit=compute_unit)
+    if config is not None:
+        kw = _kernel_kwargs(config)
     interpret = (backend == "pallas_interpret") or (backend == "auto" and not _ON_TPU)
     return chaotic_ann_pallas(
-        w1, b1, w2, b2, x0, n_steps=n_steps, s_block=s_block, t_block=t_block,
-        unroll=unroll, activation=activation, compute_unit=compute_unit,
-        interpret=interpret)
+        w1, b1, w2, b2, x0, n_steps=n_steps, activation=activation,
+        interpret=interpret, **kw)
+
+
+def chaotic_bits(params: Dict[str, jax.Array], x0: jax.Array, n_steps: int,
+                 word_offset=0, *, activation: str = "relu",
+                 backend: str = "auto", s_block: int = 256,
+                 t_block: int = 128, unroll: int = 1,
+                 compute_unit: str = "vpu",
+                 config=None) -> Tuple[jax.Array, jax.Array]:
+    """Fused PRNG draw: (n_steps // 2, S) uint32 words + (S, I) final state.
+
+    The pallas backends use the fused kernel (trajectory never reaches HBM
+    as floats); the 'ref' backend materializes the reference trajectory and
+    packs it with ``pack_words`` — both produce the same words for the same
+    float trajectory, which is the co-simulation contract tested in
+    tests/test_fused_bits.py.
+    """
+    w1, b1, w2, b2 = params["w1"], params["b1"], params["w2"], params["b2"]
+    if backend == "ref":
+        traj = ref.chaotic_ann_ref(w1, b1, w2, b2, x0, n_steps, activation)
+        return pack_words(traj, word_offset), traj[-1]
+    kw = dict(s_block=s_block, t_block=t_block, unroll=unroll,
+              compute_unit=compute_unit)
+    if config is not None:
+        kw = _kernel_kwargs(config)
+    interpret = (backend == "pallas_interpret") or (backend == "auto" and not _ON_TPU)
+    return chaotic_ann_bits_pallas(
+        w1, b1, w2, b2, x0, word_offset, n_steps=n_steps,
+        activation=activation, interpret=interpret, **kw)
 
 
 def uniform_from_trajectory(traj: jax.Array, scale_bits: int = 23) -> jax.Array:
@@ -43,24 +84,51 @@ def uniform_from_trajectory(traj: jax.Array, scale_bits: int = 23) -> jax.Array:
     return bits.astype(jnp.float32) / jnp.float32(2 ** 32)
 
 
-def bits_from_trajectory(traj: jax.Array) -> jax.Array:
-    """Extract uint32 words from chaotic samples.
+def _fold_low16(traj: jax.Array) -> jax.Array:
+    """(..., I) floats -> (...,) uint32: low mantissa bits, I folded in.
 
     Chaotic trajectories are smooth at the top of the mantissa but the low
     mantissa bits decorrelate in a few steps (positive Lyapunov exponent).
+    The I system dimensions are strongly coupled but their low bits differ;
+    XOR with odd shifts mixes them.
+
+    For f32 the low 16 bits of the bit pattern are taken.  Half-width
+    floats are bitcast at their own width and masked to their mantissa —
+    casting bf16 up to f32 first would leave the low 16 bits all zero and
+    emit a zero-entropy counter hash.
+    """
+    if traj.dtype.itemsize == 2:
+        u = jax.lax.bitcast_convert_type(traj, jnp.uint16).astype(jnp.uint32)
+        mask = (1 << jnp.finfo(traj.dtype).nmant) - 1
+        lo = u & jnp.uint32(mask)
+    else:
+        u = jax.lax.bitcast_convert_type(traj.astype(jnp.float32), jnp.uint32)
+        lo = u & jnp.uint32(0xFFFF)
+    folded = lo[..., 0]
+    for i in range(1, traj.shape[-1]):
+        folded = folded ^ (lo[..., i] << jnp.uint32(5 * i % 16))
+    return folded
+
+
+def _finalize_words(words: jax.Array) -> jax.Array:
+    """Final avalanche (xorshift-multiply, Murmur3 finalizer style)."""
+    words = words ^ (words >> jnp.uint32(16))
+    words = words * jnp.uint32(0x85EBCA6B)
+    words = words ^ (words >> jnp.uint32(13))
+    words = words * jnp.uint32(0xC2B2AE35)
+    words = words ^ (words >> jnp.uint32(16))
+    return words
+
+
+def bits_from_trajectory(traj: jax.Array) -> jax.Array:
+    """Extract uint32 words from chaotic samples.
+
     Following the standard chaotic-PRNG recipe, we take the low 16 mantissa
     bits of each f32 sample and pack two consecutive samples per u32 word,
     XOR-folded with a golden-ratio Weyl sequence to whiten residual bias.
     Input (..., I) floats; output (...,) uint32 (I folded in).
     """
-    x = traj.astype(jnp.float32)
-    u = jax.lax.bitcast_convert_type(x, jnp.uint32)
-    lo = u & jnp.uint32(0xFFFF)
-    # Fold the I system dimensions together (they are strongly coupled but
-    # their low bits differ; XOR with odd shifts mixes them).
-    folded = lo[..., 0]
-    for i in range(1, traj.shape[-1]):
-        folded = folded ^ (lo[..., i] << jnp.uint32(5 * i % 16))
+    folded = _fold_low16(traj)
     # Pack pairs along the leading (time) axis into 32-bit words.
     t = folded.shape[0] // 2
     words = (folded[0:2 * t:2] << jnp.uint32(16)) | folded[1:2 * t:2]
@@ -68,10 +136,22 @@ def bits_from_trajectory(traj: jax.Array) -> jax.Array:
     idx = jnp.arange(t, dtype=jnp.uint32)
     weyl = idx * jnp.uint32(0x9E3779B9)
     words = words ^ weyl.reshape((t,) + (1,) * (words.ndim - 1))
-    # Final avalanche (xorshift-multiply, Murmur3 finalizer style).
-    words = words ^ (words >> jnp.uint32(16))
-    words = words * jnp.uint32(0x85EBCA6B)
-    words = words ^ (words >> jnp.uint32(13))
-    words = words * jnp.uint32(0xC2B2AE35)
-    words = words ^ (words >> jnp.uint32(16))
-    return words
+    return _finalize_words(words)
+
+
+def pack_words(traj: jax.Array, word_offset=0) -> jax.Array:
+    """Offset-aware reference of the fused kernel's packing stage.
+
+    traj: (T, S, I) floats with T even.  word_offset: scalar or (S,) uint32,
+    the global word-row index of the first packed row (per stream).  Equal to
+    ``bits_from_trajectory(traj)`` when word_offset == 0; the offset is what
+    lets a chunked, resumable stream reproduce one long draw bit-exactly.
+    Returns (T // 2, S) uint32.
+    """
+    folded = _fold_low16(traj)
+    t = folded.shape[0] // 2
+    words = (folded[0:2 * t:2] << jnp.uint32(16)) | folded[1:2 * t:2]
+    off = jnp.asarray(word_offset, jnp.uint32)
+    idx = jnp.arange(t, dtype=jnp.uint32)[:, None] + off[None, ...]
+    words = words ^ (idx * jnp.uint32(0x9E3779B9))
+    return _finalize_words(words)

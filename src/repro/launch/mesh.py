@@ -8,18 +8,23 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes, devices):
+    # jax >= 0.5 takes an axis_types positional; 0.4.x does not have AxisType.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, (axis_type.Auto,) * len(axes),
+                             devices=devices)
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = 512 if multi_pod else 256
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types,
-                         devices=jax.devices()[:n])
+    return _make_mesh(shape, axes, jax.devices()[:n])
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh for subprocess-based distributed tests."""
     n = n_data * n_model
-    axis_types = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((n_data, n_model), ("data", "model"), axis_types,
-                         devices=jax.devices()[:n])
+    return _make_mesh((n_data, n_model), ("data", "model"), jax.devices()[:n])

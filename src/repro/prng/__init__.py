@@ -1,4 +1,6 @@
-from repro.prng.stream import ChaoticStream, default_stream
-from repro.prng.nist import run_nist_subset
+from repro.prng.stream import (ChaoticPRNG, ChaoticStream, StreamState,
+                               default_params, default_stream)
+from repro.prng.nist import cross_correlation, run_nist_subset
 
-__all__ = ["ChaoticStream", "default_stream", "run_nist_subset"]
+__all__ = ["ChaoticPRNG", "ChaoticStream", "StreamState", "cross_correlation",
+           "default_params", "default_stream", "run_nist_subset"]

@@ -141,6 +141,30 @@ ALL_TESTS = {
 }
 
 
+def cross_correlation(words_a: np.ndarray, words_b: np.ndarray,
+                      max_lag: int = 8) -> Dict[str, float]:
+    """Independence check between two bit streams (fork-quality gate).
+
+    For each lag in [0, max_lag], correlates the ±1 bit sequences; under
+    independence each normalized correlation is ~N(0, 1), so the min p-value
+    over lags is Bonferroni-corrected.  Returns {max_abs_corr, p_value}.
+    """
+    a = 2.0 * _to_bits(np.asarray(words_a)).astype(np.float64) - 1.0
+    b = 2.0 * _to_bits(np.asarray(words_b)).astype(np.float64) - 1.0
+    n = min(a.size, b.size)
+    a, b = a[:n], b[:n]
+    worst_z, worst_corr = 0.0, 0.0
+    for lag in range(max_lag + 1):
+        m = n - lag
+        corr = float(np.dot(a[:m], b[lag:lag + m])) / m
+        z = abs(corr) * math.sqrt(m)
+        if z > worst_z:
+            worst_z, worst_corr = z, corr
+    p = math.erfc(worst_z / math.sqrt(2.0))
+    return {"max_abs_corr": abs(worst_corr),
+            "p_value": min(1.0, p * (max_lag + 1))}
+
+
 def run_nist_subset(words: np.ndarray, alpha: float = 0.01) -> Dict[str, Dict[str, float]]:
     """Run all tests on uint32 words. Returns {test: {p_value, passed}}."""
     bits = _to_bits(np.asarray(words))

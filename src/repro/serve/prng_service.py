@@ -1,0 +1,240 @@
+"""Streaming chaotic-PRNG serving engine (the HENNC end product at scale).
+
+The paper's hardware engine serves one random stream from one synthesized
+core; here the TPU analogue serves *many named client streams from one
+kernel launch*: each client owns a contiguous block of lanes on the stream
+axis of the fused bits kernel, so a single ``ops.chaotic_bits`` launch
+advances every client at once (the batched-MAC-array idea, lifted to the
+serving layer).  Multi-device scale-out shards the stream pool across
+devices with ``distributed.sharding.shard_stream_pool`` — lanes are
+embarrassingly parallel, so the partition is exact.
+
+Determinism contract: a client's word stream depends only on (weights,
+seed, lanes_per_client, kernel config) — never on which other clients are
+registered, how requests interleave, or how the pool is sharded.  That
+holds because (a) every lane evolves independently in the kernel, (b) each
+client carries its own word-row (Weyl) counter, passed to the kernel as a
+per-lane offset vector, and (c) overdraw from batched launches is buffered
+per client, not dropped.  The same property makes the service resumable:
+``snapshot()`` captures pool state + counters + buffers.
+
+The kernel microarchitecture is not hand-picked: ``core.dse.select_config``
+(the paper's DSE, Eqs. 8-9) chooses (s_block, t_block, unroll,
+compute_unit) — the first place the explorer's output drives the hot path
+end to end.  It is tuned for one client's lane block and pinned at
+construction (not re-tuned as the pool grows), so a client's words never
+depend on when it joined; pass ``config=`` to override.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.prng.stream import _lineage_counter, _splitmix_seeds
+
+
+@dataclasses.dataclass(eq=False)
+class _Client:
+    name: str
+    slot: int                 # lane block index into the pool
+    seed: int
+    row: int = 0              # word rows emitted (per-lane Weyl counter)
+    buf: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, np.uint32))
+    pending: int = 0          # words requested but not yet delivered
+
+
+class PRNGService:
+    """Batches many named client streams onto one fused-kernel launch."""
+
+    def __init__(self, params: Dict[str, jax.Array], *,
+                 lanes_per_client: int = 128, burn_in: int = 16,
+                 activation: str = "relu", backend: str = "auto",
+                 config=None, mesh=None, mesh_axis: str = "data"):
+        self.params = {k: jnp.asarray(v) for k, v in params.items()}
+        self.dim = self.params["w1"].shape[0]
+        self.lanes_per_client = int(lanes_per_client)
+        self.burn_in = int(burn_in) + (int(burn_in) % 2)
+        self.activation = activation
+        self.backend = backend
+        if config is None:
+            from repro.core.dse import select_config
+            config = select_config(self.dim, self.params["w1"].shape[1],
+                                   s_total=self.lanes_per_client,
+                                   dtype=self.params["w1"].dtype)
+        self.config = config
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.clients: Dict[str, _Client] = {}
+        self.pool_x: Optional[jax.Array] = None       # (n_clients * L, I)
+        self.launches = 0                             # batched pool launches
+        # Words already served by a flush but not yet returned to their
+        # requester (a draw() for one client must not drop co-tenants'
+        # flushed requests).
+        self._outbox: Dict[str, np.ndarray] = {}
+
+    # -- registration -------------------------------------------------------
+
+    def register(self, name: str, seed: Optional[int] = None) -> None:
+        """Add a named stream: seed its lane block, burn it in, join pool.
+
+        With no explicit seed, one is derived from the client name so that
+        distinct clients never silently share a stream; pass the same
+        explicit seed to two clients only if identical streams are wanted.
+        """
+        if name in self.clients:
+            raise ValueError(f"client {name!r} already registered")
+        if seed is None:
+            seed = zlib.crc32(name.encode())
+        L = self.lanes_per_client
+        counter = _lineage_counter(seed, ())
+        x = _splitmix_seeds(jnp.asarray(counter, jnp.uint32), L, self.dim)
+        if self.burn_in:
+            # Dedicated small launch so a client's stream is independent of
+            # when it registered (burn-in never advances other clients).
+            _, x = ops.chaotic_bits(
+                self.params, x, self.burn_in, jnp.uint32(0),
+                activation=self.activation, backend=self.backend,
+                config=self.config)
+        slot = len(self.clients)
+        self.clients[name] = _Client(name=name, slot=slot, seed=seed)
+        self.pool_x = x if self.pool_x is None else jnp.concatenate(
+            [self.pool_x, x], axis=0)
+
+    # -- request/flush ------------------------------------------------------
+
+    def request(self, name: str, n_words: int) -> None:
+        """Queue a draw; all queued draws are served by one flush() launch."""
+        if n_words < 0:
+            raise ValueError(f"n_words must be >= 0, got {n_words}")
+        self.clients[name].pending += int(n_words)
+
+    def flush(self) -> Dict[str, np.ndarray]:
+        """One batched kernel launch serving every pending request.
+
+        Every client that needs words advances by the same number of word
+        rows (the max any pending request needs) with overdraw buffered, so
+        per-client sequences stay independent of batching.  Clients that
+        need nothing are *frozen* — their lanes are computed (they ride the
+        launch) but their state/counters are rolled back — so idle clients
+        neither advance nor accumulate buffer memory.
+        """
+        L = self.lanes_per_client
+        n_rows = 0
+        active: List[_Client] = []
+        for c in self._by_slot():
+            need = c.pending - len(c.buf)
+            if need > 0:
+                active.append(c)
+                n_rows = max(n_rows, -(-need // L))
+        # Whole time-blocks only: odd row counts would gcd-collapse the
+        # autotuned t_block inside the kernel (overdraw is buffered anyway).
+        q = max(1, self.config.t_block // 2)
+        n_rows = -(-n_rows // q) * q
+        if n_rows > 0:
+            offsets = np.repeat(
+                np.asarray([c.row for c in self._by_slot()], np.uint32), L)
+            old_x = self.pool_x
+            words = self._launch(n_rows, jnp.asarray(offsets))
+            for c in active:
+                mine = words[:, c.slot * L:(c.slot + 1) * L].reshape(-1)
+                c.buf = np.concatenate([c.buf, mine])
+                c.row += n_rows
+            active_slots = {c.slot for c in active}
+            idle_lanes = np.concatenate(
+                [np.arange(c.slot * L, (c.slot + 1) * L)
+                 for c in self._by_slot() if c.slot not in active_slots]
+            ) if len(active_slots) < len(self.clients) else None
+            if idle_lanes is not None:
+                self.pool_x = self.pool_x.at[idle_lanes].set(old_x[idle_lanes])
+        out: Dict[str, np.ndarray] = {}
+        for name, words in self._outbox.items():
+            out[name] = words
+        self._outbox = {}
+        for c in self.clients.values():
+            if c.pending:
+                served = c.buf[:c.pending]
+                out[c.name] = (np.concatenate([out[c.name], served])
+                               if c.name in out else served)
+                c.buf = c.buf[c.pending:]
+                c.pending = 0
+        return out
+
+    def draw(self, name: str, n_words: int) -> np.ndarray:
+        """Convenience: request + flush for one client.
+
+        The flush may also serve other clients' queued requests (and any
+        earlier request for this client); those words are parked in the
+        outbox and delivered by the next flush() — never dropped.
+        """
+        self.request(name, n_words)  # validates the client name
+        if n_words == 0:
+            return np.empty(0, np.uint32)
+        prior = self.clients[name].pending - n_words
+        out = self.flush()
+        mine = out.pop(name)
+        if prior > 0:                      # earlier request for this client
+            self._park(name, mine[:prior])
+            mine = mine[prior:]
+        for other, words in out.items():
+            self._park(other, words)
+        return mine
+
+    def _park(self, name: str, words: np.ndarray) -> None:
+        if words.size == 0:
+            return
+        self._outbox[name] = (np.concatenate([self._outbox[name], words])
+                              if name in self._outbox else words)
+
+    def _by_slot(self) -> List[_Client]:
+        return sorted(self.clients.values(), key=lambda c: c.slot)
+
+    def _launch(self, n_rows: int, offsets: jax.Array) -> np.ndarray:
+        """The one batched pool launch: (n_rows, S_pool) words."""
+        n_steps = 2 * n_rows
+
+        def run(x, off):
+            return ops.chaotic_bits(
+                self.params, x, n_steps, off, activation=self.activation,
+                backend=self.backend, config=self.config)
+
+        s_pool = self.pool_x.shape[0]
+        if self.mesh is not None and s_pool % self.mesh.shape[self.mesh_axis] == 0:
+            from repro.distributed.sharding import shard_stream_pool
+            run = shard_stream_pool(run, self.mesh, self.mesh_axis)
+        words, self.pool_x = run(self.pool_x, offsets)
+        self.launches += 1
+        return np.asarray(words)
+
+    # -- resumability -------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, object]:
+        """Serializable state: restore() continues every stream bit-exactly."""
+        return {
+            "pool_x": np.asarray(self.pool_x) if self.pool_x is not None else None,
+            "clients": {
+                c.name: {"slot": c.slot, "seed": c.seed, "row": c.row,
+                         "buf": c.buf.copy()}
+                for c in self.clients.values()
+            },
+            "launches": self.launches,
+            "outbox": {k: v.copy() for k, v in self._outbox.items()},
+        }
+
+    def restore(self, snap: Dict[str, object]) -> None:
+        self.pool_x = (jnp.asarray(snap["pool_x"])
+                       if snap["pool_x"] is not None else None)
+        self.clients = {
+            name: _Client(name=name, slot=st["slot"], seed=st["seed"],
+                          row=st["row"], buf=np.asarray(st["buf"], np.uint32))
+            for name, st in snap["clients"].items()
+        }
+        self.launches = int(snap["launches"])
+        self._outbox = {k: np.asarray(v, np.uint32)
+                        for k, v in snap.get("outbox", {}).items()}

@@ -1,0 +1,97 @@
+"""Drop-in fallback for ``hypothesis`` so tier-1 collection never breaks.
+
+When hypothesis is installed we re-export the real thing.  When it is not
+(the CI/container baseline), ``given`` degrades to a deterministic
+parametrized sweep: each strategy yields its boundary values plus seeded
+pseudo-random samples, and the test body runs over ``max_examples`` fixed
+combinations.  No shrinking, no database — just enough to keep the
+property tests meaningful and the suite importable everywhere.
+
+Usage in tests (replaces ``from hypothesis import ...``)::
+
+    from _propshim import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import random
+import zlib
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        """A deterministic example generator standing in for a strategy."""
+
+        def __init__(self, examples_fn):
+            self._examples_fn = examples_fn
+
+        def examples(self, rng: random.Random, n: int):
+            return self._examples_fn(rng, n)
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            def gen(rng, n):
+                edge = [min_value, max_value, (min_value + max_value) // 2]
+                rnd = [rng.randint(min_value, max_value) for _ in range(n)]
+                return (edge + rnd)[:max(n, 1)]
+            return _Strategy(gen)
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            def gen(rng, n):
+                edge = [min_value, max_value, (min_value + max_value) / 2.0]
+                rnd = [rng.uniform(min_value, max_value) for _ in range(n)]
+                return (edge + rnd)[:max(n, 1)]
+            return _Strategy(gen)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+
+            def gen(rng, n):
+                reps = -(-max(n, 1) // len(elements))
+                return (elements * reps)[:max(n, 1)]
+            return _Strategy(gen)
+
+        @staticmethod
+        def booleans():
+            return strategies.sampled_from([False, True])
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
+        def deco(fn):
+            fn._propshim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**named_strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — the wrapper must expose a ()-arg
+            # signature so pytest doesn't mistake strategy names for
+            # fixtures; and @settings may be applied *above* @given, so
+            # max_examples is read lazily at call time.
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_propshim_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                rng = random.Random(0xC0FFEE ^ zlib.crc32(fn.__name__.encode()))
+                names = sorted(named_strategies)
+                columns = [named_strategies[k].examples(rng, n) for k in names]
+                # zip the columns so every strategy's edge cases appear and
+                # combinations vary (not a full cartesian product).
+                cases = list(itertools.islice(
+                    zip(*(itertools.cycle(c) for c in columns)), n))
+                for case in cases:
+                    fn(*args, **dict(zip(names, case)), **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -1,8 +1,13 @@
 import os
+import pathlib
+import sys
 
 # Keep CPU device count at 1 for smoke tests/benches (the dry-run sets its
 # own 512-device flag in-process, in a subprocess when tested).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Make the tests dir importable (for _propshim) regardless of invocation dir.
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
 
 import jax  # noqa: E402
 

@@ -1,0 +1,60 @@
+"""Golden regression: regenerating the checked-in quickstart core must
+reproduce its source byte-for-byte.
+
+Pins three things at once: the codegen templates, the Candidate field
+surface they consume, and the DSE min-latency selection for the paper's
+3-8-3 Chen network.  SCALE/OFFSET are dataset statistics (inputs to
+codegen, float-sensitive across jax versions), so they are read back out
+of the golden file rather than recomputed.
+"""
+import pathlib
+import re
+
+import numpy as np
+import pytest
+
+from repro.core.codegen import generate_core
+from repro.core.dse import Candidate, select
+
+GOLDEN = pathlib.Path(__file__).parent.parent / "results" / "generated_cores" \
+    / "chen_383_quickstart"
+
+
+def _golden_scale_offset():
+    text = (GOLDEN / "__init__.py").read_text()
+    vals = {}
+    for name in ("SCALE", "OFFSET"):
+        m = re.search(rf"^{name} = np\.asarray\(\[(.*?)\]", text, re.M)
+        assert m, f"{name} not found in golden core"
+        vals[name] = [float(x) for x in re.findall(r"\(([-0-9.e+]+)\)", m.group(1))]
+    return vals["SCALE"], vals["OFFSET"]
+
+
+@pytest.fixture(scope="module")
+def regenerated(tmp_path_factory):
+    scale, offset = _golden_scale_offset()
+    cand = select(3, 8, "min_latency")
+    dummy = {"w1": np.zeros((3, 8), np.float32), "b1": np.zeros(8, np.float32),
+             "w2": np.zeros((8, 3), np.float32), "b2": np.zeros(3, np.float32)}
+    return generate_core("chen_383_quickstart",
+                         tmp_path_factory.mktemp("golden"),
+                         params=dummy, candidate=cand,
+                         scale=scale, offset=offset)
+
+
+def test_min_latency_selection_is_stable():
+    """The quickstart solution the DSE hands out (P=5, vpu, bf16)."""
+    cand = select(3, 8, "min_latency")
+    assert cand == Candidate(i_dim=3, h_dim=8, p=5, compute_unit="vpu",
+                             dtype_bytes=2, unroll=1, t_block=32)
+
+
+@pytest.mark.parametrize("fname", ["__init__.py", "testbench.py"])
+def test_generated_source_matches_golden(regenerated, fname):
+    golden = (GOLDEN / fname).read_text()
+    assert (regenerated / fname).read_text() == golden
+
+
+def test_generated_artifacts_complete(regenerated):
+    assert (regenerated / "weights.npz").exists()
+    assert (regenerated / "solution.json").exists()

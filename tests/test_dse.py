@@ -1,7 +1,7 @@
 """DSE estimation models (paper Eqs. 8-9, Figs. 3-5) and selection modes."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propshim import given, settings, strategies as st
 
 from repro.core.dse import (Candidate, CostModel, LatencyModel, VMEM_USABLE,
                             enumerate_candidates, measure_candidate,

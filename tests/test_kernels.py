@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propshim import given, settings, strategies as st
 
 from repro.kernels.chaotic_ann import chaotic_ann_pallas
 from repro.kernels.ops import bits_from_trajectory, chaotic_trajectory

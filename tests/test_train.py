@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propshim import given, settings, strategies as st
 
 from repro.configs.registry import get_smoke_config
 from repro.data.pipeline import SyntheticLMDataset
