@@ -1,0 +1,65 @@
+"""Cross-system oscillator-farm benchmark (BENCH_farm.json).
+
+One row per registered chaotic system: the registry-trained oscillator
+drawn through the fused ``ops.chaotic_bits`` path with that system's
+DSE-selected solution (the same Pareto point ``generate_farm`` freezes
+into the committed farm cores), reporting words/s.  Includes the 4-D
+hyperchaotic system, so the ``i_dim != 3`` padding path is measured, not
+just tested.  CPU interpret mode: numbers are functional-relative, not
+TPU performance; relative ordering across systems is still meaningful.
+"""
+import json
+import pathlib
+
+import jax.numpy as jnp
+
+from repro.core.chaotic import SYSTEMS
+from repro.core.dse import (CostModel, LatencyModel, measure_candidate,
+                            select)
+from repro.kernels.ops import chaotic_bits
+from repro.prng.stream import _splitmix_seeds, default_params
+
+from benchmarks.common import emit, time_fn
+
+
+def run_farm(n_streams: int = 256, n_steps: int = 1024, p: int = 1,
+             out_json: str | None = "BENCH_farm.json") -> dict:
+    lm, cm = LatencyModel.fit(), CostModel.fit()
+    table = {}
+    n_words = (n_steps // 2) * n_streams
+    for name in sorted(SYSTEMS):
+        params = {k: jnp.asarray(v) for k, v in default_params(system=name).items()}
+        i_dim, h_dim = params["w1"].shape
+        cand = select(i_dim, h_dim, "pareto", p=p,
+                      latency_model=lm, cost_model=cm)
+        dtype = jnp.dtype(cand.dtype_name)
+        x0 = _splitmix_seeds(jnp.uint32(1), n_streams, i_dim).astype(dtype)
+
+        def draw():
+            words, _ = chaotic_bits(params, x0, n_steps,
+                                    backend="pallas_interpret", config=cand)
+            return words
+
+        us = time_fn(draw, n_iters=2, warmup=1)
+        words_per_s = n_words / (us / 1e6)
+        table[name] = {
+            "i_dim": i_dim, "h_dim": h_dim,
+            "dtype": cand.dtype_name, "compute_unit": cand.compute_unit,
+            "s_block": cand.s_block, "t_block": cand.t_block,
+            "unroll": cand.unroll,
+            "words_per_s": words_per_s,
+            "modeled_samples_per_s": measure_candidate(cand)["samples_per_sec"],
+        }
+        emit(f"farm/{name}_words_per_s", us,
+             f"I={i_dim};H={h_dim};dtype={cand.dtype_name};"
+             f"words_per_s={words_per_s:.3e}")
+    res = {"config": {"n_streams": n_streams, "n_steps": n_steps,
+                      "pareto_p": p, "backend": "pallas_interpret"},
+           "systems": table}
+    if out_json:
+        pathlib.Path(out_json).write_text(json.dumps(res, indent=2))
+    return res
+
+
+if __name__ == "__main__":
+    run_farm()

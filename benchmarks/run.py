@@ -11,9 +11,9 @@ def main() -> None:
                     help="comma-separated subset (e.g. table1,fig5)")
     args = ap.parse_args()
 
-    from benchmarks import (fig3_design_space, fig4_cost_curves, fig5_pareto,
-                            table1_opcounts, table2_training, table3_dse,
-                            throughput)
+    from benchmarks import (farm, fig3_design_space, fig4_cost_curves,
+                            fig5_pareto, table1_opcounts, table2_training,
+                            table3_dse, throughput)
     suites = {
         "table1": table1_opcounts.run,
         "table2": table2_training.run,
@@ -23,6 +23,7 @@ def main() -> None:
         "fig5": fig5_pareto.run,
         "throughput": throughput.run,
         "throughput_fused": throughput.run_fused,
+        "farm": farm.run_farm,
     }
     selected = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

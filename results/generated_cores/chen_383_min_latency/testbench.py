@@ -18,12 +18,14 @@ def run(verbose=True):
     x0 = (jax.random.uniform(key, (core.S_BLOCK, core.I_DIM),
                              dtype=jnp.float32) - 0.5).astype(core.DTYPE)
 
-    # 1) kernel vs oracle, short horizon (pre-divergence window)
-    T = 8
+    # 1) kernel vs oracle, short horizon (pre-divergence window; bf16's
+    # ~8e-3 rounding is amplified ~2x/step by the chaotic map, so the
+    # comparable window is shorter than f32's)
+    T = 3 if core.DTYPE == jnp.bfloat16 else 8
     got = core.generate(x0, T)
     want = chaotic_ann_ref(p["w1"], p["b1"], p["w2"], p["b2"], x0, T,
                            core.ACTIVATION)
-    tol = 5e-2 if core.DTYPE == jnp.bfloat16 else 1e-4
+    tol = 1.5e-1 if core.DTYPE == jnp.bfloat16 else 1e-4
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), atol=tol)
 
@@ -32,16 +34,24 @@ def run(verbose=True):
     assert bool(jnp.all(jnp.isfinite(long))), "trajectory diverged"
     assert float(jnp.max(jnp.abs(long))) < 10.0, "trajectory left attractor box"
 
-    # 3) monobit randomness of emitted words
-    bits = core.generate_bits(x0, 2048)
-    ones = int(np.unpackbits(np.asarray(bits).view(np.uint8)).sum())
-    total = bits.size * 32
+    # 3) fused PRNG words are resumable: two chunked draws (state +
+    # word_offset threaded through) equal one long draw, bit for bit
+    words, _ = core.generate_bits(x0, 2048)
+    w_a, mid = core.generate_bits(x0, 1024)
+    w_b, _ = core.generate_bits(mid, 1024, word_offset=512)
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(w_a), np.asarray(w_b)], axis=0),
+        np.asarray(words))
+
+    # 4) monobit randomness of emitted words
+    ones = int(np.unpackbits(np.asarray(words).view(np.uint8)).sum())
+    total = words.size * 32
     frac = ones / total
     assert abs(frac - 0.5) < 0.01, f"monobit bias {frac}"
     if verbose:
         print(f"TESTBENCH PASS: maxerr(T={T})="
               f"{float(jnp.max(jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32)))):.3g}"
-              f" monobit={frac:.4f}")
+              f" monobit={frac:.4f} resumable=yes")
     return True
 
 

@@ -97,7 +97,29 @@ def _chua(alpha: float = 15.6, beta: float = 28.0,
                          x0=(0.7, 0.0, 0.0), dt=0.01)
 
 
-SYSTEMS = {s.name: s for s in (_chen(), _lorenz(), _rossler(), _chua())}
+def _hyperlorenz(sigma: float = 10.0, rho: float = 28.0,
+                 beta: float = 8.0 / 3.0, r: float = -1.0) -> ChaoticSystem:
+    """4-D hyperchaotic Lorenz (Wang 2007): Lorenz plus a feedback state w.
+
+    Hyperchaotic (two positive Lyapunov exponents) for r in about
+    [-1.52, -0.06].  The farm's only I=4 system — it exercises every
+    ``i_dim != 3`` padding path downstream (kernels, DSE, codegen, serving).
+    """
+
+    def f(x: Array) -> Array:
+        x1, x2, x3, x4 = x[..., 0], x[..., 1], x[..., 2], x[..., 3]
+        d1 = sigma * (x2 - x1) + x4             # 1 mul, 2 add
+        d2 = x1 * (rho - x3) - x2               # 1 mul, 2 add
+        d3 = x1 * x2 - beta * x3                # 2 mul, 1 add
+        d4 = -x2 * x3 + r * x4                  # 2 mul, 1 add
+        return jnp.stack([d1, d2, d3, d4], axis=-1)
+
+    return ChaoticSystem("hyperlorenz", 4, f, n_mul_dynamic=6, n_add_dynamic=6,
+                         x0=(1.0, 1.0, 1.0, 1.0), dt=0.005)
+
+
+SYSTEMS = {s.name: s for s in (_chen(), _lorenz(), _rossler(), _chua(),
+                               _hyperlorenz())}
 
 
 def get_system(name: str) -> ChaoticSystem:

@@ -86,6 +86,20 @@ class Candidate:
 # Ground-truth oracle ("post-synthesis measurement" analogue)
 # ---------------------------------------------------------------------------
 
+def _overhead_share(c: Candidate) -> float:
+    """Per-step control-overhead share of a candidate's (t_block, unroll).
+
+    Used both inside the cycle oracle below and as the tie-break of every
+    selection path — ``select`` modes, Pareto-front tie order, and the
+    ``select_config`` autotuner.  The Eq. 8/9 estimators are blind to these
+    two knobs (they normalize per P / per size), so one scoring rule here
+    keeps the DSE output consistent across the flow (a ``select``-emitted
+    core and a ``select_config``-tuned service agree on the solution).
+    """
+    return (GRID_STEP_OVERHEAD_CYCLES / c.t_block
+            + LOOP_ITER_OVERHEAD_CYCLES / c.unroll)
+
+
 def measure_candidate(c: Candidate) -> Dict[str, float]:
     """Microarchitectural cycle/byte accounting for one oscillator step of a
     full stream block, plus the VMEM working set.  Deterministic; this plays
@@ -117,9 +131,8 @@ def measure_candidate(c: Candidate) -> Dict[str, float]:
     hbm_bytes_per_step = c.i_pad * c.s_block * c.dtype_bytes
     memory_cycles = hbm_bytes_per_step / HBM_BYTES_PER_CYCLE
 
-    # Per-step share of control overheads.
-    overhead = (GRID_STEP_OVERHEAD_CYCLES / c.t_block
-                + LOOP_ITER_OVERHEAD_CYCLES / c.unroll)
+    # Per-step share of control overheads (shared with the DSE tie-break).
+    overhead = _overhead_share(c)
 
     cycles_per_step = max(compute_cycles, memory_cycles) + overhead
     # Paper-comparable "iteration latency": cycles for one oscillator update
@@ -239,11 +252,36 @@ def enumerate_candidates(i_dim: int, h_dim: int,
     return out
 
 
+def _objective_score(c: Candidate, i_dim: int, h_dim: int,
+                     lm: "LatencyModel", cm: "CostModel",
+                     objective: str) -> Tuple[float, ...]:
+    """The shared selection key: (primary estimate, objective-true ties).
+
+    Ties are broken in the objective's own currency: min_latency prefers
+    the lower analytic control-overhead share, lowest_cost prefers the
+    smaller *measured* VMEM working set (the estimator is blind to
+    (t_block, unroll) but the real footprint is not — out/hidden buffers
+    scale with both), with overhead as the final tie-break.
+    """
+    if objective == "min_latency":
+        primary = lm.predict(i_dim, h_dim, c.p, c.compute_unit, c.dtype_bytes)
+        return (primary, _overhead_share(c))
+    if objective == "lowest_cost":
+        primary = cm.predict(i_dim, h_dim, c.p, c.compute_unit, c.dtype_bytes)
+        return (primary, float(vmem_bytes(c)), _overhead_share(c))
+    raise ValueError(f"unknown objective {objective!r}")
+
+
 def pareto_front(cands: Sequence[Candidate],
                  latency_model: LatencyModel | None = None,
                  cost_model: CostModel | None = None) -> List[Tuple[Candidate, float, float]]:
     """Non-dominated (cost, latency) set, using the *estimators* (the paper's
-    DSE runs entirely on Eq. 8/9 estimates; synthesis happens after)."""
+    DSE runs entirely on Eq. 8/9 estimates; synthesis happens after).
+
+    Candidates tied on (cost, latency) — the estimators ignore (t_block,
+    unroll) — are represented by the lowest-overhead one (same tie-break as
+    ``select``/``select_config``), not by enumeration order.
+    """
     scored = []
     for c in cands:
         if latency_model is not None:
@@ -254,7 +292,8 @@ def pareto_front(cands: Sequence[Candidate],
             lat, cost = m["per_stream_latency_cycles"], m["vmem_bytes"]
         scored.append((c, cost, lat))
     front = []
-    for c, cost, lat in sorted(scored, key=lambda t: (t[1], t[2])):
+    for c, cost, lat in sorted(scored,
+                               key=lambda t: (t[1], t[2], _overhead_share(t[0]))):
         if all(not (fc <= cost and fl <= lat) for _, fc, fl in front):
             front.append((c, cost, lat))
     return front
@@ -268,10 +307,9 @@ def select(i_dim: int, h_dim: int, mode: str = "pareto", p: int | None = None,
     lm = latency_model or LatencyModel.fit()
     cm = cost_model or CostModel.fit()
     cands = enumerate_candidates(i_dim, h_dim)
-    if mode == "min_latency":
-        return min(cands, key=lambda c: lm.predict(i_dim, h_dim, c.p, c.compute_unit, c.dtype_bytes))
-    if mode == "lowest_cost":
-        return min(cands, key=lambda c: cm.predict(i_dim, h_dim, c.p, c.compute_unit, c.dtype_bytes))
+    if mode in ("min_latency", "lowest_cost"):
+        return min(cands,
+                   key=lambda c: _objective_score(c, i_dim, h_dim, lm, cm, mode))
     if mode == "pareto":
         front = pareto_front(cands, lm, cm)
         if p is not None:
@@ -329,18 +367,5 @@ def select_config(i_dim: int, h_dim: int, s_total: Optional[int] = None,
     if not cands:
         raise ValueError(f"no feasible candidate for I={i_dim} H={h_dim}")
     lm, cm = _fitted_models()
-
-    def score(c: Candidate) -> Tuple[float, float]:
-        if objective == "lowest_cost":
-            primary = cm.predict(i_dim, h_dim, c.p, c.compute_unit, c.dtype_bytes)
-        elif objective == "min_latency":
-            primary = lm.predict(i_dim, h_dim, c.p, c.compute_unit, c.dtype_bytes)
-        else:
-            raise ValueError(f"unknown objective {objective!r}")
-        # The estimators are blind to (t_block, unroll); break ties with the
-        # analytic control-overhead share per step.
-        overhead = (GRID_STEP_OVERHEAD_CYCLES / c.t_block
-                    + LOOP_ITER_OVERHEAD_CYCLES / c.unroll)
-        return (primary, overhead)
-
-    return min(cands, key=score)
+    return min(cands,
+               key=lambda c: _objective_score(c, i_dim, h_dim, lm, cm, objective))

@@ -76,12 +76,17 @@ def chaotic_bits(params: Dict[str, jax.Array], x0: jax.Array, n_steps: int,
         activation=activation, interpret=interpret, **kw)
 
 
-def uniform_from_trajectory(traj: jax.Array, scale_bits: int = 23) -> jax.Array:
+def uniform_from_trajectory(traj: jax.Array) -> jax.Array:
     """Map trajectory floats in [-1, 1]-ish range to uniform [0, 1) floats by
     keeping the chaotic low-order mantissa bits (the PRNG post-processing
-    stage of the paper's Fig. 1 oscillator-as-PRNG usage)."""
+    stage of the paper's Fig. 1 oscillator-as-PRNG usage).
+
+    Uses the top 24 bits so every representable output is strictly < 1.0
+    (dividing the full u32 by 2^32 rounds words near 2^32 up to exactly 1.0
+    in f32, breaking the half-open-interval contract).
+    """
     bits = bits_from_trajectory(traj)
-    return bits.astype(jnp.float32) / jnp.float32(2 ** 32)
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2 ** -24)
 
 
 def _fold_low16(traj: jax.Array) -> jax.Array:

@@ -1,6 +1,8 @@
 from repro.prng.stream import (ChaoticPRNG, ChaoticStream, StreamState,
-                               default_params, default_stream)
+                               default_params, default_stream,
+                               trained_oscillator)
 from repro.prng.nist import cross_correlation, run_nist_subset
 
 __all__ = ["ChaoticPRNG", "ChaoticStream", "StreamState", "cross_correlation",
-           "default_params", "default_stream", "run_nist_subset"]
+           "default_params", "default_stream", "run_nist_subset",
+           "trained_oscillator"]

@@ -1,0 +1,167 @@
+"""Heterogeneous oscillator farm: many generated cores, one serving API.
+
+The paper emits ONE hardware core per run; the serving-scale analogue is a
+*farm* of generated cores — different chaotic systems, system dimensions,
+dtypes, and DSE-autotuned kernel configs — multiplexed behind a single
+register/request/flush/snapshot surface.  Each core is backed by its own
+``PRNGService`` pool (its clients share one fused-kernel launch per flush),
+so a farm flush issues at most one launch per *core*, not per client, and
+every determinism/resumability guarantee of ``PRNGService`` carries over
+unchanged: a client's words are identical whether served standalone or
+through the farm.
+
+Cores come from two places:
+
+  * ``add_core(name, params, ...)`` — weights in hand (e.g. straight from
+    the registry ``repro.prng.stream.trained_oscillator``);
+  * ``from_generated(farm_dir)`` — a directory of ``generate_farm`` output:
+    each package's weights.npz + solution.json are loaded and the frozen
+    DSE solution (block shapes, compute unit, dtype) drives that core's
+    service config, closing the train -> DSE -> codegen -> serve loop.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, Iterable, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.prng_service import PRNGService
+
+
+class OscillatorFarm:
+    """Routes named clients to per-core ``PRNGService`` pools."""
+
+    def __init__(self):
+        self.services: Dict[str, PRNGService] = {}
+
+    # -- core management ----------------------------------------------------
+
+    def add_core(self, core: str, params, *, config=None, dtype=None,
+                 activation: str = "relu", lanes_per_client: int = 128,
+                 burn_in: int = 16, backend: str = "auto",
+                 mesh=None, mesh_axis: str = "data") -> PRNGService:
+        """Attach a core (one oscillator network) as a serving pool."""
+        if core in self.services:
+            raise ValueError(f"core {core!r} already attached")
+        svc = PRNGService(params, lanes_per_client=lanes_per_client,
+                          burn_in=burn_in, activation=activation,
+                          backend=backend, config=config, dtype=dtype,
+                          mesh=mesh, mesh_axis=mesh_axis)
+        self.services[core] = svc
+        return svc
+
+    @classmethod
+    def from_generated(cls, farm_dir: str | pathlib.Path,
+                       cores: Optional[Iterable[str]] = None,
+                       **service_kw) -> "OscillatorFarm":
+        """Build a farm from a ``generate_farm`` output directory.
+
+        Every subdirectory with weights.npz + solution.json becomes a core;
+        its frozen DSE solution is replayed as the service kernel config
+        (including the solution's dtype), so serving uses exactly the
+        microarchitecture the explorer picked for that system.  One
+        adjustment: the solution's stream block is clamped to one client's
+        lane block (the same sizing ``PRNGService`` autotunes for) — a
+        wider s_block would only compute padding lanes, and since lanes
+        evolve independently the clamp is bit-exact.
+        """
+        import dataclasses
+        from repro.core.dse import LANES, Candidate, _pad
+        reserved = {"config", "dtype", "activation"} & set(service_kw)
+        if reserved:
+            raise ValueError(
+                f"{sorted(reserved)} are replayed from each core's "
+                f"solution.json and cannot be overridden here; use "
+                f"add_core() to attach a core with custom values")
+        farm_dir = pathlib.Path(farm_dir)
+        farm = cls()
+        names = sorted(cores) if cores is not None else sorted(
+            p.name for p in farm_dir.iterdir()
+            if (p / "solution.json").exists() and (p / "weights.npz").exists())
+        if not names:
+            raise ValueError(f"no generated cores under {farm_dir}")
+        lanes = service_kw.get("lanes_per_client", 128)
+        p_cap = max(0, (_pad(lanes, LANES) // LANES).bit_length() - 1)
+        for name in names:
+            sol = json.loads((farm_dir / name / "solution.json").read_text())
+            cand = Candidate(**sol["candidate"])
+            cand = dataclasses.replace(cand, p=min(cand.p, p_cap))
+            params = dict(np.load(farm_dir / name / "weights.npz"))
+            farm.add_core(name, params, config=cand,
+                          dtype=jnp.dtype(cand.dtype_name),
+                          activation=sol.get("activation", "relu"),
+                          **service_kw)
+        return farm
+
+    @property
+    def cores(self) -> Tuple[str, ...]:
+        return tuple(self.services)
+
+    def _svc(self, core: str) -> PRNGService:
+        try:
+            return self.services[core]
+        except KeyError:
+            raise KeyError(f"unknown core {core!r}; have {sorted(self.services)}")
+
+    # -- client API (per-core routing) --------------------------------------
+
+    def register(self, core: str, client: str,
+                 seed: Optional[int] = None) -> None:
+        """Register a named client stream on one core's pool."""
+        self._svc(core).register(client, seed=seed)
+
+    def request(self, core: str, client: str, n_words: int) -> None:
+        """Queue a draw; served by the next farm-wide flush()."""
+        self._svc(core).request(client, n_words)
+
+    def flush(self) -> Dict[str, Dict[str, np.ndarray]]:
+        """Serve every pending request: one batched launch per active core.
+
+        Returns {core: {client: words}} for every client that received
+        words (pending requests and previously parked outbox words alike).
+        """
+        out: Dict[str, Dict[str, np.ndarray]] = {}
+        for core, svc in self.services.items():
+            served = svc.flush()
+            if served:
+                out[core] = served
+        return out
+
+    def draw(self, core: str, client: str, n_words: int) -> np.ndarray:
+        """Convenience: request + flush one client on one core.
+
+        Only that core's pool launches; other cores are untouched (their
+        pending requests keep waiting for the next farm-wide flush()).
+        """
+        return self._svc(core).draw(client, n_words)
+
+    @property
+    def launches(self) -> int:
+        return sum(svc.launches for svc in self.services.values())
+
+    # -- resumability -------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, object]:
+        """Farm-wide snapshot: every core pool, every client, in flight."""
+        return {"cores": {core: svc.snapshot()
+                          for core, svc in self.services.items()}}
+
+    def restore(self, snap: Dict[str, object]) -> None:
+        """Restore a snapshot() onto a farm with the SAME cores attached.
+
+        The core sets must match exactly: restoring onto a farm with extra
+        cores would leave those pools in their post-snapshot state (clients,
+        pending, outbox) — a silently mixed restore point.
+        """
+        cores = snap["cores"]
+        missing = set(cores) - set(self.services)
+        extra = set(self.services) - set(cores)
+        if missing or extra:
+            raise ValueError(
+                f"snapshot/farm core mismatch: snapshot-only {sorted(missing)}, "
+                f"farm-only {sorted(extra)}")
+        for core, sub in cores.items():
+            self.services[core].restore(sub)

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
-from repro.prng.stream import _lineage_counter, _splitmix_seeds
+from repro.prng.stream import _lineage_counter, _round_rows, _splitmix_seeds
 
 
 @dataclasses.dataclass(eq=False)
@@ -56,18 +56,21 @@ class PRNGService:
     def __init__(self, params: Dict[str, jax.Array], *,
                  lanes_per_client: int = 128, burn_in: int = 16,
                  activation: str = "relu", backend: str = "auto",
-                 config=None, mesh=None, mesh_axis: str = "data"):
+                 config=None, mesh=None, mesh_axis: str = "data",
+                 dtype=None):
         self.params = {k: jnp.asarray(v) for k, v in params.items()}
         self.dim = self.params["w1"].shape[0]
         self.lanes_per_client = int(lanes_per_client)
         self.burn_in = int(burn_in) + (int(burn_in) % 2)
         self.activation = activation
         self.backend = backend
+        # Kernel compute dtype: f32 unless serving a half-width (bf16) core.
+        self.dtype = jnp.dtype(dtype) if dtype is not None else jnp.float32
         if config is None:
             from repro.core.dse import select_config
             config = select_config(self.dim, self.params["w1"].shape[1],
                                    s_total=self.lanes_per_client,
-                                   dtype=self.params["w1"].dtype)
+                                   dtype=self.dtype)
         self.config = config
         self.mesh = mesh
         self.mesh_axis = mesh_axis
@@ -94,7 +97,8 @@ class PRNGService:
             seed = zlib.crc32(name.encode())
         L = self.lanes_per_client
         counter = _lineage_counter(seed, ())
-        x = _splitmix_seeds(jnp.asarray(counter, jnp.uint32), L, self.dim)
+        x = _splitmix_seeds(jnp.asarray(counter, jnp.uint32), L,
+                            self.dim).astype(self.dtype)
         if self.burn_in:
             # Dedicated small launch so a client's stream is independent of
             # when it registered (burn-in never advances other clients).
@@ -133,10 +137,9 @@ class PRNGService:
             if need > 0:
                 active.append(c)
                 n_rows = max(n_rows, -(-need // L))
-        # Whole time-blocks only: odd row counts would gcd-collapse the
-        # autotuned t_block inside the kernel (overdraw is buffered anyway).
-        q = max(1, self.config.t_block // 2)
-        n_rows = -(-n_rows // q) * q
+        # Whole time-blocks for big launches, next-pow2 for small ones
+        # (overdraw is buffered anyway; see stream._round_rows).
+        n_rows = _round_rows(n_rows, self.config.t_block) if n_rows else 0
         if n_rows > 0:
             offsets = np.repeat(
                 np.asarray([c.row for c in self._by_slot()], np.uint32), L)
@@ -215,12 +218,17 @@ class PRNGService:
     # -- resumability -------------------------------------------------------
 
     def snapshot(self) -> Dict[str, object]:
-        """Serializable state: restore() continues every stream bit-exactly."""
+        """Serializable state: restore() continues every stream bit-exactly.
+
+        ``pending`` (words requested but not yet flushed) is part of the
+        in-flight contract: a snapshot taken between request() and flush()
+        must not silently lose the queued draws on restore.
+        """
         return {
             "pool_x": np.asarray(self.pool_x) if self.pool_x is not None else None,
             "clients": {
                 c.name: {"slot": c.slot, "seed": c.seed, "row": c.row,
-                         "buf": c.buf.copy()}
+                         "buf": c.buf.copy(), "pending": c.pending}
                 for c in self.clients.values()
             },
             "launches": self.launches,
@@ -228,11 +236,12 @@ class PRNGService:
         }
 
     def restore(self, snap: Dict[str, object]) -> None:
-        self.pool_x = (jnp.asarray(snap["pool_x"])
+        self.pool_x = (jnp.asarray(snap["pool_x"], self.dtype)
                        if snap["pool_x"] is not None else None)
         self.clients = {
             name: _Client(name=name, slot=st["slot"], seed=st["seed"],
-                          row=st["row"], buf=np.asarray(st["buf"], np.uint32))
+                          row=st["row"], buf=np.asarray(st["buf"], np.uint32),
+                          pending=int(st.get("pending", 0)))
             for name, st in snap["clients"].items()
         }
         self.launches = int(snap["launches"])

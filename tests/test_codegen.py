@@ -49,8 +49,10 @@ def test_generated_core_importable_and_runs(tmp_path, trained):
         x0 = np.random.default_rng(0).uniform(-0.5, 0.5, (mod.S_BLOCK, 3)).astype(np.float32)
         traj = mod.generate(x0, 64)
         assert traj.shape == (64, mod.S_BLOCK, 3)
-        bits = mod.generate_bits(x0, 128)
-        assert bits.dtype == jax.numpy.uint32
+        words, state = mod.generate_bits(x0, 128)
+        assert words.dtype == jax.numpy.uint32
+        assert words.shape == (64, mod.S_BLOCK)
+        assert state.shape == (mod.S_BLOCK, 3)      # resume handle
     finally:
         sys.path.remove(str(tmp_path))
 

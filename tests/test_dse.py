@@ -96,6 +96,43 @@ def test_selection_modes(models):
     assert mid.p == 2
 
 
+def test_select_agrees_with_select_config(models):
+    """Regression: select() used to ignore (t_block, unroll) ties — the
+    estimators are blind to them — and return the worst enumeration-order
+    candidate, contradicting select_config's overhead tie-break.  Both now
+    share one scoring rule, so the DSE output is consistent everywhere."""
+    from repro.core.dse import _overhead_share, select_config
+    lm, cm = models
+    for i_dim, h_dim in ((3, 8), (4, 16)):
+        for objective in ("min_latency", "lowest_cost"):
+            a = select(i_dim, h_dim, objective, latency_model=lm, cost_model=cm)
+            b = select_config(i_dim, h_dim, s_total=a.s_block,
+                              dtype=a.dtype_bytes, objective=objective)
+            assert a == b, (objective, a, b)
+            twins = [t for t in enumerate_candidates(i_dim, h_dim)
+                     if (t.p, t.compute_unit, t.dtype_bytes) ==
+                        (a.p, a.compute_unit, a.dtype_bytes)]
+            if objective == "min_latency":
+                # latency ties break toward low control overhead
+                assert _overhead_share(a) == min(map(_overhead_share, twins))
+            else:
+                # cost ties break toward the smallest REAL working set
+                assert vmem_bytes(a) == min(map(vmem_bytes, twins))
+
+
+def test_pareto_front_tie_break_consistent(models):
+    """Front representatives for estimator-tied (cost, latency) points are
+    the lowest-overhead candidates, not enumeration-order accidents."""
+    from repro.core.dse import _overhead_share
+    lm, cm = models
+    front = pareto_front(enumerate_candidates(3, 8), lm, cm)
+    for c, _, _ in front:
+        twins = [t for t in enumerate_candidates(3, 8)
+                 if (t.p, t.compute_unit, t.dtype_bytes) ==
+                    (c.p, c.compute_unit, c.dtype_bytes)]
+        assert _overhead_share(c) == min(_overhead_share(t) for t in twins)
+
+
 @settings(max_examples=30, deadline=None)
 @given(i=st.integers(2, 8), h=st.integers(4, 64), p=st.integers(0, 5),
        unit=st.sampled_from(["vpu", "mxu"]), dt=st.sampled_from([2, 4]))

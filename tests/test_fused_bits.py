@@ -103,6 +103,20 @@ def test_pack_words_matches_bits_from_trajectory():
                                   np.asarray(base[:, 0]))  # offset 0 column
 
 
+def test_uniform_from_trajectory_signature_and_range():
+    """Regression: the dead (ignored) `scale_bits` parameter is gone — the
+    signature no longer advertises a knob that does nothing."""
+    import inspect
+    from repro.kernels import ops
+    assert "scale_bits" not in inspect.signature(
+        ops.uniform_from_trajectory).parameters
+    w1, b1, w2, b2, x0 = _mk(3, 8, 64)
+    traj = chaotic_ann_ref(w1, b1, w2, b2, x0, 32)
+    u = np.asarray(ops.uniform_from_trajectory(traj))
+    assert u.shape == (16, 64)
+    assert u.min() >= 0.0 and u.max() < 1.0
+
+
 def test_fused_backend_dispatch_and_validation():
     w1, b1, w2, b2, x0 = _mk(3, 8, 128)
     params = {"w1": w1, "b1": b1, "w2": w2, "b2": b2}

@@ -84,6 +84,47 @@ def test_snapshot_restore_resumes_bit_exactly(params):
     assert svc2.launches == svc.launches  # both did one post-snapshot launch
 
 
+def test_snapshot_between_request_and_flush_keeps_pending(params):
+    """Regression: a snapshot taken after request() but before flush() must
+    carry the queued draw — restore() used to silently drop it."""
+    svc = _service(params)
+    svc.register("a", seed=1)
+    svc.register("b", seed=2)
+    svc.draw("a", 120)
+    svc.request("a", 250)                  # in flight
+    svc.request("b", 75)
+    snap = svc.snapshot()
+    out_a = svc.flush()
+
+    svc2 = _service(params)
+    svc2.restore(snap)
+    assert svc2.clients["a"].pending == 250
+    assert svc2.clients["b"].pending == 75
+    out_b = svc2.flush()
+    assert set(out_a) == set(out_b) == {"a", "b"}
+    for name in out_a:
+        np.testing.assert_array_equal(out_a[name], out_b[name])
+
+
+def test_snapshot_restores_outbox_and_pending_roundtrip(params):
+    """draw() for one client parks a co-tenant's served words in the outbox;
+    snapshot/restore must preserve both outbox and pending invariants."""
+    svc = _service(params)
+    svc.register("a", seed=1)
+    svc.register("b", seed=2)
+    svc.request("a", 300)
+    svc.draw("b", 200)                     # a's words now parked in outbox
+    snap = svc.snapshot()
+    svc2 = _service(params)
+    svc2.restore(snap)
+    a1 = svc.flush()["a"]
+    a2 = svc2.flush()["a"]
+    np.testing.assert_array_equal(a1, a2)
+    solo = _service(params)
+    solo.register("a", seed=1)
+    np.testing.assert_array_equal(a1, solo.draw("a", 300))
+
+
 def test_register_duplicate_raises(params):
     svc = _service(params)
     svc.register("a", seed=0)
@@ -144,6 +185,21 @@ def test_draw_after_own_request_returns_only_new_words(params):
     whole = solo.draw("a", 250)
     np.testing.assert_array_equal(got, whole[150:])
     np.testing.assert_array_equal(svc.flush()["a"], whole[:150])
+
+
+def test_small_draw_does_not_pay_full_time_block(params):
+    """A 10-word request must not compute/buffer a whole autotuned time
+    block (t_block=256 would mean 128 rows = 16k words for one client);
+    small launches shrink to the next power of two of the needed rows."""
+    svc = _service(params)
+    svc.register("a", seed=1)
+    got = svc.draw("a", 10)
+    assert got.size == 10
+    assert len(svc.clients["a"].buf) <= 4 * svc.lanes_per_client - 10
+    # and the small-draw stream still matches a large-draw replay
+    solo = _service(params)
+    solo.register("a", seed=1)
+    np.testing.assert_array_equal(got, solo.draw("a", 2000)[:10])
 
 
 def test_zero_and_negative_draws(params):

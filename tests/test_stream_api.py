@@ -2,6 +2,7 @@
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -94,6 +95,43 @@ def test_fork_is_counter_based(params):
         wb, _ = eng.next_words(b, 600)
         np.testing.assert_array_equal(wa, wb)
     assert _lineage_counter(9, (0,)) != _lineage_counter(9, (1,))
+
+
+def test_draw_words_drops_full_burn_in(params):
+    """Regression: draw_words generates 2*burn_in burn-in steps and must
+    drop ALL of them (a precedence bug kept half: `2 * burn_in // 2`),
+    otherwise early words come from a seed-correlated prefix."""
+    from repro.kernels import ops
+    from repro.prng.stream import _splitmix_seeds, draw_words
+    n_streams, burn_in, n_words = 64, 8, 500
+    got = draw_words(params["w1"], params["b1"], params["w2"], params["b2"],
+                     3, n_words, n_streams, burn_in, "relu", "pallas_interpret")
+    x0 = _splitmix_seeds(jnp.asarray(3, jnp.uint32), n_streams, 3)
+    steps = 2 * (-(-n_words // n_streams)) + 2 * burn_in
+    traj = ops.chaotic_trajectory(params, x0, steps,
+                                  activation="relu",
+                                  backend="pallas_interpret")
+    want = ops.bits_from_trajectory(traj[2 * burn_in:]).reshape(-1)[:n_words]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_weight_registry_disk_cache(tmp_path, monkeypatch):
+    """trained_oscillator caches per system on disk and reloads the exact
+    bundle (the per-system registry behind the farm)."""
+    import repro.prng.stream as stream
+    monkeypatch.setenv("REPRO_WEIGHTS_DIR", str(tmp_path))
+    monkeypatch.setattr(stream, "_WEIGHTS_CACHE", {})
+    monkeypatch.setattr(stream, "_TRAIN_EPOCHS", 2)      # speed: cache, not R2
+    monkeypatch.setattr(stream, "_TRAIN_SAMPLES", 2000)
+    a = stream.trained_oscillator("rossler")
+    assert (tmp_path / "rossler.npz").exists()
+    assert set(a) >= {"w1", "b1", "w2", "b2", "scale", "offset"}
+    monkeypatch.setattr(stream, "_WEIGHTS_CACHE", {})    # force disk reload
+    b = stream.trained_oscillator("rossler")
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    with pytest.raises(KeyError):
+        stream.trained_oscillator("no_such_system")
 
 
 def test_chaotic_stream_wrapper_compat(params):
