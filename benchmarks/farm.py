@@ -1,34 +1,53 @@
 """Cross-system oscillator-farm benchmark (BENCH_farm.json).
 
-One row per registered chaotic system: the registry-trained oscillator
-drawn through the fused ``ops.chaotic_bits`` path with that system's
-DSE-selected solution (the same Pareto point ``generate_farm`` freezes
-into the committed farm cores), reporting words/s.  Includes the 4-D
-hyperchaotic system, so the ``i_dim != 3`` padding path is measured, not
-just tested.  CPU interpret mode: numbers are functional-relative, not
-TPU performance; relative ordering across systems is still meaningful.
+Two sections:
+
+* ``systems`` — one row per registered chaotic system: the registry-trained
+  oscillator drawn through the fused ``ops.chaotic_bits`` path with that
+  system's DSE-selected solution (the same Pareto point ``generate_farm``
+  freezes into the committed farm cores), reporting words/s.  Each row also
+  carries the NIST-subset quarantine verdict for the core's serving dtype
+  (``repro.prng.quality``): a quarantined system ships in the farm but a
+  rollout can exclude it.
+
+* ``gang`` — the launch-overhead killer measured end to end: the largest
+  gang-compatible core group (same i_dim/h_dim/dtype/config — the four 3-D
+  systems) served through ``OscillatorFarm`` with gang scheduling ON vs
+  OFF, at two operating points: ``coalesced`` (small tenant flushes, the
+  traffic gangs exist for) and ``bulk`` (full time-block flushes).  Words
+  delivered are verified bit-identical between the two modes before any
+  timing; launches per flush and gang dispatch-cache misses are reported
+  alongside words/s.
+
+CPU interpret mode: numbers are functional-relative, not TPU performance;
+relative ordering (and the gang-vs-per-core ratio) is still meaningful.
 """
 import json
 import pathlib
+import time
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.chaotic import SYSTEMS
 from repro.core.dse import (CostModel, LatencyModel, measure_candidate,
                             select)
 from repro.kernels.ops import chaotic_bits
 from repro.prng.stream import _splitmix_seeds, default_params
+from repro.serve.farm import OscillatorFarm, _compat_key
 
 from benchmarks.common import emit, time_fn
 
+LANES_PER_CLIENT = 128
 
-def run_farm(n_streams: int = 256, n_steps: int = 1024, p: int = 1,
-             out_json: str | None = "BENCH_farm.json") -> dict:
-    lm, cm = LatencyModel.fit(), CostModel.fit()
+
+def _system_rows(n_streams, n_steps, p, lm, cm, nist_words):
+    """Per-system fused-draw words/s + quarantine verdicts."""
     table = {}
     n_words = (n_steps // 2) * n_streams
     for name in sorted(SYSTEMS):
-        params = {k: jnp.asarray(v) for k, v in default_params(system=name).items()}
+        params = {k: jnp.asarray(v)
+                  for k, v in default_params(system=name).items()}
         i_dim, h_dim = params["w1"].shape
         cand = select(i_dim, h_dim, "pareto", p=p,
                       latency_model=lm, cost_model=cm)
@@ -42,6 +61,13 @@ def run_farm(n_streams: int = 256, n_steps: int = 1024, p: int = 1,
 
         us = time_fn(draw, n_iters=2, warmup=1)
         words_per_s = n_words / (us / 1e6)
+        if nist_words:
+            from repro.prng.quality import nist_gate
+            gate = nist_gate(name, cand.dtype_name, n_words=nist_words,
+                             backend="pallas_interpret")
+            quarantined, failed = gate["quarantined"], gate["failed_tests"]
+        else:
+            quarantined, failed = None, None      # smoke mode: not gated
         table[name] = {
             "i_dim": i_dim, "h_dim": h_dim,
             "dtype": cand.dtype_name, "compute_unit": cand.compute_unit,
@@ -49,17 +75,139 @@ def run_farm(n_streams: int = 256, n_steps: int = 1024, p: int = 1,
             "unroll": cand.unroll,
             "words_per_s": words_per_s,
             "modeled_samples_per_s": measure_candidate(cand)["samples_per_sec"],
+            "quarantined": quarantined,
+            "nist_failed_tests": failed,
         }
         emit(f"farm/{name}_words_per_s", us,
              f"I={i_dim};H={h_dim};dtype={cand.dtype_name};"
-             f"words_per_s={words_per_s:.3e}")
+             f"words_per_s={words_per_s:.3e};quarantined={quarantined}")
+    return table
+
+
+def _compatible_group(p, lm, cm):
+    """Largest set of systems sharing one gang-compatibility key."""
+    groups = {}
+    for name in sorted(SYSTEMS):
+        params = default_params(system=name)
+        i_dim, h_dim = params["w1"].shape
+        cand = select(i_dim, h_dim, "pareto", p=p,
+                      latency_model=lm, cost_model=cm)
+        groups.setdefault((i_dim, h_dim, cand), []).append(name)
+    (i_dim, h_dim, cand), members = max(groups.items(),
+                                        key=lambda kv: len(kv[1]))
+    return members, cand
+
+
+def _build_farm(group, cand, n_clients, gang):
+    farm = OscillatorFarm(gang=gang)
+    for name in group:
+        farm.add_core(name, default_params(system=name), config=cand,
+                      dtype=jnp.dtype(cand.dtype_name),
+                      lanes_per_client=LANES_PER_CLIENT,
+                      backend="pallas_interpret")
+        for j in range(n_clients):
+            farm.register(name, f"c{j}", seed=100 + j)
+    return farm
+
+
+def _flush_once(farm, group, n_clients, n_words):
+    for name in group:
+        for j in range(n_clients):
+            farm.request(name, f"c{j}", n_words)
+    return farm.flush()
+
+
+def _gang_section(n_streams, p, lm, cm, smoke):
+    group, cand = _compatible_group(p, lm, cm)
+    n_clients = max(1, n_streams // LANES_PER_CLIENT)
+
+    # Bit-identity gate before any timing: same traffic, both launch modes.
+    check_words = 16 * LANES_PER_CLIENT + 37
+    farms = {g: _build_farm(group, cand, n_clients, g) for g in (True, False)}
+    outs = {g: _flush_once(farms[g], group, n_clients, check_words)
+            for g in (True, False)}
+    for core in outs[True]:
+        for client in outs[True][core]:
+            np.testing.assert_array_equal(outs[True][core][client],
+                                          outs[False][core][client])
+    key = _compat_key(farms[True].services[group[0]])
+
+    protocols = {"coalesced": 16}
+    if not smoke:
+        protocols["bulk"] = cand.t_block // 2
+    n_iters = 3 if smoke else 9
+    result = {
+        "group": group,
+        "compat_key": {"i_dim": cand.i_dim, "h_dim": cand.h_dim,
+                       "dtype": cand.dtype_name,
+                       "compute_unit": cand.compute_unit,
+                       "s_block": cand.s_block, "t_block": cand.t_block,
+                       "unroll": cand.unroll,
+                       "full_key": [str(x) for x in key]},
+        "n_streams_per_core": n_clients * LANES_PER_CLIENT,
+        "bit_identical": True,
+        "protocols": {},
+    }
+    for proto, rows in protocols.items():
+        n_words = rows * LANES_PER_CLIENT
+        words_per_flush = len(group) * n_clients * n_words
+        stats = {}
+        for gang in (True, False):
+            farm = _build_farm(group, cand, n_clients, gang)
+            _flush_once(farm, group, n_clients, n_words)   # compile
+            _flush_once(farm, group, n_clients, n_words)
+            l0 = farm.launches
+            ts = []
+            for _ in range(n_iters):
+                t0 = time.perf_counter()
+                _flush_once(farm, group, n_clients, n_words)
+                ts.append(time.perf_counter() - t0)
+            ts.sort()
+            dt = ts[len(ts) // 2]
+            stats[gang] = {
+                "words_per_s": words_per_flush / dt,
+                "ms_per_flush": dt * 1e3,
+                "launches_per_flush": (farm.launches - l0) / (n_iters + 0.0),
+            }
+            if gang:
+                stats[gang]["dispatch_misses"] = farm.dispatch_misses
+        speedup = (stats[True]["words_per_s"] /
+                   stats[False]["words_per_s"])
+        result["protocols"][proto] = {
+            "rows_per_client_flush": rows,
+            "words_per_flush": words_per_flush,
+            "gang": stats[True],
+            "per_core": stats[False],
+            "speedup": speedup,
+        }
+        emit(f"farm/gang_{proto}", stats[True]["ms_per_flush"] * 1e3,
+             f"group={len(group)};speedup={speedup:.2f}x;"
+             f"gang_words_per_s={stats[True]['words_per_s']:.3e};"
+             f"per_core_words_per_s={stats[False]['words_per_s']:.3e}")
+    result["speedup"] = max(pr["speedup"]
+                            for pr in result["protocols"].values())
+    return result
+
+
+def run_farm(n_streams: int = 256, n_steps: int = 1024, p: int = 1,
+             out_json: str | None = "BENCH_farm.json",
+             smoke: bool = False, nist_words: int = 20_000) -> dict:
+    lm, cm = LatencyModel.fit(), CostModel.fit()
+    if smoke:
+        n_steps = min(n_steps, 256)
+        nist_words = 0
+    table = _system_rows(n_streams, n_steps, p, lm, cm, nist_words)
+    gang = _gang_section(n_streams, p, lm, cm, smoke)
     res = {"config": {"n_streams": n_streams, "n_steps": n_steps,
-                      "pareto_p": p, "backend": "pallas_interpret"},
-           "systems": table}
+                      "pareto_p": p, "backend": "pallas_interpret",
+                      "smoke": smoke},
+           "systems": table,
+           "gang": gang}
     if out_json:
         pathlib.Path(out_json).write_text(json.dumps(res, indent=2))
     return res
 
 
 if __name__ == "__main__":
-    run_farm()
+    import sys
+    run_farm(smoke="--smoke" in sys.argv)

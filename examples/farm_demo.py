@@ -5,7 +5,9 @@
   2. DSE-select a solution per system and emit a core per system
      (``generate_farm``) — including the 4-D hyperchaotic Lorenz;
   3. serve all cores behind one ``OscillatorFarm``: per-core routing,
-     one fused-kernel launch per active core per flush;
+     with compatible cores GANG-SCHEDULED into one stacked-weight launch
+     per flush (the four 3-D cores share a launch; the 4-D hyperchaotic
+     core launches alone);
   4. verify farm transparency (standalone service == farmed service) and
      farm-wide snapshot/restore with requests in flight.
 
@@ -40,7 +42,7 @@ def main():
               f"{'bf16' if c['dtype_bytes'] == 2 else 'f32'} "
               f"t_block={c['t_block']} unroll={c['unroll']}")
 
-    print("\n=== 3. one farm, per-core routing, batched launches ===")
+    print("\n=== 3. one farm, gang-scheduled launches ===")
     farm = OscillatorFarm.from_generated(out)
     for core in farm.cores:
         farm.register(core, "alice", seed=11)
@@ -49,7 +51,12 @@ def main():
         farm.request(core, "alice", 1000)
         farm.request(core, "bob", 500)
     served = farm.flush()
-    assert farm.launches == len(farm.cores)     # one launch per core
+    # one stacked launch for the compatible 3-D group + one solo launch
+    # for the incompatible 4-D core — not one launch per core
+    assert farm.launches == 2, farm.launches
+    assert farm.gang_launches == 1
+    print(f"  {len(farm.cores)} cores served in {farm.launches} launches "
+          f"({farm.gang_launches} gang)")
     for core in sorted(served):
         w = served[core]["alice"]
         ones = np.unpackbits(w.view(np.uint8)).mean()
@@ -78,7 +85,8 @@ def main():
     print(f"  chen/bob: {a.size} queued words survived snapshot/restore")
 
     print(f"\n{len(farm.cores)} cores ({sum(1 for _ in farm.cores)} systems, "
-          f"incl. one 4-D hyperchaotic), {farm.launches} launches total.")
+          f"incl. one 4-D hyperchaotic), {farm.launches} launches total "
+          f"({farm.gang_launches} gang-scheduled).")
     print("farm demo complete.")
 
 

@@ -352,3 +352,363 @@ def chaotic_ann_bits_pallas(w1, b1, w2, b2, x0, word_offset=0, *,
     )(w1p, b1p, w2p, b2p, x0p, offp)
 
     return words[:, :s_total], state[:i_dim, :s_total].T
+
+
+# ---------------------------------------------------------------------------
+# Gang-scheduled variant: C compatible networks, ONE launch.
+# ---------------------------------------------------------------------------
+
+
+def _gang_bits_kernel(cmap_ref, w1_ref, b1_ref, w2_ref, b2_ref, x0_ref,
+                      off_ref, words_ref, state_ref, *,
+                      t_block: int, unroll: int, activation: str,
+                      compute_unit: str, i_dim: int, h_dim: int):
+    """One (lane-block, time-block) grid cell of the gang PRNG kernel.
+
+    Identical math to ``_bits_kernel`` (state output doubles as the VMEM
+    carry across the time grid); the only difference is that the weight
+    refs carry a leading length-1 core axis whose block was DMA'd from slab
+    ``core_map[g]`` of the stacked weights (scalar-prefetch index map), so
+    every lane block computes its own network in the same launch.
+    ``cmap_ref`` is the prefetched map itself — consumed by the index maps,
+    unused in the body.
+    """
+    del cmap_ref
+    t = pl.program_id(1)
+    rows_per_block = t_block // 2
+
+    @pl.when(t == 0)
+    def _init():
+        state_ref[...] = x0_ref[...]
+
+    one_step = _make_step(w1_ref[0], b1_ref[0], w2_ref[0], b2_ref[0],
+                          activation=activation, compute_unit=compute_unit,
+                          i_dim=i_dim, h_dim=h_dim)
+    offs = off_ref[...]
+
+    def one_row(x, r):
+        x1 = one_step(x)
+        x2 = one_step(x1)
+        word = (_fold16(x1, i_dim) << jnp.uint32(16)) | _fold16(x2, i_dim)
+        row_idx = offs + (t * rows_per_block + r).astype(jnp.uint32)
+        word = word ^ (row_idx * jnp.uint32(_GOLDEN))
+        words_ref[pl.ds(r, 1), :] = _finalize(word)
+        return x2
+
+    def chunk(x, base):
+        for u in range(unroll):
+            x = one_row(x, base + u)
+        return x
+
+    x = state_ref[...]
+    n_chunks = rows_per_block // unroll
+    if n_chunks == 1:
+        x = chunk(x, 0)
+    else:
+        x = jax.lax.fori_loop(0, n_chunks,
+                              lambda c, x: chunk(x, c * unroll), x)
+    state_ref[...] = x
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_steps", "s_block", "t_block", "unroll", "activation",
+                     "compute_unit", "interpret"),
+)
+def chaotic_ann_gang_bits_pallas(w1, b1, w2, b2, x0, core_map, word_offset=0,
+                                 *, n_steps: int, s_block: int = 256,
+                                 t_block: int = 128, unroll: int = 1,
+                                 activation: str = "relu",
+                                 compute_unit: str = "vpu",
+                                 interpret: bool = False):
+    """Gang-scheduled fused PRNG: C stacked networks, one kernel launch.
+
+    The farm's gang path: weights carry a leading core axis and the pooled
+    stream axis is divided into ``s_block``-lane blocks, each homogeneous in
+    core.  ``core_map[g]`` names the weight slab of lane block ``g``; it is
+    scalar-prefetched so the BlockSpec index maps route each grid cell's
+    weight DMA to its own slab (the grouped/ragged-batching trick of MaxText
+    -style serving stacks).  Per lane the computation is exactly
+    ``chaotic_ann_bits_pallas`` with that lane's core — lanes evolve
+    independently, so gang words/states are bit-identical to C per-core
+    launches.
+
+    Args:
+      w1 (C, I, H), b1 (C, H), w2 (C, H, I), b2 (C, I): stacked weights.
+      x0 (S, I): concatenated stream pool; S must equal
+        ``len(core_map) * s_block`` (pad each member pool to an s_block
+        multiple before concatenating).
+      core_map: (n_blocks,) int array, values in [0, C).
+      word_offset: scalar or (S,) uint32 per-lane word-row offsets.
+      n_steps: steps to run; must be even (2 samples -> 1 word row).
+    Returns:
+      words: (n_steps // 2, S) uint32 word rows,
+      final_state: (S, I) oscillator state after n_steps.
+    """
+    if n_steps < 2 or n_steps % 2:
+        raise ValueError(f"n_steps must be even and >= 2, got {n_steps}")
+    n_cores, i_dim, h_dim = w1.shape
+    s_total = x0.shape[0]
+    n_blocks = core_map.shape[0]
+    if s_total != n_blocks * s_block:
+        raise ValueError(
+            f"pool of {s_total} lanes != {n_blocks} core-map blocks x "
+            f"s_block {s_block}; pad each member pool to an s_block multiple")
+    dtype = x0.dtype
+    t_block, unroll = _bits_blocks(n_steps, t_block, unroll)
+
+    i_pad = _pad_to(max(i_dim, 1), SUBLANES)
+    h_pad = _pad_to(max(h_dim, 1), SUBLANES)
+    n_rows = n_steps // 2
+
+    w1p = jnp.zeros((n_cores, i_pad, h_pad), dtype
+                    ).at[:, :i_dim, :h_dim].set(w1.astype(dtype))
+    b1p = jnp.zeros((n_cores, h_pad, 1), dtype
+                    ).at[:, :h_dim, 0].set(b1.astype(dtype))
+    w2p = jnp.zeros((n_cores, h_pad, i_pad), dtype
+                    ).at[:, :h_dim, :i_dim].set(w2.astype(dtype))
+    b2p = jnp.zeros((n_cores, i_pad, 1), dtype
+                    ).at[:, :i_dim, 0].set(b2.astype(dtype))
+    x0p = jnp.zeros((i_pad, s_total), dtype
+                    ).at[:i_dim, :].set(x0.T.astype(dtype))
+    off = jnp.asarray(word_offset, jnp.uint32)
+    offp = jnp.broadcast_to(off, (s_total,)).reshape(1, s_total)
+    cmap = jnp.asarray(core_map, jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks, n_steps // t_block),
+        in_specs=[
+            pl.BlockSpec((1, i_pad, h_pad), lambda g, t, m: (m[g], 0, 0)),
+            pl.BlockSpec((1, h_pad, 1), lambda g, t, m: (m[g], 0, 0)),
+            pl.BlockSpec((1, h_pad, i_pad), lambda g, t, m: (m[g], 0, 0)),
+            pl.BlockSpec((1, i_pad, 1), lambda g, t, m: (m[g], 0, 0)),
+            pl.BlockSpec((i_pad, s_block), lambda g, t, m: (0, g)),   # x0
+            pl.BlockSpec((1, s_block), lambda g, t, m: (0, g)),       # offsets
+        ],
+        out_specs=[
+            pl.BlockSpec((t_block // 2, s_block), lambda g, t, m: (t, g)),
+            pl.BlockSpec((i_pad, s_block), lambda g, t, m: (0, g)),
+        ],
+    )
+    words, state = pl.pallas_call(
+        functools.partial(_gang_bits_kernel, t_block=t_block, unroll=unroll,
+                          activation=activation, compute_unit=compute_unit,
+                          i_dim=i_dim, h_dim=h_dim),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_rows, s_total), jnp.uint32),
+            jax.ShapeDtypeStruct((i_pad, s_total), dtype),
+        ],
+        interpret=interpret,
+    )(cmap, w1p, b1p, w2p, b2p, x0p, offp)
+
+    return words, state[:i_dim, :].T
+
+
+# ---------------------------------------------------------------------------
+# Sublane-stacked gang variant: C equal-shape pools, ONE grid cell per
+# (lane-block, time-block) — the whole group's update is a single set of
+# vector ops on C-times-taller vregs.
+# ---------------------------------------------------------------------------
+
+
+def _stacked_fold16(x, n_cores: int, i_pad: int, i_dim: int):
+    """Fold the live dims of every core at once: (C*I_pad, s) -> (C, s).
+
+    Strided sublane slices pick dimension ``i`` of every core in one op, so
+    the fold stays one XOR chain of (C, s) values — the same low-mantissa
+    bits, shifts, and order per lane as ``_fold16`` on each core alone.
+    """
+    if x.dtype.itemsize == 2:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.uint32)
+        lo = u & jnp.uint32((1 << jnp.finfo(x.dtype).nmant) - 1)
+    else:
+        u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+        lo = u & jnp.uint32(0xFFFF)
+    folded = lo[0::i_pad, :]
+    for i in range(1, i_dim):
+        folded = folded ^ (lo[i::i_pad, :] << jnp.uint32(5 * i % 16))
+    return folded
+
+
+def _make_stacked_step(w1t, b1s, w2t, b2s, *, activation: str,
+                       n_cores: int, i_pad: int, h_pad: int,
+                       i_dim: int, h_dim: int):
+    """Whole-group oscillator update on sublane-stacked state.
+
+    x: (C*I_pad, s) — core c's state occupies sublane rows
+    [c*I_pad, c*I_pad + I).  Weight tables are pre-broadcast outside the
+    kernel: w1t[i] is the (C*H_pad, 1) column of every core's w1[:, i, :],
+    so step ``h += w1t[i] * x[i of every core]`` is ONE fused
+    multiply-add over the stacked group — same accumulation order per lane
+    as the per-core VPU path, hence bit-identical words.
+    """
+    phi = _activation(activation)
+
+    def one_step(x):
+        h = jnp.zeros((n_cores * h_pad, x.shape[1]), x.dtype)
+        for i in range(i_dim):
+            xi = jnp.repeat(x[i::i_pad, :], h_pad, axis=0)
+            h = h + w1t[i] * xi
+        h = phi(h + b1s)
+        y = jnp.zeros_like(x)
+        for j in range(h_dim):
+            hj = jnp.repeat(h[j::h_pad, :], i_pad, axis=0)
+            y = y + w2t[j] * hj
+        return y + b2s
+
+    return one_step
+
+
+def _gang_stacked_kernel(w1t_ref, b1_ref, w2t_ref, b2_ref, x0_ref, off_ref,
+                         words_ref, state_ref, *, t_block: int, unroll: int,
+                         activation: str, n_cores: int, i_pad: int,
+                         h_pad: int, i_dim: int, h_dim: int):
+    """One (lane-block, time-block) cell computing ALL C cores at once."""
+    t = pl.program_id(1)
+    rows_per_block = t_block // 2
+
+    @pl.when(t == 0)
+    def _init():
+        state_ref[...] = x0_ref[...]
+
+    one_step = _make_stacked_step(
+        w1t_ref[...], b1_ref[...], w2t_ref[...], b2_ref[...],
+        activation=activation, n_cores=n_cores, i_pad=i_pad, h_pad=h_pad,
+        i_dim=i_dim, h_dim=h_dim)
+    offs = off_ref[...]
+
+    def one_row(x, r):
+        x1 = one_step(x)
+        x2 = one_step(x1)
+        word = ((_stacked_fold16(x1, n_cores, i_pad, i_dim)
+                 << jnp.uint32(16))
+                | _stacked_fold16(x2, n_cores, i_pad, i_dim))
+        row_idx = offs + (t * rows_per_block + r).astype(jnp.uint32)
+        word = word ^ (row_idx * jnp.uint32(_GOLDEN))
+        words_ref[pl.ds(r, 1), :, :] = _finalize(word)[None]
+        return x2
+
+    def chunk(x, base):
+        for u in range(unroll):
+            x = one_row(x, base + u)
+        return x
+
+    x = state_ref[...]
+    n_chunks = rows_per_block // unroll
+    if n_chunks == 1:
+        x = chunk(x, 0)
+    else:
+        x = jax.lax.fori_loop(0, n_chunks,
+                              lambda c, x: chunk(x, c * unroll), x)
+    state_ref[...] = x
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_steps", "s_block", "t_block", "unroll", "activation",
+                     "compute_unit", "interpret"),
+)
+def chaotic_ann_gang_stacked_pallas(w1, b1, w2, b2, x0, word_offset=0, *,
+                                    n_steps: int, s_block: int = 256,
+                                    t_block: int = 128, unroll: int = 1,
+                                    activation: str = "relu",
+                                    compute_unit: str = "vpu",
+                                    interpret: bool = False):
+    """Gang launch for C equal-shape pools, stacked on the SUBLANE axis.
+
+    Where ``chaotic_ann_gang_bits_pallas`` concatenates pools along the
+    lane axis (one grid cell per member lane block), this variant exploits
+    equal pool shapes to stack the group along the *sublane* axis: state is
+    (C * I_pad, s_block) in one grid cell, and each update step is ONE
+    broadcast-FMA sweep over the stacked group — C networks advance for the
+    per-cell cost of one.  This is the paper's parallelism-P MAC array
+    applied across *cores* instead of across streams, and it is what makes
+    small gang flushes cheaper than C small per-core flushes (per-launch
+    and per-grid-cell overheads are paid once, not C times).
+
+    Per lane the FMA accumulation order, bit fold, and whitening are
+    identical to the per-core kernel, so words and final states are
+    bit-identical to C ``chaotic_ann_bits_pallas`` launches.
+
+    Args:
+      w1 (C, I, H), b1 (C, H), w2 (C, H, I), b2 (C, I): stacked weights.
+      x0 (C, S, I): one equal-size pool per core.
+      word_offset: scalar or (C, S) uint32 per-lane word-row offsets.
+    Returns:
+      words: (n_steps // 2, C, S) uint32, final_state: (C, S, I).
+    """
+    if n_steps < 2 or n_steps % 2:
+        raise ValueError(f"n_steps must be even and >= 2, got {n_steps}")
+    if compute_unit != "vpu":
+        # The stacked step IS the broadcast-FMA order; a dot-based (mxu)
+        # group must take the lane-concat gang path to stay bit-identical.
+        raise ValueError("stacked gang launches support compute_unit='vpu' "
+                         "only; use chaotic_ann_gang_bits_pallas for mxu")
+    n_cores, i_dim, h_dim = w1.shape
+    s_total = x0.shape[1]
+    dtype = x0.dtype
+    t_block, unroll = _bits_blocks(n_steps, t_block, unroll)
+
+    i_pad = _pad_to(max(i_dim, 1), SUBLANES)
+    h_pad = _pad_to(max(h_dim, 1), SUBLANES)
+    s_pad = _pad_to(s_total, s_block)
+    n_rows = n_steps // 2
+
+    # Pre-broadcast weight tables: w1t[i] (C*H_pad, 1) holds w1[c, i, j] at
+    # row c*H_pad + j; w2t[j] (C*I_pad, 1) holds w2[c, j, i'] at c*I_pad+i'.
+    w1t = jnp.zeros((i_dim, n_cores * h_pad, 1), dtype)
+    w1t = w1t.at[:, :, 0].set(
+        jnp.pad(w1.astype(dtype), ((0, 0), (0, 0), (0, h_pad - h_dim)))
+        .transpose(1, 0, 2).reshape(i_dim, n_cores * h_pad))
+    b1s = jnp.zeros((n_cores * h_pad, 1), dtype).at[:, 0].set(
+        jnp.pad(b1.astype(dtype), ((0, 0), (0, h_pad - h_dim))).reshape(-1))
+    w2t = jnp.zeros((h_dim, n_cores * i_pad, 1), dtype)
+    w2t = w2t.at[:, :, 0].set(
+        jnp.pad(w2.astype(dtype), ((0, 0), (0, 0), (0, i_pad - i_dim)))
+        .transpose(1, 0, 2).reshape(h_dim, n_cores * i_pad))
+    b2s = jnp.zeros((n_cores * i_pad, 1), dtype).at[:, 0].set(
+        jnp.pad(b2.astype(dtype), ((0, 0), (0, i_pad - i_dim))).reshape(-1))
+    # (C, S, I) -> (C*I_pad, S_pad): core-major sublane stacking.
+    x0p = jnp.zeros((n_cores, i_pad, s_pad), dtype).at[
+        :, :i_dim, :s_total].set(x0.transpose(0, 2, 1).astype(dtype))
+    x0p = x0p.reshape(n_cores * i_pad, s_pad)
+    off = jnp.asarray(word_offset, jnp.uint32)
+    offp = jnp.zeros((n_cores, s_pad), jnp.uint32).at[:, :s_total].set(
+        jnp.broadcast_to(off, (n_cores, s_total)))
+
+    grid = (s_pad // s_block, n_steps // t_block)
+    words, state = pl.pallas_call(
+        functools.partial(_gang_stacked_kernel, t_block=t_block,
+                          unroll=unroll, activation=activation,
+                          n_cores=n_cores, i_pad=i_pad, h_pad=h_pad,
+                          i_dim=i_dim, h_dim=h_dim),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((i_dim, n_cores * h_pad, 1),
+                         lambda s, t: (0, 0, 0)),                 # w1t
+            pl.BlockSpec((n_cores * h_pad, 1), lambda s, t: (0, 0)),
+            pl.BlockSpec((h_dim, n_cores * i_pad, 1),
+                         lambda s, t: (0, 0, 0)),                 # w2t
+            pl.BlockSpec((n_cores * i_pad, 1), lambda s, t: (0, 0)),
+            pl.BlockSpec((n_cores * i_pad, s_block),
+                         lambda s, t: (0, s)),                    # x0
+            pl.BlockSpec((n_cores, s_block), lambda s, t: (0, s)),  # offsets
+        ],
+        out_specs=[
+            pl.BlockSpec((t_block // 2, n_cores, s_block),
+                         lambda s, t: (t, 0, s)),
+            pl.BlockSpec((n_cores * i_pad, s_block), lambda s, t: (0, s)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_rows, n_cores, s_pad), jnp.uint32),
+            jax.ShapeDtypeStruct((n_cores * i_pad, s_pad), dtype),
+        ],
+        interpret=interpret,
+    )(w1t, b1s, w2t, b2s, x0p, offp)
+
+    words = words[:, :, :s_total]
+    state = state.reshape(n_cores, i_pad, s_pad)[
+        :, :i_dim, :s_total].transpose(0, 2, 1)
+    return words, state

@@ -12,6 +12,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.chaotic_ann import (chaotic_ann_bits_pallas,
+                                       chaotic_ann_gang_bits_pallas,
+                                       chaotic_ann_gang_stacked_pallas,
                                        chaotic_ann_pallas)
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
@@ -74,6 +76,94 @@ def chaotic_bits(params: Dict[str, jax.Array], x0: jax.Array, n_steps: int,
     return chaotic_ann_bits_pallas(
         w1, b1, w2, b2, x0, word_offset, n_steps=n_steps,
         activation=activation, interpret=interpret, **kw)
+
+
+def chaotic_bits_gang(params: Dict[str, jax.Array], x0: jax.Array,
+                      n_steps: int, word_offset=0, *, core_map,
+                      activation: str = "relu", backend: str = "auto",
+                      s_block: int = 256, t_block: int = 128,
+                      unroll: int = 1, compute_unit: str = "vpu",
+                      config=None) -> Tuple[jax.Array, jax.Array]:
+    """Gang-scheduled fused PRNG draw: C stacked networks, ONE launch.
+
+    ``params`` carries a leading core axis (w1 (C, I, H), b1 (C, H),
+    w2 (C, H, I), b2 (C, I)); ``x0`` is the concatenated (S, I) stream pool
+    with each ``s_block``-lane block homogeneous in core, and
+    ``core_map[g]`` names the weight slab of block ``g``.  Lanes evolve
+    independently, so per lane the result is bit-identical to a per-core
+    ``chaotic_bits`` launch with that lane's network — the property the
+    farm's gang scheduler relies on (tests/test_gang.py).
+
+    The 'ref' backend replays each lane block through the reference
+    trajectory + ``pack_words`` with its own weights (C tiny launches),
+    keeping the usual co-simulation contract.
+    """
+    kw = dict(s_block=s_block, t_block=t_block, unroll=unroll,
+              compute_unit=compute_unit)
+    if config is not None:
+        kw = _kernel_kwargs(config)
+    if backend == "ref":
+        s_blk = kw["s_block"]
+        cmap = [int(c) for c in jnp.asarray(core_map)]
+        off = jnp.broadcast_to(jnp.asarray(word_offset, jnp.uint32),
+                               (x0.shape[0],))
+        words_parts, state_parts = [], []
+        for g, c in enumerate(cmap):
+            xg = x0[g * s_blk:(g + 1) * s_blk]
+            traj = ref.chaotic_ann_ref(
+                params["w1"][c], params["b1"][c], params["w2"][c],
+                params["b2"][c], xg, n_steps, activation)
+            words_parts.append(pack_words(
+                traj, off[g * s_blk:(g + 1) * s_blk]))
+            state_parts.append(traj[-1])
+        return (jnp.concatenate(words_parts, axis=1),
+                jnp.concatenate(state_parts, axis=0))
+    interpret = (backend == "pallas_interpret") or (backend == "auto" and not _ON_TPU)
+    return chaotic_ann_gang_bits_pallas(
+        params["w1"], params["b1"], params["w2"], params["b2"], x0,
+        core_map, word_offset, n_steps=n_steps, activation=activation,
+        interpret=interpret, **kw)
+
+
+def chaotic_bits_gang_stacked(params: Dict[str, jax.Array], x0: jax.Array,
+                              n_steps: int, word_offset=0, *,
+                              activation: str = "relu",
+                              backend: str = "auto", s_block: int = 256,
+                              t_block: int = 128, unroll: int = 1,
+                              compute_unit: str = "vpu",
+                              config=None) -> Tuple[jax.Array, jax.Array]:
+    """Sublane-stacked gang draw for C EQUAL-shape pools: one grid cell
+    advances the whole group.
+
+    ``params`` carries a leading core axis; ``x0`` is (C, S, I) — one pool
+    per core, all the same shape.  The fast path for homogeneous farm
+    groups (see ``chaotic_ann_gang_stacked_pallas``); ragged groups go
+    through ``chaotic_bits_gang``.  vpu groups only — the stacked update
+    is the broadcast-FMA order itself.
+    Returns words (n_steps // 2, C, S) and final state (C, S, I).
+    """
+    kw = dict(s_block=s_block, t_block=t_block, unroll=unroll,
+              compute_unit=compute_unit)
+    if config is not None:
+        kw = _kernel_kwargs(config)
+    if backend == "ref":
+        n_cores = x0.shape[0]
+        off = jnp.broadcast_to(jnp.asarray(word_offset, jnp.uint32),
+                               x0.shape[:2])
+        words_parts, state_parts = [], []
+        for c in range(n_cores):
+            traj = ref.chaotic_ann_ref(
+                params["w1"][c], params["b1"][c], params["w2"][c],
+                params["b2"][c], x0[c], n_steps, activation)
+            words_parts.append(pack_words(traj, off[c]))
+            state_parts.append(traj[-1])
+        return (jnp.stack(words_parts, axis=1),
+                jnp.stack(state_parts, axis=0))
+    interpret = (backend == "pallas_interpret") or (backend == "auto" and not _ON_TPU)
+    return chaotic_ann_gang_stacked_pallas(
+        params["w1"], params["b1"], params["w2"], params["b2"], x0,
+        word_offset, n_steps=n_steps, activation=activation,
+        interpret=interpret, **kw)
 
 
 def uniform_from_trajectory(traj: jax.Array) -> jax.Array:

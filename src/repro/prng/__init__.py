@@ -1,8 +1,11 @@
 from repro.prng.stream import (ChaoticPRNG, ChaoticStream, StreamState,
                                default_params, default_stream,
-                               trained_oscillator)
+                               registry_fingerprint, trained_oscillator)
 from repro.prng.nist import cross_correlation, run_nist_subset
+from repro.prng.quality import (nist_gate, quarantined_systems,
+                                sweep_registry)
 
 __all__ = ["ChaoticPRNG", "ChaoticStream", "StreamState", "cross_correlation",
-           "default_params", "default_stream", "run_nist_subset",
-           "trained_oscillator"]
+           "default_params", "default_stream", "nist_gate",
+           "quarantined_systems", "registry_fingerprint", "run_nist_subset",
+           "sweep_registry", "trained_oscillator"]

@@ -1,0 +1,82 @@
+"""Registry-wide PRNG quality gate (NIST subset per system AND dtype).
+
+The paper (§II, citing Yu et al.) claims ANN-based chaotic PRNGs pass the
+NIST SP 800-22 suite; PR 1 verified that for the trained Chen f32 stream
+only.  This module sweeps the gate across the whole weight registry and
+both serving dtypes (f32 cores and half-width bf16 cores), so the farm can
+*quarantine* a (system, dtype) whose bit quality regresses — a registry
+entry may train fine yet emit biased words after the bf16 mantissa fold.
+
+Used from tests (tier-1 gate: every f32 system must pass) and from
+``benchmarks/farm.py`` (quarantined systems are marked in
+BENCH_farm.json so a serving rollout can exclude them).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional
+
+import jax.numpy as jnp
+
+from repro.prng.nist import run_nist_subset
+from repro.prng.stream import ChaoticPRNG, default_params
+
+GATE_WORDS = 30_000          # ~0.96 Mbit per gated stream
+GATE_ALPHA = 0.01
+
+# A single NIST test at alpha=0.01 has a ~1% false-positive rate; gating a
+# whole registry on "zero failures anywhere" would flake.  A (system,
+# dtype) is quarantined only when MORE tests fail than chance plausibly
+# explains: >= 2 failed tests out of the 7-test subset (P[>=2 | p=0.01]
+# ~ 2e-3 per stream), or any single test failing catastrophically
+# (p-value below ALPHA_HARD, far outside false-positive territory).
+ALPHA_HARD = 1e-6
+MAX_CHANCE_FAILS = 1
+
+
+def nist_gate(system: str, dtype: str = "float32", *,
+              n_words: int = GATE_WORDS, alpha: float = GATE_ALPHA,
+              n_streams: int = 256, seed: int = 0,
+              backend: str = "auto") -> Dict[str, object]:
+    """Run the NIST subset on one registry (system, dtype) stream.
+
+    Draws through the same fused path the serving stack uses (``ChaoticPRNG``
+    with the registry weights and the requested compute dtype), so the gate
+    measures exactly what a farm core would emit.
+    """
+    params = default_params(system=system)
+    eng = ChaoticPRNG(params, n_streams=n_streams, backend=backend,
+                      dtype=jnp.dtype(dtype))
+    words, _ = eng.next_words(eng.init(seed=seed), n_words)
+    res = run_nist_subset(words, alpha=alpha)
+    failed = sorted(k for k, v in res.items() if not v["passed"])
+    hard_failed = sorted(k for k, v in res.items()
+                         if v["p_value"] < ALPHA_HARD)
+    quarantine = len(failed) > MAX_CHANCE_FAILS or bool(hard_failed)
+    return {
+        "system": system, "dtype": str(jnp.dtype(dtype)),
+        "n_words": int(n_words),
+        "failed_tests": failed, "hard_failed_tests": hard_failed,
+        "p_values": {k: v["p_value"] for k, v in res.items()},
+        "passed": not failed,
+        "quarantined": quarantine,
+    }
+
+
+def sweep_registry(systems: Optional[Iterable[str]] = None,
+                   dtypes: Iterable[str] = ("float32", "bfloat16"),
+                   **gate_kw) -> Dict[str, Dict[str, object]]:
+    """Gate every (system, dtype) pair; keys are '<system>/<dtype>'."""
+    if systems is None:
+        from repro.core.chaotic import SYSTEMS
+        systems = sorted(SYSTEMS)
+    return {f"{s}/{jnp.dtype(d)}": nist_gate(s, d, **gate_kw)
+            for s in systems for d in dtypes}
+
+
+def quarantined_systems(sweep: Dict[str, Dict[str, object]]) -> Dict[str, list]:
+    """{system: [dtype, ...]} for every quarantined (system, dtype)."""
+    out: Dict[str, list] = {}
+    for res in sweep.values():
+        if res["quarantined"]:
+            out.setdefault(res["system"], []).append(res["dtype"])
+    return out

@@ -5,10 +5,21 @@ The paper emits ONE hardware core per run; the serving-scale analogue is a
 dtypes, and DSE-autotuned kernel configs — multiplexed behind a single
 register/request/flush/snapshot surface.  Each core is backed by its own
 ``PRNGService`` pool (its clients share one fused-kernel launch per flush),
-so a farm flush issues at most one launch per *core*, not per client, and
-every determinism/resumability guarantee of ``PRNGService`` carries over
-unchanged: a client's words are identical whether served standalone or
-through the farm.
+and every determinism/resumability guarantee of ``PRNGService`` carries
+over unchanged: a client's words are identical whether served standalone
+or through the farm.
+
+**Gang scheduling** (the launch-overhead killer): compatible cores — same
+(i_dim, h_dim, dtype, activation, kernel config) — do not each pay their
+own kernel launch per flush.  ``GangScheduler`` stacks their weights along
+a leading core axis, concatenates their lane pools, and issues ONE
+``ops.chaotic_bits_gang`` launch for the whole group, then scatters words
+and final states back to each ``PRNGService`` via its
+``prepare_rows()/absorb()`` halves.  Lanes evolve independently and word
+emission is defined in absolute word-row space, so per-client words are
+bit-identical to the per-core path (gang overdraw is buffered exactly like
+batching overdraw).  Incompatible cores (and mesh-sharded pools) fall back
+to their own per-core launch.
 
 Cores come from two places:
 
@@ -23,19 +34,163 @@ from __future__ import annotations
 
 import json
 import pathlib
-from typing import Dict, Iterable, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.prng.stream import _round_rows
 from repro.serve.prng_service import PRNGService
 
 
-class OscillatorFarm:
-    """Routes named clients to per-core ``PRNGService`` pools."""
+def _compat_key(svc: PRNGService) -> Optional[Tuple]:
+    """Gang-compatibility signature of one core's service.
+
+    Two cores may share a stacked-weight launch iff every static property
+    of the kernel instantiation matches: network shape (i_dim, h_dim),
+    compute dtype, activation, backend, and the full DSE kernel config
+    (s_block, t_block, unroll, compute_unit).  Mesh-sharded pools return
+    None (never ganged — their launch wraps a shard_map).
+    """
+    if svc.mesh is not None:
+        return None
+    c = svc.config
+    return (svc.dim, int(svc.params["w1"].shape[1]), str(svc.dtype),
+            svc.activation, svc.backend,
+            c.s_block, c.t_block, c.unroll, c.compute_unit)
+
+
+class GangScheduler:
+    """Launches a group of compatible cores as ONE stacked-weight kernel.
+
+    Holds the dispatch cache: per (group signature, membership) the stacked
+    weight arrays and pool layout (lane spans + per-block core-id map) are
+    built once and reused every flush, and launched row counts are bucketed
+    by ``_round_rows``, so steady-state traffic replays a previously
+    compiled kernel instead of re-stacking/recompiling.
+    """
 
     def __init__(self):
+        self._plans: Dict[Tuple, Dict] = {}
+        self._dispatch_keys = set()   # (plan key, n_rows) ever launched
+        self.launches = 0
+
+    @property
+    def dispatch_misses(self) -> int:
+        """Distinct (group, bucketed rows) keys launched so far — each one
+        is a fresh XLA compile; steady state stops growing this."""
+        return len(self._dispatch_keys)
+
+    def _plan(self, key: Tuple, members: List[Tuple[str, PRNGService]]) -> Dict:
+        """Stacked weights + pool layout for one group membership.
+
+        Two launch layouts: equal-size vpu pools take the *sublane-stacked*
+        kernel (one grid cell per lane block advances the whole group —
+        cheapest for the small coalesced flushes gangs exist for); ragged
+        or mxu groups take the lane-concat kernel with a per-block core-id
+        map.
+        """
+        sig = (key, tuple((name, int(svc.pool_x.shape[0]))
+                          for name, svc in members))
+        plan = self._plans.get(sig)
+        if plan is not None:
+            return plan
+        svc0 = members[0][1]
+        s_block = svc0.config.s_block
+        params = {k: jnp.stack([svc.params[k] for _, svc in members])
+                  for k in ("w1", "b1", "w2", "b2")}
+        sizes = [int(svc.pool_x.shape[0]) for _, svc in members]
+        plan = {"sig": sig, "params": params, "s_block": s_block}
+        if len(set(sizes)) == 1 and svc0.config.compute_unit == "vpu":
+            plan["mode"] = "stacked"
+            plan["s_each"] = sizes[0]
+        else:
+            plan["mode"] = "concat"
+            spans, core_map, start = [], [], 0
+            for ci, live in enumerate(sizes):
+                padded = -(-live // s_block) * s_block
+                spans.append((start, live, padded))
+                core_map.extend([ci] * (padded // s_block))
+                start += padded
+            plan.update(spans=spans,
+                        core_map=np.asarray(core_map, np.int32),
+                        s_total=start)
+        self._plans[sig] = plan
+        return plan
+
+    def launch(self, key: Tuple,
+               members: List[Tuple[str, PRNGService, int, np.ndarray]],
+               *, deliver: bool = True) -> Dict[str, Dict[str, np.ndarray]]:
+        """One gang launch for ``members`` (each with its prepare_rows plan).
+
+        Every member advances by the same bucketed row count (the group
+        max) — overdraw lands in per-client buffers, so delivered words are
+        bit-identical to the per-core path (chunk-invariance of the
+        absolute-row Weyl indexing).
+        """
+        from repro.kernels import ops
+        svc0 = members[0][1]
+        plan = self._plan(key, [(name, svc) for name, svc, _, _ in members])
+        n_rows = _round_rows(max(n for _, _, n, _ in members),
+                             svc0.config.t_block)
+        if plan["mode"] == "stacked":
+            x0 = jnp.stack([svc.pool_x for _, svc, _, _ in members])
+            offs = np.stack([offsets for _, _, _, offsets in members])
+            words, state = ops.chaotic_bits_gang_stacked(
+                plan["params"], x0, 2 * n_rows, jnp.asarray(offs),
+                activation=svc0.activation, backend=svc0.backend,
+                config=svc0.config)
+            words = np.asarray(words)
+            member_out = [(words[:, ci, :], state[ci])
+                          for ci in range(len(members))]
+        else:
+            parts, offs = [], np.zeros(plan["s_total"], np.uint32)
+            for (start, live, padded), (_, svc, _, offsets) in zip(
+                    plan["spans"], members):
+                parts.append(svc.pool_x)
+                if padded > live:  # pad to an s_block boundary (dead lanes)
+                    parts.append(jnp.zeros((padded - live, svc0.dim),
+                                           svc0.dtype))
+                offs[start:start + live] = offsets
+            words, state = ops.chaotic_bits_gang(
+                plan["params"], jnp.concatenate(parts, axis=0), 2 * n_rows,
+                jnp.asarray(offs), core_map=plan["core_map"],
+                activation=svc0.activation, backend=svc0.backend,
+                config=svc0.config)
+            words = np.asarray(words)
+            member_out = [(words[:, start:start + live],
+                           state[start:start + live])
+                          for (start, live, _) in plan["spans"]]
+        self.launches += 1
+        self._dispatch_keys.add((plan["sig"], n_rows))
+        out: Dict[str, Dict[str, np.ndarray]] = {}
+        for (mwords, mstate), (name, svc, _, _) in zip(member_out, members):
+            served = svc.absorb(mwords, mstate, n_rows, deliver=deliver)
+            if served:
+                out[name] = served
+        return out
+
+
+class OscillatorFarm:
+    """Routes named clients to per-core ``PRNGService`` pools.
+
+    ``gang=True`` (default) enables gang-scheduled flushes: compatible
+    cores share one stacked-weight launch per flush.  ``gang=False``
+    reproduces the legacy one-launch-per-core behavior — delivered words
+    are bit-identical either way (tests/test_gang.py).
+    ``auto_flush_rows`` is the coalescing threshold for
+    ``request(..., auto_flush=True)``: the farm auto-flushes once total
+    pending work reaches that many word rows (None = flush on every
+    auto-flush request).
+    """
+
+    def __init__(self, *, gang: bool = True,
+                 auto_flush_rows: Optional[int] = None):
         self.services: Dict[str, PRNGService] = {}
+        self.gang = bool(gang)
+        self.auto_flush_rows = auto_flush_rows
+        self._sched = GangScheduler()
+        self._deferred: set = set()   # cores deferred by the last flush
 
     # -- core management ----------------------------------------------------
 
@@ -56,6 +211,8 @@ class OscillatorFarm:
     @classmethod
     def from_generated(cls, farm_dir: str | pathlib.Path,
                        cores: Optional[Iterable[str]] = None,
+                       gang: bool = True,
+                       auto_flush_rows: Optional[int] = None,
                        **service_kw) -> "OscillatorFarm":
         """Build a farm from a ``generate_farm`` output directory.
 
@@ -77,7 +234,7 @@ class OscillatorFarm:
                 f"solution.json and cannot be overridden here; use "
                 f"add_core() to attach a core with custom values")
         farm_dir = pathlib.Path(farm_dir)
-        farm = cls()
+        farm = cls(gang=gang, auto_flush_rows=auto_flush_rows)
         names = sorted(cores) if cores is not None else sorted(
             p.name for p in farm_dir.iterdir()
             if (p / "solution.json").exists() and (p / "weights.npz").exists())
@@ -113,21 +270,92 @@ class OscillatorFarm:
         """Register a named client stream on one core's pool."""
         self._svc(core).register(client, seed=seed)
 
-    def request(self, core: str, client: str, n_words: int) -> None:
-        """Queue a draw; served by the next farm-wide flush()."""
-        self._svc(core).request(client, n_words)
+    def request(self, core: str, client: str, n_words: int,
+                auto_flush: bool = False) -> None:
+        """Queue a draw; served by the next farm-wide flush().
 
-    def flush(self) -> Dict[str, Dict[str, np.ndarray]]:
-        """Serve every pending request: one batched launch per active core.
+        ``auto_flush=True`` lets small tenants coalesce instead of each
+        calling flush(): after queueing, the farm flushes itself once total
+        pending work across all cores reaches ``auto_flush_rows`` word rows
+        (immediately when that threshold is None).  Words served by an
+        auto-flush are parked in the per-service outboxes and returned by
+        the tenant's next flush()/draw() — never dropped.
+        """
+        self._svc(core).request(client, n_words)
+        if auto_flush:
+            total = sum(svc.rows_needed() for svc in self.services.values())
+            if self.auto_flush_rows is None or total >= self.auto_flush_rows:
+                self.flush(deliver=False)
+
+    def flush(self, max_wait_rows: Optional[int] = None,
+              deliver: bool = True) -> Dict[str, Dict[str, np.ndarray]]:
+        """Serve every pending request: one batched launch per core GROUP.
+
+        Cores are grouped by gang-compatibility signature (``_compat_key``);
+        each group with pending work costs one stacked-weight launch
+        (``gang=False``: one launch per core, the legacy path).  Delivered
+        words are bit-identical either way.
+
+        ``max_wait_rows`` is the deadline knob: a group whose total needed
+        rows is below it is *deferred* — no launch, its tenants keep
+        waiting so the next flush sees a fuller gang — but a group is never
+        deferred twice in a row (the deadline: at most one flush cycle).
+        Deferred cores deliver nothing this flush.
+
+        ``deliver=False`` parks all served words in the per-service
+        outboxes instead of returning them (the auto-flush path).
 
         Returns {core: {client: words}} for every client that received
         words (pending requests and previously parked outbox words alike).
         """
+        plans = {core: svc.prepare_rows()
+                 for core, svc in self.services.items()}
+        # Group cores that need a launch by compatibility signature.
+        groups: Dict[object, List[str]] = {}
+        for core, (n_need, _) in plans.items():
+            if n_need > 0:
+                key = _compat_key(self.services[core]) if self.gang else None
+                groups.setdefault(key if key is not None else ("solo", core),
+                                  []).append(core)
+        launching: List[Tuple[object, List[str]]] = []
+        deferred_now: set = set()
+        for key, cores in groups.items():
+            total = sum(plans[c][0] for c in cores)
+            overdue = any(c in self._deferred for c in cores)
+            if max_wait_rows is None or total >= max_wait_rows or overdue:
+                launching.append((key, cores))
+            else:
+                deferred_now.update(cores)
         out: Dict[str, Dict[str, np.ndarray]] = {}
-        for core, svc in self.services.items():
-            served = svc.flush()
-            if served:
-                out[core] = served
+        launching_cores = {c for _, cores in launching for c in cores}
+        for key, cores in launching:
+            if self.gang and len(cores) > 1:
+                served = self._sched.launch(
+                    key, [(c, self.services[c], plans[c][0], plans[c][1])
+                          for c in cores], deliver=deliver)
+                out.update(served)
+            else:
+                for c in cores:
+                    svc = self.services[c]
+                    n_rows = _round_rows(plans[c][0], svc.config.t_block)
+                    words, new_x = svc._launch(n_rows,
+                                               jnp.asarray(plans[c][1]))
+                    served = svc.absorb(words, new_x, n_rows,
+                                        deliver=deliver)
+                    if served:
+                        out[c] = served
+        # Launch-free delivery pass for cores with nothing to launch (their
+        # buffers/outboxes may still owe words).  Deferred cores are fully
+        # skipped: their buffers do not cover their pending requests yet.
+        for core, (n_need, _) in plans.items():
+            if core in launching_cores or core in deferred_now:
+                continue
+            if n_need == 0:
+                served = self.services[core].absorb(None, None, 0,
+                                                    deliver=deliver)
+                if served:
+                    out[core] = served
+        self._deferred = deferred_now
         return out
 
     def draw(self, core: str, client: str, n_words: int) -> np.ndarray:
@@ -140,14 +368,33 @@ class OscillatorFarm:
 
     @property
     def launches(self) -> int:
-        return sum(svc.launches for svc in self.services.values())
+        """Actual kernel launches issued: per-core launches + gang launches
+        (a gang launch advances a whole group but costs ONE launch)."""
+        return (sum(svc.launches for svc in self.services.values())
+                + self._sched.launches)
+
+    @property
+    def gang_launches(self) -> int:
+        return self._sched.launches
+
+    @property
+    def dispatch_misses(self) -> int:
+        """Distinct (group, bucketed rows) gang keys compiled so far."""
+        return self._sched.dispatch_misses
 
     # -- resumability -------------------------------------------------------
 
     def snapshot(self) -> Dict[str, object]:
-        """Farm-wide snapshot: every core pool, every client, in flight."""
+        """Farm-wide snapshot: every core pool, every client, in flight.
+
+        Includes the deadline-deferral set, so a snapshot taken mid-gang
+        (between request() and flush(), possibly after a deferring flush)
+        replays identically.
+        """
         return {"cores": {core: svc.snapshot()
-                          for core, svc in self.services.items()}}
+                          for core, svc in self.services.items()},
+                "gang_launches": self._sched.launches,
+                "deferred": sorted(self._deferred)}
 
     def restore(self, snap: Dict[str, object]) -> None:
         """Restore a snapshot() onto a farm with the SAME cores attached.
@@ -165,3 +412,5 @@ class OscillatorFarm:
                 f"farm-only {sorted(extra)}")
         for core, sub in cores.items():
             self.services[core].restore(sub)
+        self._sched.launches = int(snap.get("gang_launches", 0))
+        self._deferred = set(snap.get("deferred", ()))

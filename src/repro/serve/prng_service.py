@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -119,32 +119,57 @@ class PRNGService:
             raise ValueError(f"n_words must be >= 0, got {n_words}")
         self.clients[name].pending += int(n_words)
 
-    def flush(self) -> Dict[str, np.ndarray]:
-        """One batched kernel launch serving every pending request.
-
-        Every client that needs words advances by the same number of word
-        rows (the max any pending request needs) with overdraw buffered, so
-        per-client sequences stay independent of batching.  Clients that
-        need nothing are *frozen* — their lanes are computed (they ride the
-        launch) but their state/counters are rolled back — so idle clients
-        neither advance nor accumulate buffer memory.
-        """
+    def rows_needed(self) -> int:
+        """Unrounded max word rows any pending request still needs (0 when
+        no launch is required).  Cheap — safe to poll per request()."""
         L = self.lanes_per_client
         n_rows = 0
-        active: List[_Client] = []
-        for c in self._by_slot():
+        for c in self.clients.values():
             need = c.pending - len(c.buf)
             if need > 0:
-                active.append(c)
                 n_rows = max(n_rows, -(-need // L))
-        # Whole time-blocks for big launches, next-pow2 for small ones
-        # (overdraw is buffered anyway; see stream._round_rows).
-        n_rows = _round_rows(n_rows, self.config.t_block) if n_rows else 0
+        return n_rows
+
+    def prepare_rows(self) -> Tuple[int, Optional[np.ndarray]]:
+        """Plan a pool launch without performing it: (rows needed, offsets).
+
+        Rows needed is ``rows_needed()``; offsets is the (S_pool,) per-lane
+        uint32 Weyl-counter vector a launch issued now must use (None when
+        no launch is required).  This is the farm-facing half of
+        ``flush()``: a gang scheduler calls ``prepare_rows()`` on every
+        group member, launches once for the group (possibly with MORE rows
+        than this service asked for — overdraw is buffered, so delivered
+        words are chunk-invariant), and hands the result back through
+        ``absorb()``.  No state changes.
+        """
+        n_rows = self.rows_needed()
+        if n_rows == 0:
+            return 0, None
+        offsets = np.repeat(
+            np.asarray([c.row for c in self._by_slot()], np.uint32),
+            self.lanes_per_client)
+        return n_rows, offsets
+
+    def absorb(self, words: Optional[np.ndarray], new_pool_x,
+               n_rows: int, *, deliver: bool = True) -> Dict[str, np.ndarray]:
+        """Bookkeeping half of ``flush()``: fold one launch's output back in.
+
+        ``words`` is the (n_rows, S_pool) uint32 slab of this service's
+        lanes and ``new_pool_x`` the advanced (S_pool, I) state (both may be
+        None with n_rows == 0 for a launch-free delivery pass).  Clients
+        that needed words get them buffered and their Weyl counters
+        advanced; idle clients are *frozen* — their lanes rode the launch
+        but their state is rolled back to the current pool, so a client's
+        stream never depends on co-tenant traffic.  Then every pending
+        request that the buffers now cover is delivered (outbox first).
+        With ``deliver=False`` served words are parked in the outbox
+        instead (auto-flush path): nothing is lost, the next
+        flush()/draw() returns them.
+        """
+        L = self.lanes_per_client
         if n_rows > 0:
-            offsets = np.repeat(
-                np.asarray([c.row for c in self._by_slot()], np.uint32), L)
-            old_x = self.pool_x
-            words = self._launch(n_rows, jnp.asarray(offsets))
+            words = np.asarray(words)
+            active = [c for c in self._by_slot() if c.pending - len(c.buf) > 0]
             for c in active:
                 mine = words[:, c.slot * L:(c.slot + 1) * L].reshape(-1)
                 c.buf = np.concatenate([c.buf, mine])
@@ -155,10 +180,12 @@ class PRNGService:
                  for c in self._by_slot() if c.slot not in active_slots]
             ) if len(active_slots) < len(self.clients) else None
             if idle_lanes is not None:
-                self.pool_x = self.pool_x.at[idle_lanes].set(old_x[idle_lanes])
+                new_pool_x = new_pool_x.at[idle_lanes].set(
+                    self.pool_x[idle_lanes])
+            self.pool_x = new_pool_x
         out: Dict[str, np.ndarray] = {}
-        for name, words in self._outbox.items():
-            out[name] = words
+        for name, parked in self._outbox.items():
+            out[name] = parked
         self._outbox = {}
         for c in self.clients.values():
             if c.pending:
@@ -167,7 +194,32 @@ class PRNGService:
                                if c.name in out else served)
                 c.buf = c.buf[c.pending:]
                 c.pending = 0
-        return out
+        if deliver:
+            return out
+        for name, served in out.items():
+            self._park(name, served)
+        return {}
+
+    def flush(self) -> Dict[str, np.ndarray]:
+        """One batched kernel launch serving every pending request.
+
+        Every client that needs words advances by the same number of word
+        rows (the max any pending request needs) with overdraw buffered, so
+        per-client sequences stay independent of batching.  Clients that
+        need nothing are *frozen* — their lanes are computed (they ride the
+        launch) but their state/counters are rolled back — so idle clients
+        neither advance nor accumulate buffer memory.  Implemented as
+        ``prepare_rows()`` -> launch -> ``absorb()``; the farm's gang
+        scheduler drives the same two halves around a shared launch.
+        """
+        n_need, offsets = self.prepare_rows()
+        # Whole time-blocks for big launches, next-pow2 for small ones
+        # (overdraw is buffered anyway; see stream._round_rows).
+        n_rows = _round_rows(n_need, self.config.t_block) if n_need else 0
+        if n_rows > 0:
+            words, new_x = self._launch(n_rows, jnp.asarray(offsets))
+            return self.absorb(words, new_x, n_rows)
+        return self.absorb(None, None, 0)
 
     def draw(self, name: str, n_words: int) -> np.ndarray:
         """Convenience: request + flush for one client.
@@ -198,8 +250,12 @@ class PRNGService:
     def _by_slot(self) -> List[_Client]:
         return sorted(self.clients.values(), key=lambda c: c.slot)
 
-    def _launch(self, n_rows: int, offsets: jax.Array) -> np.ndarray:
-        """The one batched pool launch: (n_rows, S_pool) words."""
+    def _launch(self, n_rows: int, offsets: jax.Array):
+        """The one batched pool launch: ((n_rows, S_pool) words, new state).
+
+        Does NOT assign ``pool_x`` — ``absorb()`` owns that, because idle
+        lanes must be rolled back against the pre-launch pool.
+        """
         n_steps = 2 * n_rows
 
         def run(x, off):
@@ -211,9 +267,9 @@ class PRNGService:
         if self.mesh is not None and s_pool % self.mesh.shape[self.mesh_axis] == 0:
             from repro.distributed.sharding import shard_stream_pool
             run = shard_stream_pool(run, self.mesh, self.mesh_axis)
-        words, self.pool_x = run(self.pool_x, offsets)
+        words, new_x = run(self.pool_x, offsets)
         self.launches += 1
-        return np.asarray(words)
+        return np.asarray(words), new_x
 
     # -- resumability -------------------------------------------------------
 

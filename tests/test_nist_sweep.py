@@ -1,0 +1,65 @@
+"""NIST subset gate swept across the whole weight registry (f32 + bf16).
+
+PR 1 gated the trained Chen f32 stream only; the farm serves every
+registry system in two dtypes, so the quality claim must hold — or be
+quarantined — per (system, dtype).  The gate draws through the exact
+serving path (``ChaoticPRNG`` + fused kernel) with fixed seeds, so every
+p-value here is deterministic: a failure is a real regression, not flake.
+
+Policy (see ``repro.prng.quality``): f32 cores are the paper's claim and
+must pass outright; bf16 cores fold a 7-bit mantissa and are allowed
+single-test chance failures, but anything beyond that quarantines the
+(system, dtype) — which ``benchmarks/farm.py`` then marks in
+BENCH_farm.json so a rollout can exclude it.
+"""
+import numpy as np
+import pytest
+
+from repro.core.chaotic import SYSTEMS
+from repro.prng.quality import (MAX_CHANCE_FAILS, nist_gate,
+                                quarantined_systems)
+
+GATE_KW = dict(n_words=20_000, backend="pallas_interpret")
+
+
+@pytest.mark.parametrize("system", sorted(SYSTEMS))
+def test_f32_registry_stream_passes_nist(system):
+    """Hard gate: every f32 registry core emits NIST-clean words."""
+    res = nist_gate(system, "float32", **GATE_KW)
+    assert not res["failed_tests"], res
+    assert not res["quarantined"]
+
+
+@pytest.mark.parametrize("system", sorted(SYSTEMS))
+def test_bf16_registry_stream_not_quarantined(system):
+    """Soft gate: half-width cores may lose single tests to chance, but a
+    quarantine-level failure of a shipping bf16 core fails tier-1."""
+    res = nist_gate(system, "bfloat16", **GATE_KW)
+    assert len(res["failed_tests"]) <= MAX_CHANCE_FAILS, res
+    assert not res["hard_failed_tests"], res
+    assert not res["quarantined"]
+
+
+def test_quarantine_policy_mechanism():
+    """quarantined_systems() collects exactly the quarantined pairs."""
+    sweep = {
+        "a/float32": {"system": "a", "dtype": "float32",
+                      "quarantined": False},
+        "a/bfloat16": {"system": "a", "dtype": "bfloat16",
+                       "quarantined": True},
+        "b/bfloat16": {"system": "b", "dtype": "bfloat16",
+                       "quarantined": True},
+    }
+    assert quarantined_systems(sweep) == {"a": ["bfloat16"],
+                                          "b": ["bfloat16"]}
+
+
+def test_gate_detects_catastrophic_bias():
+    """A hard single-test failure (p < ALPHA_HARD) must quarantine even
+    though it is only one test: feed the suite a constant stream through
+    the same scoring rule the gate applies."""
+    from repro.prng.nist import run_nist_subset
+    from repro.prng import quality
+    res = run_nist_subset(np.zeros(10_000, np.uint32))
+    hard = [k for k, v in res.items() if v["p_value"] < quality.ALPHA_HARD]
+    assert hard  # monobit at least

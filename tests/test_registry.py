@@ -1,0 +1,75 @@
+"""Weight-registry lifecycle: fingerprint versioning + invalidation.
+
+A registry entry is train-once, serve-forever — unless the training
+recipe or the jax version changes, in which case the stamped fingerprint
+no longer matches and ``trained_oscillator`` must retrain instead of
+serving stale weights.
+"""
+import numpy as np
+import pytest
+
+import repro.prng.stream as stream
+from repro.prng.stream import (_FINGERPRINT_KEY, registry_fingerprint,
+                               trained_oscillator)
+
+
+@pytest.fixture()
+def fast_registry(tmp_path, monkeypatch):
+    """Isolated on-disk registry with a cheap training recipe."""
+    monkeypatch.setenv("REPRO_WEIGHTS_DIR", str(tmp_path))
+    monkeypatch.setattr(stream, "_TRAIN_EPOCHS", 2)
+    monkeypatch.setattr(stream, "_TRAIN_SAMPLES", 512)
+    monkeypatch.setattr(stream, "_WEIGHTS_CACHE", {})
+    return tmp_path
+
+
+def test_registry_entries_are_stamped(fast_registry):
+    trained_oscillator("chen")
+    saved = dict(np.load(fast_registry / "chen.npz"))
+    assert str(saved[_FINGERPRINT_KEY]) == registry_fingerprint("chen")
+
+
+def test_fresh_stamp_serves_from_disk(fast_registry, monkeypatch):
+    trained_oscillator("chen")
+    monkeypatch.setattr(stream, "_WEIGHTS_CACHE", {})
+
+    def boom(*a, **kw):
+        raise AssertionError("retrained despite a fresh stamp")
+    monkeypatch.setattr("repro.core.ann.train", boom)
+    trained_oscillator("chen")                     # disk hit, no training
+
+
+@pytest.mark.parametrize("staleness", ["recipe_change", "missing_stamp"])
+def test_stale_or_unstamped_entry_retrains(fast_registry, monkeypatch,
+                                           staleness):
+    bundle = trained_oscillator("chen")
+    if staleness == "recipe_change":
+        # the recipe the weights were trained under no longer matches
+        monkeypatch.setattr(stream, "_TRAIN_EPOCHS", 3)
+    else:
+        # pre-versioning file: no stamp at all
+        saved = dict(np.load(fast_registry / "chen.npz"))
+        saved.pop(_FINGERPRINT_KEY)
+        np.savez(fast_registry / "chen.npz", **saved)
+    monkeypatch.setattr(stream, "_WEIGHTS_CACHE", {})
+
+    calls = []
+    real_train = __import__("repro.core.ann", fromlist=["train"]).train
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return real_train(*a, **kw)
+    monkeypatch.setattr("repro.core.ann.train", spy)
+    again = trained_oscillator("chen")
+    assert calls, "stale registry entry was served instead of retrained"
+    # and the re-published entry carries the new stamp
+    saved = dict(np.load(fast_registry / "chen.npz"))
+    assert str(saved[_FINGERPRINT_KEY]) == registry_fingerprint("chen")
+    assert set(bundle) == set(again)
+
+
+def test_fingerprint_depends_on_recipe(monkeypatch):
+    a = registry_fingerprint("chen")
+    monkeypatch.setattr(stream, "_TRAIN_LR", 1e-4)
+    assert registry_fingerprint("chen") != a
+    assert registry_fingerprint("chen") != registry_fingerprint("lorenz")
