@@ -1,6 +1,6 @@
 """Cross-system oscillator-farm benchmark (BENCH_farm.json).
 
-Two sections:
+Three sections:
 
 * ``systems`` — one row per registered chaotic system: the registry-trained
   oscillator drawn through the fused ``ops.chaotic_bits`` path with that
@@ -14,13 +14,24 @@ Two sections:
   gang-compatible core group (same i_dim/h_dim/dtype/config — the four 3-D
   systems) served through ``OscillatorFarm`` with gang scheduling ON vs
   OFF, at two operating points: ``coalesced`` (small tenant flushes, the
-  traffic gangs exist for) and ``bulk`` (full time-block flushes).  Words
-  delivered are verified bit-identical between the two modes before any
-  timing; launches per flush and gang dispatch-cache misses are reported
-  alongside words/s.
+  traffic gangs exist for) and ``bulk`` (full time-block flushes).
+
+* ``planner`` — the demand-shaped launch planner vs the PR 3 padded
+  group-max gang policy.  ``skewed`` is the operating point the planner
+  exists for (one hot tenant drawing 128 word rows per flush, three cold
+  tenants at 8 — the group-max policy makes the cold cores compute 16x
+  overdraw); ``uniform`` checks the no-regression side (the planner must
+  keep picking the padded launch).  The ``GangCostModel`` is fitted from
+  real launches first, so decisions reflect this machine's launch
+  overhead.
+
+All timed flushes separate warmup/compile from steady state: the first
+flush (XLA compiles here) is reported as ``ms_first_flush``, steady-state
+``words_per_s`` starts after one further warm flush.  Delivered words are
+verified bit-identical to ``gang=False`` before any timing.
 
 CPU interpret mode: numbers are functional-relative, not TPU performance;
-relative ordering (and the gang-vs-per-core ratio) is still meaningful.
+relative ordering (and the gang/planner ratios) is still meaningful.
 """
 import json
 import pathlib
@@ -30,15 +41,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.chaotic import SYSTEMS
-from repro.core.dse import (CostModel, LatencyModel, measure_candidate,
-                            select)
+from repro.core.dse import (CostModel, GangCostModel, LatencyModel,
+                            measure_candidate, select)
 from repro.kernels.ops import chaotic_bits
 from repro.prng.stream import _splitmix_seeds, default_params
 from repro.serve.farm import OscillatorFarm, _compat_key
 
-from benchmarks.common import emit, time_fn
+try:
+    from benchmarks.common import emit, time_fn
+except ModuleNotFoundError:          # invoked as `python benchmarks/farm.py`
+    from common import emit, time_fn
 
 LANES_PER_CLIENT = 128
+HOT_ROWS, COLD_ROWS = 128, 8      # the skewed-demand operating point
+UNIFORM_ROWS = 16
 
 
 def _system_rows(n_streams, n_steps, p, lm, cm, nist_words):
@@ -59,7 +75,7 @@ def _system_rows(n_streams, n_steps, p, lm, cm, nist_words):
                                     backend="pallas_interpret", config=cand)
             return words
 
-        us = time_fn(draw, n_iters=2, warmup=1)
+        us = time_fn(draw, n_iters=3, warmup=1)
         words_per_s = n_words / (us / 1e6)
         if nist_words:
             from repro.prng.quality import nist_gate
@@ -98,8 +114,8 @@ def _compatible_group(p, lm, cm):
     return members, cand
 
 
-def _build_farm(group, cand, n_clients, gang):
-    farm = OscillatorFarm(gang=gang)
+def _build_farm(group, cand, n_clients, gang, **farm_kw):
+    farm = OscillatorFarm(gang=gang, **farm_kw)
     for name in group:
         farm.add_core(name, default_params(system=name), config=cand,
                       dtype=jnp.dtype(cand.dtype_name),
@@ -110,26 +126,82 @@ def _build_farm(group, cand, n_clients, gang):
     return farm
 
 
-def _flush_once(farm, group, n_clients, n_words):
+def _flush_once(farm, group, n_clients, words_by_core):
     for name in group:
         for j in range(n_clients):
-            farm.request(name, f"c{j}", n_words)
+            farm.request(name, f"c{j}", words_by_core[name])
     return farm.flush()
+
+
+def _interleaved_flushes(farms, group, n_clients, words_by_core, n_iters,
+                         cold):
+    """Time flushes of several farms, interleaved so host drift cancels.
+
+    ``cold=True`` is cold-start timing: every flush pays its demand's
+    launches.  Repeating identical skewed traffic would let the padded
+    group-max policy turn overdraw into prefetch (cold tenants are served
+    from buffer for the next t_block//2 / rows flushes), measuring buffer
+    amortization instead of launch shaping — the uniform point's regime.
+    So each iteration restores the same post-registration snapshot first
+    and every timed flush serves the full demand vector with cold
+    buffers: the launch-shape cost the planner actually optimizes.
+    Restore and request queueing happen OUTSIDE the timed region.
+
+    Returns {label: {ms_first_flush, ms_per_flush, launches_per_flush}}:
+    the first flush (XLA compiles, caches build) apart from the
+    steady-state median.
+    """
+    snaps = ({label: farm.snapshot() for label, farm in farms.items()}
+             if cold else None)
+    launches = {}
+
+    def once(label):
+        farm = farms[label]
+        if cold:
+            farm.restore(snaps[label])
+        for name in group:
+            for j in range(n_clients):
+                farm.request(name, f"c{j}", words_by_core[name])
+        l0 = farm.launches
+        t0 = time.perf_counter()
+        farm.flush()
+        dt = (time.perf_counter() - t0) * 1e3
+        launches[label] = float(farm.launches - l0)
+        return dt
+
+    first = {label: once(label) for label in farms}   # compile + caches
+    for label in farms:                               # warm
+        once(label)
+    ts = {label: [] for label in farms}
+    for _ in range(n_iters):
+        for label in farms:
+            ts[label].append(once(label))
+    out = {}
+    for label in farms:
+        s = sorted(ts[label])
+        out[label] = {"ms_first_flush": first[label],
+                      "ms_per_flush": s[len(s) // 2],
+                      "launches_per_flush": launches[label]}
+    return out
+
+
+def _assert_bit_identical(a, b):
+    for core in a:
+        for client in a[core]:
+            np.testing.assert_array_equal(a[core][client],
+                                          b[core][client])
 
 
 def _gang_section(n_streams, p, lm, cm, smoke):
     group, cand = _compatible_group(p, lm, cm)
     n_clients = max(1, n_streams // LANES_PER_CLIENT)
+    uniform = {name: 16 * LANES_PER_CLIENT + 37 for name in group}
 
     # Bit-identity gate before any timing: same traffic, both launch modes.
-    check_words = 16 * LANES_PER_CLIENT + 37
     farms = {g: _build_farm(group, cand, n_clients, g) for g in (True, False)}
-    outs = {g: _flush_once(farms[g], group, n_clients, check_words)
+    outs = {g: _flush_once(farms[g], group, n_clients, uniform)
             for g in (True, False)}
-    for core in outs[True]:
-        for client in outs[True][core]:
-            np.testing.assert_array_equal(outs[True][core][client],
-                                          outs[False][core][client])
+    _assert_bit_identical(outs[True], outs[False])
     key = _compat_key(farms[True].services[group[0]])
 
     protocols = {"coalesced": 16}
@@ -149,28 +221,17 @@ def _gang_section(n_streams, p, lm, cm, smoke):
         "protocols": {},
     }
     for proto, rows in protocols.items():
-        n_words = rows * LANES_PER_CLIENT
-        words_per_flush = len(group) * n_clients * n_words
-        stats = {}
-        for gang in (True, False):
-            farm = _build_farm(group, cand, n_clients, gang)
-            _flush_once(farm, group, n_clients, n_words)   # compile
-            _flush_once(farm, group, n_clients, n_words)
-            l0 = farm.launches
-            ts = []
-            for _ in range(n_iters):
-                t0 = time.perf_counter()
-                _flush_once(farm, group, n_clients, n_words)
-                ts.append(time.perf_counter() - t0)
-            ts.sort()
-            dt = ts[len(ts) // 2]
-            stats[gang] = {
-                "words_per_s": words_per_flush / dt,
-                "ms_per_flush": dt * 1e3,
-                "launches_per_flush": (farm.launches - l0) / (n_iters + 0.0),
-            }
-            if gang:
-                stats[gang]["dispatch_misses"] = farm.dispatch_misses
+        words = {name: rows * LANES_PER_CLIENT for name in group}
+        words_per_flush = len(group) * n_clients * rows * LANES_PER_CLIENT
+        gang_farms = {g: _build_farm(group, cand, n_clients, g)
+                      for g in (True, False)}
+        timings = _interleaved_flushes(gang_farms, group, n_clients, words,
+                                       n_iters, cold=False)
+        stats = {g: dict(timings[g],
+                         words_per_s=words_per_flush
+                         / (timings[g]["ms_per_flush"] / 1e3))
+                 for g in (True, False)}
+        stats[True]["dispatch_misses"] = gang_farms[True].dispatch_misses
         speedup = (stats[True]["words_per_s"] /
                    stats[False]["words_per_s"])
         result["protocols"][proto] = {
@@ -189,25 +250,150 @@ def _gang_section(n_streams, p, lm, cm, smoke):
     return result
 
 
+def _planner_section(n_streams, p, lm, cm, smoke, profile=False):
+    """Demand-shaped planner vs the PR 3 padded group-max gang policy.
+
+    Measured on the f32 variant of the group's DSE solution: CPU interpret
+    mode emulates bf16 by converting around every vector op, which makes
+    per-op dispatch dominate and a C-tall stacked sweep cost the same as a
+    single-core one — hiding exactly the overdraw compute the planner
+    eliminates.  f32 keeps interpret costs proportional to array work, the
+    regime a real TPU is in for either dtype (the gang section keeps the
+    DSE-chosen bf16).
+    """
+    import dataclasses
+    group, cand = _compatible_group(p, lm, cm)
+    cand = dataclasses.replace(cand, dtype_bytes=4)
+    n_clients = max(1, n_streams // LANES_PER_CLIENT)
+    hot = group[0]
+    skewed = {name: (HOT_ROWS if name == hot else COLD_ROWS)
+              * LANES_PER_CLIENT for name in group}
+    uniform = {name: UNIFORM_ROWS * LANES_PER_CLIENT for name in group}
+    n_iters = 3 if smoke else 9
+
+    # Launch-cost model fitted from real launches of this exact candidate,
+    # so planner decisions reflect this machine (paper: estimate-then-
+    # validate, applied to the launch model).
+    model = GangCostModel.fit(cand, backend="pallas_interpret")
+    result = {
+        "group": group, "hot_core": hot,
+        "dtype": cand.dtype_name,
+        "rows": {"hot": HOT_ROWS, "cold": COLD_ROWS,
+                 "uniform": UNIFORM_ROWS},
+        "model": {"launch_overhead_cycles": model.launch_overhead_cycles,
+                  "cell_overhead_cycles": model.cell_overhead_cycles,
+                  "stacked_step_scale": model.stacked_step_scale,
+                  "freeze_row_cycles": model.freeze_row_cycles,
+                  "sec_per_cycle": model.sec_per_cycle},
+    }
+
+    # Bit-identity gate across two skewed flush rounds (the second round
+    # exercises buffered state from the first) before any timing.
+    check = {"planner": _build_farm(group, cand, n_clients, True,
+                                    gang_cost_model=model),
+             "solo": _build_farm(group, cand, n_clients, False)}
+    for _ in range(2):
+        outs = {k: _flush_once(f, group, n_clients, skewed)
+                for k, f in check.items()}
+        _assert_bit_identical(outs["planner"], outs["solo"])
+    result["bit_identical"] = True
+
+    for point, words in (("skewed", skewed), ("uniform", uniform)):
+        words_per_flush = n_clients * sum(words.values())
+        farms = {"planner": _build_farm(group, cand, n_clients, True,
+                                        gang_cost_model=model),
+                 "policy": _build_farm(group, cand, n_clients, True,
+                                       planner=False)}
+        timings = _interleaved_flushes(
+            farms, group, n_clients, words,
+            n_iters if point == "skewed" else max(n_iters, 7),
+            cold=(point == "skewed"))
+        stats = {}
+        for label, farm in farms.items():
+            stats[label] = dict(
+                timings[label],
+                words_per_s=words_per_flush
+                / (timings[label]["ms_per_flush"] / 1e3),
+                dispatch_misses=farm.dispatch_misses,
+                decisions=farm.plan_decisions,
+            )
+        speedup = (stats["planner"]["words_per_s"]
+                   / stats["policy"]["words_per_s"])
+        result[point] = {
+            "words_per_flush": words_per_flush,
+            "timing": "cold_start" if point == "skewed" else "steady_state",
+            "planner": stats["planner"], "policy": stats["policy"],
+            "speedup": speedup,
+        }
+        emit(f"farm/planner_{point}", stats["planner"]["ms_per_flush"] * 1e3,
+             f"speedup={speedup:.2f}x;"
+             f"planner_words_per_s={stats['planner']['words_per_s']:.3e};"
+             f"policy_words_per_s={stats['policy']['words_per_s']:.3e};"
+             f"decisions={stats['planner']['decisions']}")
+
+    if profile:
+        farm = _build_farm(group, cand, n_clients, True,
+                           gang_cost_model=model, profile=True)
+        _interleaved_flushes({"profile": farm}, group, n_clients, skewed,
+                             n_iters, cold=True)
+        prof = farm.profile_stats
+        n = max(prof.pop("flushes"), 1.0)
+        result["profile_ms_per_flush"] = {k: v / n * 1e3
+                                          for k, v in prof.items()}
+        emit("farm/planner_profile", 0.0,
+             ";".join(f"{k}={v:.2f}ms"
+                      for k, v in result["profile_ms_per_flush"].items()))
+    return result
+
+
 def run_farm(n_streams: int = 256, n_steps: int = 1024, p: int = 1,
              out_json: str | None = "BENCH_farm.json",
-             smoke: bool = False, nist_words: int = 20_000) -> dict:
+             smoke: bool = False, nist_words: int = 20_000,
+             profile: bool = False) -> dict:
     lm, cm = LatencyModel.fit(), CostModel.fit()
     if smoke:
         n_steps = min(n_steps, 256)
         nist_words = 0
     table = _system_rows(n_streams, n_steps, p, lm, cm, nist_words)
     gang = _gang_section(n_streams, p, lm, cm, smoke)
+    planner = _planner_section(n_streams, p, lm, cm, smoke, profile=profile)
     res = {"config": {"n_streams": n_streams, "n_steps": n_steps,
                       "pareto_p": p, "backend": "pallas_interpret",
                       "smoke": smoke},
            "systems": table,
-           "gang": gang}
+           "gang": gang,
+           "planner": planner}
     if out_json:
         pathlib.Path(out_json).write_text(json.dumps(res, indent=2))
     return res
 
 
+def planner_gate(res: dict) -> list[str]:
+    """CI perf-smoke acceptance: bit-identity must hold and the planner
+    must not lose to the padded group-max policy on the skewed workload."""
+    errors = []
+    if not res["planner"].get("bit_identical"):
+        errors.append("planner delivered words NOT bit-identical to "
+                      "gang=False")
+    sk = res["planner"]["skewed"]
+    if sk["speedup"] < 1.0:
+        errors.append(
+            f"planner underperforms the group-max policy on the skewed "
+            f"workload: {sk['speedup']:.3f}x "
+            f"({sk['planner']['words_per_s']:.3e} vs "
+            f"{sk['policy']['words_per_s']:.3e} words/s)")
+    return errors
+
+
 if __name__ == "__main__":
     import sys
-    run_farm(smoke="--smoke" in sys.argv)
+    res = run_farm(smoke="--smoke" in sys.argv,
+                   profile="--profile" in sys.argv)
+    errors = planner_gate(res)
+    if errors:
+        for e in errors:
+            print(f"PLANNER GATE FAIL: {e}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"planner gate OK: skewed speedup "
+          f"{res['planner']['skewed']['speedup']:.2f}x, uniform ratio "
+          f"{res['planner']['uniform']['speedup']:.2f}x")

@@ -6,9 +6,15 @@ import traceback
 
 
 def main() -> None:
+    import functools
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (e.g. table1,fig5)")
+    ap.add_argument("--profile", action="store_true",
+                    help="dump per-stage flush wall times "
+                         "(plan/stack/launch/absorb) for suites that "
+                         "drive the serving path (farm)")
     args = ap.parse_args()
 
     from benchmarks import (farm, fig3_design_space, fig4_cost_curves,
@@ -23,7 +29,7 @@ def main() -> None:
         "fig5": fig5_pareto.run,
         "throughput": throughput.run,
         "throughput_fused": throughput.run_fused,
-        "farm": farm.run_farm,
+        "farm": functools.partial(farm.run_farm, profile=args.profile),
     }
     selected = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

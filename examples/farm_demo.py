@@ -84,6 +84,17 @@ def main():
     assert np.array_equal(a, b), "pending draw lost across snapshot!"
     print(f"  chen/bob: {a.size} queued words survived snapshot/restore")
 
+    print("\n=== 5. demand-shaped gang planning ===")
+    # one hot tenant, everyone else cold: the planner shapes the launch to
+    # demand (ragged row maps / a split) instead of padding the whole gang
+    # to the hot tenant's row count.
+    hot, *cold = farm.cores
+    farm.request(hot, "alice", 64 * 128)
+    for core in cold:
+        farm.request(core, "alice", 512)
+    farm.flush()
+    print(f"  skewed flush decisions so far: {farm.plan_decisions}")
+
     print(f"\n{len(farm.cores)} cores ({sum(1 for _ in farm.cores)} systems, "
           f"incl. one 4-D hyperchaotic), {farm.launches} launches total "
           f"({farm.gang_launches} gang-scheduled).")

@@ -234,6 +234,236 @@ class CostModel:
 
 
 # ---------------------------------------------------------------------------
+# Gang launch-cost model: Eq. 8/9 lifted from kernel instances to LAUNCHES
+# ---------------------------------------------------------------------------
+
+# Fixed per-launch overhead (dispatch, host sync, argument marshalling) in
+# model cycles.  The PR 3 gang scheduler implicitly set this to infinity
+# ("one launch is always cheaper"); the planner needs a finite default, and
+# ``GangCostModel.fit`` replaces it with a measured value.
+GANG_LAUNCH_OVERHEAD_CYCLES = 30_000.0
+# Host-side buffering rate for overdraw words (absorb copies them into
+# per-client numpy buffers); modeled well below HBM speed.
+HOST_BUFFER_BYTES_PER_CYCLE = HBM_BYTES_PER_CYCLE / 4.0
+
+
+@dataclasses.dataclass
+class GangCostModel:
+    """Predicts the cost of ONE kernel launch for (membership, per-core
+    rows, layout) — the estimator a gang *planner* minimizes over.
+
+    ``LatencyModel``/``CostModel`` (paper Eqs. 8/9) estimate the per-stream
+    step latency and VMEM cost of a kernel instance; they say nothing about
+    what a whole launch costs, which is what decides whether a skewed-demand
+    group should launch once at the group max (PR 3's policy), once ragged
+    (each lane block computes only its own demand), or split into several
+    launches.  The launch cost here is
+
+        cycles = launch_overhead_cycles
+               + sum_over_lane_blocks( 2 * rows_block ) * step_cycles
+               + buffered_overdraw_words * 4 / HOST_BUFFER_BYTES_PER_CYCLE
+
+    where ``step_cycles`` comes from the same microarchitectural accounting
+    as ``measure_candidate`` — for a sublane-stacked gang sweep the
+    compute/memory terms scale with the stack height C (one fused op
+    advances all C cores), while the per-cell control overhead is paid once.
+
+    ``fit`` calibrates the wall-clock-sensitive knobs against real
+    launches on the serving machine: the fixed per-launch overhead, a
+    per-grid-cell overhead (an analytic share is already inside
+    ``step_cycles`` via ``_overhead_share``, but executed cells can carry
+    a much larger fixed cost — e.g. Pallas interpret mode pays several ms
+    per cell), and a stacked-sweep scale factor (XLA executes a C-tall
+    sweep at other than exactly C times the single-core rate).
+    ``sec_per_cycle`` is kept so fitted costs can be reported in seconds.
+    """
+
+    launch_overhead_cycles: float = GANG_LAUNCH_OVERHEAD_CYCLES
+    cell_overhead_cycles: float = 0.0
+    stacked_step_scale: float = 1.0
+    # Per-row cost of the ragged-stacked freeze (one mask compare + select
+    # over the stacked state per word row); analytic default ~2 vreg ops.
+    freeze_row_cycles: float = 4.0
+    sec_per_cycle: Optional[float] = None
+
+    def step_cycles(self, c: Candidate, stack: int = 1) -> float:
+        """Cycles for one oscillator step of one s_block-wide lane block
+        with ``stack`` cores stacked on the sublane axis."""
+        m = measure_candidate(c)
+        compute = m["compute_cycles"] * stack
+        memory = m["memory_cycles"] * stack
+        scale = self.stacked_step_scale if stack > 1 else 1.0
+        return max(compute, memory) * scale + _overhead_share(c)
+
+    def launch_cycles(self, c: Candidate, rows_by_block: Sequence[int],
+                      *, stack: int = 1) -> float:
+        """One launch computing ``rows_by_block[i]`` word rows in lane
+        block ``i`` (2 oscillator steps per word row).
+
+        Only the FMA steps shrink with a block's rows: the grid is static
+        (every block iterates the launch's full time axis), so an
+        early-out cell still pays its dispatch/DMA share — cell overhead
+        counts the whole max(rows)-deep grid for every block.
+        """
+        steps = 2.0 * float(sum(rows_by_block))
+        rows_per_cell = max(1, c.t_block // 2)
+        t_cells = max(1, -(-int(max(rows_by_block)) // rows_per_cell))
+        cells = len(rows_by_block) * t_cells
+        return (self.launch_overhead_cycles
+                + self.cell_overhead_cycles * cells
+                + steps * self.step_cycles(c, stack))
+
+    def buffer_cycles(self, overdrawn_words: float) -> float:
+        """Host cost of buffering overdraw words nobody asked for yet."""
+        return 4.0 * float(overdrawn_words) / HOST_BUFFER_BYTES_PER_CYCLE
+
+    def gang_cost(self, c: Candidate, demands: Sequence[int],
+                  blocks: Sequence[int], lanes: Sequence[int], *,
+                  layout: str, rows_by_block: Optional[Sequence[int]] = None
+                  ) -> float:
+        """Cost of one gang launch serving members with ``demands`` word
+        rows (``blocks``/``lanes`` = per-member lane-block and live-lane
+        counts).
+
+        layout 'stacked': the whole group advances max(demands) rows per
+        lane block (ragged freeze changes buffering, not compute).
+        layout 'concat': pass ``rows_by_block`` for a ragged launch — the
+        per-BLOCK effective rows, ``sum(blocks)`` long, member ``i``
+        occupying ``blocks[i]`` consecutive equal entries; None means the
+        padded group-max launch.
+        """
+        dmax = max(demands)
+        if layout == "stacked":
+            cost = self.launch_cycles(c, [dmax] * blocks[0],
+                                      stack=len(demands))
+            # ragged freeze absorbs exactly the demand -> no overdraw, but
+            # pays the per-row freeze mask over the whole launch
+            if rows_by_block is not None:
+                cost += self.freeze_row_cycles * dmax * blocks[0]
+                over = 0
+            else:
+                over = sum((dmax - d) * l for d, l in zip(demands, lanes))
+        else:
+            if rows_by_block is None:
+                rows_by_block = [dmax] * sum(blocks)
+                per_member = [dmax] * len(demands)
+            else:
+                # every block of a member computes its demand, so the
+                # member's advanced rows are its first block's entry
+                starts = np.cumsum([0] + list(blocks[:-1]))
+                per_member = [rows_by_block[int(s)] for s in starts]
+            over = sum((r - d) * l
+                       for r, d, l in zip(per_member, demands, lanes))
+            cost = self.launch_cycles(c, rows_by_block)
+        return cost + self.buffer_cycles(max(0, over))
+
+    def solo_cost(self, c: Candidate, rows: int, blocks: int) -> float:
+        """One per-core launch of ``rows`` word rows over ``blocks`` lane
+        blocks."""
+        return self.launch_cycles(c, [rows] * blocks)
+
+    def seconds(self, cycles: float) -> Optional[float]:
+        return None if self.sec_per_cycle is None else cycles * self.sec_per_cycle
+
+    @classmethod
+    def fit(cls, c: Candidate, *, backend: str = "auto", n_cores: int = 3,
+            reps: int = 3) -> "GangCostModel":
+        """Calibrate (launch_overhead_cycles, cell_overhead_cycles,
+        stacked_step_scale, sec_per_cycle) from real launches of
+        candidate ``c`` — the paper's estimate-then-validate loop applied
+        to the launch model.
+
+        Five measurements separate the terms:
+          t1  solo launch, 1 grid cell   (t_block//2 rows)
+          t2  solo launch, 2 cells, 2x the steps
+          t3  solo launch, 2 cells, SAME steps (t_block halved)
+          t4  sublane-stacked gang launch of ``n_cores`` cores, 1 cell
+          t5  the same stacked launch with a skewed row map (freeze)
+        so  cell_sec = t3 - t1,  step_sec = (t2 - t3) / steps,
+        launch_sec = t1 - cell_sec - steps * step_sec, t4 gives the
+        stacked-sweep scale and t5 - t4 the per-row freeze cost.  Runs
+        5 + 5*reps kernel launches.
+        """
+        import dataclasses as _dc
+        import time
+
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels import ops  # lazy: keep dse importable alone
+
+        base = cls()
+        rng = np.random.default_rng(0)
+        dtype = jnp.dtype(c.dtype_name)
+
+        def mk_params():
+            return {"w1": jnp.asarray(rng.normal(0, .4, (c.i_dim, c.h_dim)),
+                                      dtype),
+                    "b1": jnp.asarray(rng.normal(0, .1, (c.h_dim,)), dtype),
+                    "w2": jnp.asarray(rng.normal(0, .4, (c.h_dim, c.i_dim)),
+                                      dtype),
+                    "b2": jnp.asarray(rng.normal(0, .1, (c.i_dim,)), dtype)}
+
+        def timed(fn):
+            fn()                                   # compile
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                out = fn()
+                jax.tree_util.tree_map(
+                    lambda a: a.block_until_ready()
+                    if hasattr(a, "block_until_ready") else a, out)
+                ts.append(time.perf_counter() - t0)
+            ts.sort()
+            return ts[len(ts) // 2]
+
+        params = mk_params()
+        x0 = jnp.asarray(rng.normal(0, .3, (c.s_block, c.i_dim)), dtype)
+        rows = max(4, c.t_block // 2)
+        steps = 2 * rows
+        c_half = _dc.replace(c, t_block=max(2, c.t_block // 2))
+        t1 = timed(lambda: ops.chaotic_bits(
+            params, x0, steps, config=c, backend=backend))
+        t2 = timed(lambda: ops.chaotic_bits(
+            params, x0, 2 * steps, config=c, backend=backend))
+        t3 = timed(lambda: ops.chaotic_bits(
+            params, x0, steps, config=c_half, backend=backend))
+        if t2 <= t3:                              # timing noise: keep defaults
+            return base
+        cell_sec = max(0.0, t3 - t1)
+        step_sec = (t2 - t3) / steps
+        launch_sec = max(0.0, t1 - cell_sec - steps * step_sec)
+        spc = step_sec / base.step_cycles(c)
+        overhead = float(np.clip(launch_sec / spc, 500.0, 5e8))
+        cell_overhead = float(np.clip(cell_sec / spc, 0.0, 5e8))
+        scale, freeze = 1.0, cls.freeze_row_cycles
+        if c.compute_unit == "vpu":
+            plist = [mk_params() for _ in range(n_cores)]
+            stacked = {k: jnp.stack([p[k] for p in plist])
+                       for k in ("w1", "b1", "w2", "b2")}
+            xs = jnp.asarray(rng.normal(0, .3, (n_cores, c.s_block, c.i_dim)),
+                             dtype)
+            t4 = timed(lambda: ops.chaotic_bits_gang_stacked(
+                stacked, xs, steps, config=c, backend=backend))
+            st_step_sec = max(1e-12, t4 - launch_sec - cell_sec) / steps
+            m = measure_candidate(c)
+            sweep = max(m["compute_cycles"], m["memory_cycles"]) * n_cores
+            scale = float(np.clip(
+                (st_step_sec / spc - _overhead_share(c)) / sweep, 0.1, 4.0))
+            skew_map = np.asarray([rows] + [min(rows, 4)] * (n_cores - 1),
+                                  np.int32)
+            t5 = timed(lambda: ops.chaotic_bits_gang_stacked(
+                stacked, xs, steps, row_map=skew_map, config=c,
+                backend=backend))
+            freeze = float(np.clip((t5 - t4) / rows / spc,
+                                   cls.freeze_row_cycles, 5e7))
+        return cls(launch_overhead_cycles=overhead,
+                   cell_overhead_cycles=cell_overhead,
+                   stacked_step_scale=scale, freeze_row_cycles=freeze,
+                   sec_per_cycle=spc)
+
+
+# ---------------------------------------------------------------------------
 # Exploration (paper §III-B.1, Figs. 3 & 5)
 # ---------------------------------------------------------------------------
 

@@ -28,6 +28,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 try:  # TPU-specific memory spaces (present in jax 0.8.x)
@@ -359,10 +360,9 @@ def chaotic_ann_bits_pallas(w1, b1, w2, b2, x0, word_offset=0, *,
 # ---------------------------------------------------------------------------
 
 
-def _gang_bits_kernel(cmap_ref, w1_ref, b1_ref, w2_ref, b2_ref, x0_ref,
-                      off_ref, words_ref, state_ref, *,
-                      t_block: int, unroll: int, activation: str,
-                      compute_unit: str, i_dim: int, h_dim: int):
+def _gang_bits_kernel(*refs, t_block: int, unroll: int, activation: str,
+                      compute_unit: str, i_dim: int, h_dim: int,
+                      ragged: bool):
     """One (lane-block, time-block) grid cell of the gang PRNG kernel.
 
     Identical math to ``_bits_kernel`` (state output doubles as the VMEM
@@ -372,8 +372,23 @@ def _gang_bits_kernel(cmap_ref, w1_ref, b1_ref, w2_ref, b2_ref, x0_ref,
     every lane block computes its own network in the same launch.
     ``cmap_ref`` is the prefetched map itself — consumed by the index maps,
     unused in the body.
+
+    Ragged variant: a second scalar-prefetched map carries the word rows
+    each lane block actually owes.  The row loop's trip count becomes
+    dynamic — a cell computes only the unroll-chunks covering its block's
+    remaining demand and cells wholly past it fall through with the state
+    carry untouched — so a ragged gang launch does no overdraw FMA work.
+    Word rows past a block's demand are left unwritten (garbage); callers
+    slice to the per-block demand.
     """
-    del cmap_ref
+    if ragged:
+        (_cmap_ref, rmap_ref, w1_ref, b1_ref, w2_ref, b2_ref, x0_ref,
+         off_ref, words_ref, state_ref) = refs
+    else:
+        (_cmap_ref, w1_ref, b1_ref, w2_ref, b2_ref, x0_ref,
+         off_ref, words_ref, state_ref) = refs
+        rmap_ref = None
+    g = pl.program_id(0)
     t = pl.program_id(1)
     rows_per_block = t_block // 2
 
@@ -402,12 +417,37 @@ def _gang_bits_kernel(cmap_ref, w1_ref, b1_ref, w2_ref, b2_ref, x0_ref,
 
     x = state_ref[...]
     n_chunks = rows_per_block // unroll
-    if n_chunks == 1:
+    if ragged:
+        remaining = jnp.maximum(rmap_ref[g] - t * rows_per_block, 0)
+        active = jnp.minimum((remaining + unroll - 1) // unroll, n_chunks)
+        x = jax.lax.fori_loop(0, active,
+                              lambda c, x: chunk(x, c * unroll), x)
+    elif n_chunks == 1:
         x = chunk(x, 0)
     else:
         x = jax.lax.fori_loop(0, n_chunks,
                               lambda c, x: chunk(x, c * unroll), x)
     state_ref[...] = x
+
+
+def gang_row_granularity(n_steps: int, t_block: int, unroll: int) -> int:
+    """Word-row granularity of ragged early-out in the lane-concat kernel.
+
+    The dynamic row loop skips whole unroll-chunks, so a block's computed
+    rows are its ``row_map`` entry rounded up to the post-gcd unroll (the
+    same ``_bits_blocks`` collapse the kernel itself applies).
+    """
+    _, un = _bits_blocks(n_steps, t_block, unroll)
+    return un
+
+
+def gang_effective_rows(row_map, n_steps: int, t_block: int,
+                        unroll: int) -> np.ndarray:
+    """Word rows each lane block of a ragged gang launch actually computes
+    (and therefore the rows its member's state/counters advance by)."""
+    un = gang_row_granularity(n_steps, t_block, unroll)
+    r = np.asarray(row_map, np.int64)
+    return np.minimum(-(-r // un) * un, n_steps // 2).astype(np.int32)
 
 
 @functools.partial(
@@ -416,7 +456,8 @@ def _gang_bits_kernel(cmap_ref, w1_ref, b1_ref, w2_ref, b2_ref, x0_ref,
                      "compute_unit", "interpret"),
 )
 def chaotic_ann_gang_bits_pallas(w1, b1, w2, b2, x0, core_map, word_offset=0,
-                                 *, n_steps: int, s_block: int = 256,
+                                 row_map=None, *, n_steps: int,
+                                 s_block: int = 256,
                                  t_block: int = 128, unroll: int = 1,
                                  activation: str = "relu",
                                  compute_unit: str = "vpu",
@@ -440,10 +481,18 @@ def chaotic_ann_gang_bits_pallas(w1, b1, w2, b2, x0, core_map, word_offset=0,
         multiple before concatenating).
       core_map: (n_blocks,) int array, values in [0, C).
       word_offset: scalar or (S,) uint32 per-lane word-row offsets.
+      row_map: optional (n_blocks,) int array — word rows each lane block
+        owes (demand-shaped launch).  Block ``g`` computes exactly
+        ``gang_effective_rows(row_map, ...)[g]`` rows (its demand rounded
+        up to the unroll-chunk granularity) and its state advances by that
+        many rows; word rows past it are unwritten garbage.  Per lane the
+        computed prefix is bit-identical to a per-core launch of that many
+        rows (absolute-row Weyl indexing).  None = every block computes
+        all ``n_steps // 2`` rows (the padded group-max launch).
       n_steps: steps to run; must be even (2 samples -> 1 word row).
     Returns:
       words: (n_steps // 2, S) uint32 word rows,
-      final_state: (S, I) oscillator state after n_steps.
+      final_state: (S, I) oscillator state after each lane's own rows.
     """
     if n_steps < 2 or n_steps % 2:
         raise ValueError(f"n_steps must be even and >= 2, got {n_steps}")
@@ -454,6 +503,10 @@ def chaotic_ann_gang_bits_pallas(w1, b1, w2, b2, x0, core_map, word_offset=0,
         raise ValueError(
             f"pool of {s_total} lanes != {n_blocks} core-map blocks x "
             f"s_block {s_block}; pad each member pool to an s_block multiple")
+    ragged = row_map is not None
+    if ragged and row_map.shape != core_map.shape:
+        raise ValueError(f"row_map shape {row_map.shape} != core_map shape "
+                         f"{core_map.shape}")
     dtype = x0.dtype
     t_block, unroll = _bits_blocks(n_steps, t_block, unroll)
 
@@ -475,33 +528,43 @@ def chaotic_ann_gang_bits_pallas(w1, b1, w2, b2, x0, core_map, word_offset=0,
     offp = jnp.broadcast_to(off, (s_total,)).reshape(1, s_total)
     cmap = jnp.asarray(core_map, jnp.int32)
 
+    # Scalar-prefetch arguments: the core-id map always; the per-block row
+    # map only for ragged launches (the index maps ignore it).
+    scalars = [cmap]
+    if ragged:
+        scalars.append(jnp.minimum(jnp.asarray(row_map, jnp.int32), n_rows))
+    n_sc = len(scalars)
+
+    def _w(g, t, *maps):
+        return (maps[0][g], 0, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=n_sc,
         grid=(n_blocks, n_steps // t_block),
         in_specs=[
-            pl.BlockSpec((1, i_pad, h_pad), lambda g, t, m: (m[g], 0, 0)),
-            pl.BlockSpec((1, h_pad, 1), lambda g, t, m: (m[g], 0, 0)),
-            pl.BlockSpec((1, h_pad, i_pad), lambda g, t, m: (m[g], 0, 0)),
-            pl.BlockSpec((1, i_pad, 1), lambda g, t, m: (m[g], 0, 0)),
-            pl.BlockSpec((i_pad, s_block), lambda g, t, m: (0, g)),   # x0
-            pl.BlockSpec((1, s_block), lambda g, t, m: (0, g)),       # offsets
+            pl.BlockSpec((1, i_pad, h_pad), _w),
+            pl.BlockSpec((1, h_pad, 1), _w),
+            pl.BlockSpec((1, h_pad, i_pad), _w),
+            pl.BlockSpec((1, i_pad, 1), _w),
+            pl.BlockSpec((i_pad, s_block), lambda g, t, *m: (0, g)),   # x0
+            pl.BlockSpec((1, s_block), lambda g, t, *m: (0, g)),  # offsets
         ],
         out_specs=[
-            pl.BlockSpec((t_block // 2, s_block), lambda g, t, m: (t, g)),
-            pl.BlockSpec((i_pad, s_block), lambda g, t, m: (0, g)),
+            pl.BlockSpec((t_block // 2, s_block), lambda g, t, *m: (t, g)),
+            pl.BlockSpec((i_pad, s_block), lambda g, t, *m: (0, g)),
         ],
     )
     words, state = pl.pallas_call(
         functools.partial(_gang_bits_kernel, t_block=t_block, unroll=unroll,
                           activation=activation, compute_unit=compute_unit,
-                          i_dim=i_dim, h_dim=h_dim),
+                          i_dim=i_dim, h_dim=h_dim, ragged=ragged),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((n_rows, s_total), jnp.uint32),
             jax.ShapeDtypeStruct((i_pad, s_total), dtype),
         ],
         interpret=interpret,
-    )(cmap, w1p, b1p, w2p, b2p, x0p, offp)
+    )(*scalars, w1p, b1p, w2p, b2p, x0p, offp)
 
     return words, state[:i_dim, :].T
 
@@ -561,11 +624,25 @@ def _make_stacked_step(w1t, b1s, w2t, b2s, *, activation: str,
     return one_step
 
 
-def _gang_stacked_kernel(w1t_ref, b1_ref, w2t_ref, b2_ref, x0_ref, off_ref,
-                         words_ref, state_ref, *, t_block: int, unroll: int,
+def _gang_stacked_kernel(*refs, t_block: int, unroll: int,
                          activation: str, n_cores: int, i_pad: int,
-                         h_pad: int, i_dim: int, h_dim: int):
-    """One (lane-block, time-block) cell computing ALL C cores at once."""
+                         h_pad: int, i_dim: int, h_dim: int, ragged: bool):
+    """One (lane-block, time-block) cell computing ALL C cores at once.
+
+    Ragged variant: an extra (C, 1) row-map input freezes a core's state
+    once its own word-row demand is met — the stacked FMA sweep still
+    spans the whole group (the sublane stack is one fused op), but a
+    frozen core's state stops advancing at exactly its demand, so its
+    final state (and word prefix) is bit-identical to a per-core launch
+    of that many rows.  Word rows past a core's demand are garbage.
+    """
+    if ragged:
+        (w1t_ref, b1_ref, w2t_ref, b2_ref, x0_ref, off_ref, rmap_ref,
+         words_ref, state_ref) = refs
+    else:
+        (w1t_ref, b1_ref, w2t_ref, b2_ref, x0_ref, off_ref,
+         words_ref, state_ref) = refs
+        rmap_ref = None
     t = pl.program_id(1)
     rows_per_block = t_block // 2
 
@@ -578,6 +655,7 @@ def _gang_stacked_kernel(w1t_ref, b1_ref, w2t_ref, b2_ref, x0_ref, off_ref,
         activation=activation, n_cores=n_cores, i_pad=i_pad, h_pad=h_pad,
         i_dim=i_dim, h_dim=h_dim)
     offs = off_ref[...]
+    rmap = rmap_ref[...] if ragged else None
 
     def one_row(x, r):
         x1 = one_step(x)
@@ -588,6 +666,10 @@ def _gang_stacked_kernel(w1t_ref, b1_ref, w2t_ref, b2_ref, x0_ref, off_ref,
         row_idx = offs + (t * rows_per_block + r).astype(jnp.uint32)
         word = word ^ (row_idx * jnp.uint32(_GOLDEN))
         words_ref[pl.ds(r, 1), :, :] = _finalize(word)[None]
+        if ragged:
+            alive = (t * rows_per_block + r) < rmap          # (C, 1) bool
+            keep = jnp.repeat(alive, i_pad, axis=0)          # core-major
+            x2 = jnp.where(keep, x2, x)
         return x2
 
     def chunk(x, base):
@@ -610,7 +692,8 @@ def _gang_stacked_kernel(w1t_ref, b1_ref, w2t_ref, b2_ref, x0_ref, off_ref,
     static_argnames=("n_steps", "s_block", "t_block", "unroll", "activation",
                      "compute_unit", "interpret"),
 )
-def chaotic_ann_gang_stacked_pallas(w1, b1, w2, b2, x0, word_offset=0, *,
+def chaotic_ann_gang_stacked_pallas(w1, b1, w2, b2, x0, word_offset=0,
+                                    row_map=None, *,
                                     n_steps: int, s_block: int = 256,
                                     t_block: int = 128, unroll: int = 1,
                                     activation: str = "relu",
@@ -636,6 +719,13 @@ def chaotic_ann_gang_stacked_pallas(w1, b1, w2, b2, x0, word_offset=0, *,
       w1 (C, I, H), b1 (C, H), w2 (C, H, I), b2 (C, I): stacked weights.
       x0 (C, S, I): one equal-size pool per core.
       word_offset: scalar or (C, S) uint32 per-lane word-row offsets.
+      row_map: optional (C,) int array of per-core word-row demands.  The
+        stacked sweep still advances the whole group together (no FMA
+        saved — the sublane stack is one fused op), but core ``c``'s state
+        is frozen after exactly ``row_map[c]`` rows, so its final state and
+        its ``words[:row_map[c]]`` prefix are bit-identical to a per-core
+        launch of ``2 * row_map[c]`` steps; later word rows are garbage.
+        None = every core computes all rows (the padded group-max launch).
     Returns:
       words: (n_steps // 2, C, S) uint32, final_state: (C, S, I).
     """
@@ -677,25 +767,37 @@ def chaotic_ann_gang_stacked_pallas(w1, b1, w2, b2, x0, word_offset=0, *,
     off = jnp.asarray(word_offset, jnp.uint32)
     offp = jnp.zeros((n_cores, s_pad), jnp.uint32).at[:, :s_total].set(
         jnp.broadcast_to(off, (n_cores, s_total)))
+    ragged = row_map is not None
+
+    in_specs = [
+        pl.BlockSpec((i_dim, n_cores * h_pad, 1),
+                     lambda s, t: (0, 0, 0)),                 # w1t
+        pl.BlockSpec((n_cores * h_pad, 1), lambda s, t: (0, 0)),
+        pl.BlockSpec((h_dim, n_cores * i_pad, 1),
+                     lambda s, t: (0, 0, 0)),                 # w2t
+        pl.BlockSpec((n_cores * i_pad, 1), lambda s, t: (0, 0)),
+        pl.BlockSpec((n_cores * i_pad, s_block),
+                     lambda s, t: (0, s)),                    # x0
+        pl.BlockSpec((n_cores, s_block), lambda s, t: (0, s)),  # offsets
+    ]
+    inputs = [w1t, b1s, w2t, b2s, x0p, offp]
+    if ragged:
+        if np.shape(row_map) != (n_cores,):
+            raise ValueError(f"row_map must have shape ({n_cores},), got "
+                             f"{np.shape(row_map)}")
+        rmapp = jnp.minimum(jnp.asarray(row_map, jnp.int32),
+                            n_rows).reshape(n_cores, 1)
+        in_specs.append(pl.BlockSpec((n_cores, 1), lambda s, t: (0, 0)))
+        inputs.append(rmapp)
 
     grid = (s_pad // s_block, n_steps // t_block)
     words, state = pl.pallas_call(
         functools.partial(_gang_stacked_kernel, t_block=t_block,
                           unroll=unroll, activation=activation,
                           n_cores=n_cores, i_pad=i_pad, h_pad=h_pad,
-                          i_dim=i_dim, h_dim=h_dim),
+                          i_dim=i_dim, h_dim=h_dim, ragged=ragged),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((i_dim, n_cores * h_pad, 1),
-                         lambda s, t: (0, 0, 0)),                 # w1t
-            pl.BlockSpec((n_cores * h_pad, 1), lambda s, t: (0, 0)),
-            pl.BlockSpec((h_dim, n_cores * i_pad, 1),
-                         lambda s, t: (0, 0, 0)),                 # w2t
-            pl.BlockSpec((n_cores * i_pad, 1), lambda s, t: (0, 0)),
-            pl.BlockSpec((n_cores * i_pad, s_block),
-                         lambda s, t: (0, s)),                    # x0
-            pl.BlockSpec((n_cores, s_block), lambda s, t: (0, s)),  # offsets
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((t_block // 2, n_cores, s_block),
                          lambda s, t: (t, 0, s)),
@@ -706,7 +808,7 @@ def chaotic_ann_gang_stacked_pallas(w1, b1, w2, b2, x0, word_offset=0, *,
             jax.ShapeDtypeStruct((n_cores * i_pad, s_pad), dtype),
         ],
         interpret=interpret,
-    )(w1t, b1s, w2t, b2s, x0p, offp)
+    )(*inputs)
 
     words = words[:, :, :s_total]
     state = state.reshape(n_cores, i_pad, s_pad)[

@@ -10,11 +10,14 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.kernels import ref
 from repro.kernels.chaotic_ann import (chaotic_ann_bits_pallas,
                                        chaotic_ann_gang_bits_pallas,
                                        chaotic_ann_gang_stacked_pallas,
-                                       chaotic_ann_pallas)
+                                       chaotic_ann_pallas,
+                                       gang_effective_rows)
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 
@@ -80,6 +83,7 @@ def chaotic_bits(params: Dict[str, jax.Array], x0: jax.Array, n_steps: int,
 
 def chaotic_bits_gang(params: Dict[str, jax.Array], x0: jax.Array,
                       n_steps: int, word_offset=0, *, core_map,
+                      row_map=None,
                       activation: str = "relu", backend: str = "auto",
                       s_block: int = 256, t_block: int = 128,
                       unroll: int = 1, compute_unit: str = "vpu",
@@ -94,9 +98,17 @@ def chaotic_bits_gang(params: Dict[str, jax.Array], x0: jax.Array,
     ``chaotic_bits`` launch with that lane's network — the property the
     farm's gang scheduler relies on (tests/test_gang.py).
 
+    ``row_map`` (optional, same shape as ``core_map``) makes the launch
+    demand-shaped: block ``g`` computes only
+    ``gang_effective_rows(row_map, n_steps, t_block, unroll)[g]`` word
+    rows (its demand rounded up to the kernel's unroll-chunk granularity)
+    and its state advances by exactly that many; word rows past a block's
+    effective demand are unwritten garbage that callers must slice away.
+
     The 'ref' backend replays each lane block through the reference
     trajectory + ``pack_words`` with its own weights (C tiny launches),
-    keeping the usual co-simulation contract.
+    keeping the usual co-simulation contract — including the effective-row
+    rounding of a ragged launch (garbage rows are zero-filled there).
     """
     kw = dict(s_block=s_block, t_block=t_block, unroll=unroll,
               compute_unit=compute_unit)
@@ -105,28 +117,43 @@ def chaotic_bits_gang(params: Dict[str, jax.Array], x0: jax.Array,
     if backend == "ref":
         s_blk = kw["s_block"]
         cmap = [int(c) for c in jnp.asarray(core_map)]
+        eff = (gang_effective_rows(row_map, n_steps, kw["t_block"],
+                                   kw["unroll"])
+               if row_map is not None else
+               np.full(len(cmap), n_steps // 2, np.int32))
         off = jnp.broadcast_to(jnp.asarray(word_offset, jnp.uint32),
                                (x0.shape[0],))
+        n_rows = n_steps // 2
         words_parts, state_parts = [], []
         for g, c in enumerate(cmap):
             xg = x0[g * s_blk:(g + 1) * s_blk]
+            r_g = int(eff[g])
+            if r_g == 0:
+                words_parts.append(jnp.zeros((n_rows, s_blk), jnp.uint32))
+                state_parts.append(xg)
+                continue
             traj = ref.chaotic_ann_ref(
                 params["w1"][c], params["b1"][c], params["w2"][c],
-                params["b2"][c], xg, n_steps, activation)
-            words_parts.append(pack_words(
-                traj, off[g * s_blk:(g + 1) * s_blk]))
+                params["b2"][c], xg, 2 * r_g, activation)
+            w = pack_words(traj, off[g * s_blk:(g + 1) * s_blk])
+            if r_g < n_rows:
+                w = jnp.concatenate(
+                    [w, jnp.zeros((n_rows - r_g, s_blk), jnp.uint32)])
+            words_parts.append(w)
             state_parts.append(traj[-1])
         return (jnp.concatenate(words_parts, axis=1),
                 jnp.concatenate(state_parts, axis=0))
     interpret = (backend == "pallas_interpret") or (backend == "auto" and not _ON_TPU)
+    rmap = None if row_map is None else jnp.asarray(row_map, jnp.int32)
     return chaotic_ann_gang_bits_pallas(
         params["w1"], params["b1"], params["w2"], params["b2"], x0,
-        core_map, word_offset, n_steps=n_steps, activation=activation,
+        core_map, word_offset, rmap, n_steps=n_steps, activation=activation,
         interpret=interpret, **kw)
 
 
 def chaotic_bits_gang_stacked(params: Dict[str, jax.Array], x0: jax.Array,
                               n_steps: int, word_offset=0, *,
+                              row_map=None,
                               activation: str = "relu",
                               backend: str = "auto", s_block: int = 256,
                               t_block: int = 128, unroll: int = 1,
@@ -140,6 +167,12 @@ def chaotic_bits_gang_stacked(params: Dict[str, jax.Array], x0: jax.Array,
     groups (see ``chaotic_ann_gang_stacked_pallas``); ragged groups go
     through ``chaotic_bits_gang``.  vpu groups only — the stacked update
     is the broadcast-FMA order itself.
+
+    ``row_map`` (optional, (C,)) freezes core ``c``'s state after exactly
+    ``row_map[c]`` word rows (no FMA saved — the sublane stack is one
+    fused sweep — but the core's final state and word prefix match a
+    per-core launch of that many rows, so a demand-shaped absorb never
+    buffers overdraw).  Word rows past a core's demand are garbage.
     Returns words (n_steps // 2, C, S) and final state (C, S, I).
     """
     kw = dict(s_block=s_block, t_block=t_block, unroll=unroll,
@@ -148,21 +181,36 @@ def chaotic_bits_gang_stacked(params: Dict[str, jax.Array], x0: jax.Array,
         kw = _kernel_kwargs(config)
     if backend == "ref":
         n_cores = x0.shape[0]
+        n_rows = n_steps // 2
+        rows = (np.minimum(np.asarray(row_map, np.int64), n_rows)
+                if row_map is not None else
+                np.full(n_cores, n_rows, np.int64))
         off = jnp.broadcast_to(jnp.asarray(word_offset, jnp.uint32),
                                x0.shape[:2])
         words_parts, state_parts = [], []
         for c in range(n_cores):
+            r_c = int(rows[c])
+            if r_c == 0:
+                words_parts.append(
+                    jnp.zeros((n_rows, x0.shape[1]), jnp.uint32))
+                state_parts.append(x0[c])
+                continue
             traj = ref.chaotic_ann_ref(
                 params["w1"][c], params["b1"][c], params["w2"][c],
-                params["b2"][c], x0[c], n_steps, activation)
-            words_parts.append(pack_words(traj, off[c]))
+                params["b2"][c], x0[c], 2 * r_c, activation)
+            w = pack_words(traj, off[c])
+            if r_c < n_rows:
+                w = jnp.concatenate(
+                    [w, jnp.zeros((n_rows - r_c, x0.shape[1]), jnp.uint32)])
+            words_parts.append(w)
             state_parts.append(traj[-1])
         return (jnp.stack(words_parts, axis=1),
                 jnp.stack(state_parts, axis=0))
     interpret = (backend == "pallas_interpret") or (backend == "auto" and not _ON_TPU)
+    rmap = None if row_map is None else jnp.asarray(row_map, jnp.int32)
     return chaotic_ann_gang_stacked_pallas(
         params["w1"], params["b1"], params["w2"], params["b2"], x0,
-        word_offset, n_steps=n_steps, activation=activation,
+        word_offset, rmap, n_steps=n_steps, activation=activation,
         interpret=interpret, **kw)
 
 

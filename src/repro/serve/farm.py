@@ -34,11 +34,13 @@ from __future__ import annotations
 
 import json
 import pathlib
-from typing import Dict, Iterable, List, Optional, Tuple
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dse import GangCostModel
 from repro.prng.stream import _round_rows
 from repro.serve.prng_service import PRNGService
 
@@ -61,19 +63,39 @@ def _compat_key(svc: PRNGService) -> Optional[Tuple]:
 
 
 class GangScheduler:
-    """Launches a group of compatible cores as ONE stacked-weight kernel.
+    """Launches a group of compatible cores as stacked-weight kernels,
+    choosing HOW per flush with a launch-cost model (the gang *planner*).
 
-    Holds the dispatch cache: per (group signature, membership) the stacked
-    weight arrays and pool layout (lane spans + per-block core-id map) are
-    built once and reused every flush, and launched row counts are bucketed
-    by ``_round_rows``, so steady-state traffic replays a previously
-    compiled kernel instead of re-stacking/recompiling.
+    Three caches keep steady-state traffic replay-only:
+
+    * plan cache — per (group, membership, layout): stacked weight arrays,
+      pool layout (lane spans + per-block core-id map), reusable offset /
+      dead-lane padding buffers, and the last launch's device-resident
+      stacked state (reused as the next x0 when no absorb rewrote any
+      member pool — the common all-tenants-active case skips the
+      per-flush ``jnp.stack``/``jnp.concatenate`` entirely);
+    * decision cache — per (membership, ``_round_rows``-bucketed per-core
+      demand vector): the cost-minimizing choice among ONE padded
+      group-max launch (PR 3's policy), ONE ragged launch (each lane
+      block computes only its own demand), or a SPLIT into
+      demand-homogeneous sub-launches.  Steady traffic never replans;
+    * dispatch keys — distinct (plan, bucketed rows) shapes ever launched;
+      each is one XLA compile, and steady state stops growing it.
+
+    ``planner=False`` pins every decision to the padded group-max launch,
+    reproducing the PR 3 scheduler exactly.
     """
 
-    def __init__(self):
+    def __init__(self, cost_model: Optional[GangCostModel] = None,
+                 planner: bool = True):
         self._plans: Dict[Tuple, Dict] = {}
+        self._decisions: Dict[Tuple, Dict] = {}
         self._dispatch_keys = set()   # (plan key, n_rows) ever launched
         self.launches = 0
+        self.planner = bool(planner)
+        self.cost_model = cost_model or GangCostModel()
+        self.decisions = {"padded": 0, "ragged": 0, "split": 0}
+        self.profile: Optional[Dict[str, float]] = None
 
     @property
     def dispatch_misses(self) -> int:
@@ -81,17 +103,25 @@ class GangScheduler:
         is a fresh XLA compile; steady state stops growing this."""
         return len(self._dispatch_keys)
 
-    def _plan(self, key: Tuple, members: List[Tuple[str, PRNGService]]) -> Dict:
-        """Stacked weights + pool layout for one group membership.
+    def _tick(self, stage: str, t0: float) -> float:
+        t1 = time.perf_counter()
+        if self.profile is not None:
+            self.profile[stage] = self.profile.get(stage, 0.0) + (t1 - t0)
+        return t1
 
-        Two launch layouts: equal-size vpu pools take the *sublane-stacked*
-        kernel (one grid cell per lane block advances the whole group —
-        cheapest for the small coalesced flushes gangs exist for); ragged
-        or mxu groups take the lane-concat kernel with a per-block core-id
-        map.
+    def _plan(self, key: Tuple, members: List[Tuple[str, PRNGService]],
+              mode: str) -> Dict:
+        """Stacked weights + pool layout for one (membership, layout).
+
+        Two launch layouts: equal-size vpu pools may take the
+        *sublane-stacked* kernel (one grid cell per lane block advances the
+        whole group — cheapest for the small coalesced flushes gangs exist
+        for); ragged-pool or mxu groups — and ragged-DEMAND launches, where
+        the early-out needs one grid cell per (block, core) — take the
+        lane-concat kernel with a per-block core-id map.
         """
         sig = (key, tuple((name, int(svc.pool_x.shape[0]))
-                          for name, svc in members))
+                          for name, svc in members), mode)
         plan = self._plans.get(sig)
         if plan is not None:
             return plan
@@ -100,74 +130,258 @@ class GangScheduler:
         params = {k: jnp.stack([svc.params[k] for _, svc in members])
                   for k in ("w1", "b1", "w2", "b2")}
         sizes = [int(svc.pool_x.shape[0]) for _, svc in members]
-        plan = {"sig": sig, "params": params, "s_block": s_block}
-        if len(set(sizes)) == 1 and svc0.config.compute_unit == "vpu":
-            plan["mode"] = "stacked"
+        plan = {"sig": sig, "params": params, "s_block": s_block,
+                "mode": mode, "last_x": None, "handed": None}
+        if mode == "stacked":
             plan["s_each"] = sizes[0]
+            plan["offs_buf"] = np.zeros((len(members), sizes[0]), np.uint32)
         else:
-            plan["mode"] = "concat"
-            spans, core_map, start = [], [], 0
+            spans, core_map, pads, start = [], [], [], 0
             for ci, live in enumerate(sizes):
                 padded = -(-live // s_block) * s_block
                 spans.append((start, live, padded))
                 core_map.extend([ci] * (padded // s_block))
+                if padded > live:  # dead-lane padding, built once
+                    pads.append(jnp.zeros((padded - live, svc0.dim),
+                                          svc0.dtype))
+                else:
+                    pads.append(None)
                 start += padded
-            plan.update(spans=spans,
+            plan.update(spans=spans, pads=pads,
                         core_map=np.asarray(core_map, np.int32),
-                        s_total=start)
+                        s_total=start,
+                        offs_buf=np.zeros(start, np.uint32))
         self._plans[sig] = plan
         return plan
+
+    # -- planning ------------------------------------------------------------
+
+    def _decide(self, key: Tuple, members: Sequence[Tuple],
+                demands: Tuple[int, ...]) -> Dict:
+        """Pick the cost-minimizing launch shape for one flush.
+
+        ``demands`` are the ``_round_rows``-bucketed per-member word rows;
+        the decision is cached on (membership, demands) so steady-state
+        traffic replans exactly never.  Candidate plans:
+
+        * ``padded``  — one launch, every member at the group max
+          (sublane-stacked when pools are equal + vpu, else lane-concat);
+          this is the only option with ``planner=False`` (PR 3);
+        * ``ragged``  — one demand-shaped launch (stacked-with-freeze or
+          lane-concat-with-early-out, whichever models cheaper);
+        * ``split``   — demand-homogeneous subgroups, each padded (solo
+          per-core launches for singletons), paying one launch overhead
+          per subgroup.
+        """
+        from repro.kernels.chaotic_ann import gang_effective_rows
+        mem_sig = (key, tuple((name, int(svc.pool_x.shape[0]))
+                              for name, svc, _, _ in members))
+        dsig = (mem_sig, demands)
+        dec = self._decisions.get(dsig)
+        if dec is not None:
+            return dec
+        svc0 = members[0][1]
+        c = svc0.config
+        sizes = [int(svc.pool_x.shape[0]) for _, svc, _, _ in members]
+        blocks = [-(-s // c.s_block) for s in sizes]
+        stacked_ok = (len(set(sizes)) == 1 and c.compute_unit == "vpu")
+        model = self.cost_model
+        all_idx = tuple(range(len(members)))
+        dmax = max(demands)
+        base_layout = "stacked" if stacked_ok else "concat"
+        options = [("padded",
+                    model.gang_cost(c, demands, blocks, sizes,
+                                    layout=base_layout),
+                    [{"members": all_idx, "kind": "gang",
+                      "layout": base_layout, "ragged": False}])]
+        if self.planner and len(set(demands)) > 1:
+            # one ragged launch: early-out concat vs freeze-stacked
+            eff = gang_effective_rows(
+                np.repeat(np.asarray(demands), blocks), 2 * dmax,
+                c.t_block, c.unroll)
+            r_cost = model.gang_cost(c, demands, blocks, sizes,
+                                     layout="concat",
+                                     rows_by_block=[int(r) for r in eff])
+            r_layout = "concat"
+            if stacked_ok:
+                s_cost = model.gang_cost(c, demands, blocks, sizes,
+                                         layout="stacked",
+                                         rows_by_block=list(demands))
+                # the freeze layout saves buffering only (no FMA skipped);
+                # require a clear modeled margin over the purpose-built
+                # early-out concat path before trusting a noisy fit
+                if s_cost < 0.9 * r_cost:
+                    r_cost, r_layout = s_cost, "stacked"
+            options.append(("ragged", r_cost,
+                            [{"members": all_idx, "kind": "gang",
+                              "layout": r_layout, "ragged": True}]))
+            # split into demand-homogeneous subgroups
+            by_demand: Dict[int, List[int]] = {}
+            for i, d in enumerate(demands):
+                by_demand.setdefault(d, []).append(i)
+            cost, parts = 0.0, []
+            for d in sorted(by_demand, reverse=True):
+                idxs = by_demand[d]
+                if len(idxs) == 1:
+                    i = idxs[0]
+                    cost += model.solo_cost(c, d, blocks[i])
+                    parts.append({"members": (i,), "kind": "solo"})
+                else:
+                    sub_sizes = [sizes[i] for i in idxs]
+                    sub_stacked = (len(set(sub_sizes)) == 1
+                                   and c.compute_unit == "vpu")
+                    lay = "stacked" if sub_stacked else "concat"
+                    cost += model.gang_cost(
+                        c, [d] * len(idxs), [blocks[i] for i in idxs],
+                        sub_sizes, layout=lay)
+                    parts.append({"members": tuple(idxs), "kind": "gang",
+                                  "layout": lay, "ragged": False})
+            options.append(("split", cost, parts))
+        kind, cost, parts = min(options, key=lambda o: o[1])
+        dec = {"kind": kind, "parts": parts,
+               "modeled_cycles": {k: v for k, v, _ in options}}
+        self._decisions[dsig] = dec
+        return dec
+
+    # -- execution -----------------------------------------------------------
+
+    def _gather_x0(self, plan: Dict, members: Sequence[Tuple]):
+        """The launch's pooled x0; reuses the last launch's device-resident
+        stacked state when every member pool is still the exact array this
+        scheduler handed to its ``absorb`` (identity check — any rollback,
+        restore, or registration rebuilds)."""
+        handed = plan["handed"]
+        if (handed is not None and len(handed) == len(members)
+                and all(svc.pool_x is h
+                        for (_, svc, _, _), h in zip(members, handed))):
+            return plan["last_x"]
+        if plan["mode"] == "stacked":
+            return jnp.stack([svc.pool_x for _, svc, _, _ in members])
+        parts = []
+        for (start, live, padded), pad, (_, svc, _, _) in zip(
+                plan["spans"], plan["pads"], members):
+            parts.append(svc.pool_x)
+            if pad is not None:
+                parts.append(pad)
+        return jnp.concatenate(parts, axis=0)
+
+    def _launch_group(self, key: Tuple, members: Sequence[Tuple],
+                      demands: Sequence[int], *, layout: str, ragged: bool,
+                      deliver: bool) -> Dict[str, Dict[str, np.ndarray]]:
+        """One gang launch (padded or ragged) for ``members``."""
+        from repro.kernels import ops
+        from repro.kernels.chaotic_ann import gang_effective_rows
+        t0 = time.perf_counter()
+        svc0 = members[0][1]
+        cfg = svc0.config
+        plan = self._plan(key, [(name, svc) for name, svc, _, _ in members],
+                          layout)
+        n_rows = max(demands)
+        n_steps = 2 * n_rows
+        t0 = self._tick("plan", t0)
+        x0 = self._gather_x0(plan, members)
+        if layout == "stacked":
+            offs = plan["offs_buf"]
+            for ci, (_, _, _, offsets) in enumerate(members):
+                offs[ci, :] = offsets
+            row_map = np.asarray(demands, np.int32) if ragged else None
+            member_rows = list(demands) if ragged else [n_rows] * len(members)
+            t0 = self._tick("stack", t0)
+            words, state = ops.chaotic_bits_gang_stacked(
+                plan["params"], x0, n_steps, jnp.asarray(offs),
+                row_map=row_map, activation=svc0.activation,
+                backend=svc0.backend, config=cfg)
+            words = np.asarray(words)
+            handed = [state[ci] for ci in range(len(members))]
+            member_out = [(words[:member_rows[ci], ci, :], handed[ci])
+                          for ci in range(len(members))]
+        else:
+            offs = plan["offs_buf"]
+            for (start, live, _), (_, _, _, offsets) in zip(
+                    plan["spans"], members):
+                offs[start:start + live] = offsets
+            if ragged:
+                block_demand = np.repeat(np.asarray(demands, np.int64),
+                                         [padded // plan["s_block"]
+                                          for _, _, padded in plan["spans"]])
+                eff = gang_effective_rows(block_demand, n_steps,
+                                          cfg.t_block, cfg.unroll)
+                row_map = eff
+                # every block of a member shares its demand -> same eff rows
+                member_rows, b0 = [], 0
+                for _, _, padded in plan["spans"]:
+                    member_rows.append(int(eff[b0]))
+                    b0 += padded // plan["s_block"]
+            else:
+                row_map = None
+                member_rows = [n_rows] * len(members)
+            t0 = self._tick("stack", t0)
+            words, state = ops.chaotic_bits_gang(
+                plan["params"], x0, n_steps,
+                jnp.asarray(offs), core_map=plan["core_map"],
+                row_map=row_map, activation=svc0.activation,
+                backend=svc0.backend, config=cfg)
+            words = np.asarray(words)
+            handed = [state[start:start + live]
+                      for (start, live, _) in plan["spans"]]
+            member_out = [(words[:member_rows[ci], start:start + live],
+                           handed[ci])
+                          for ci, (start, live, _) in enumerate(plan["spans"])]
+        plan["last_x"], plan["handed"] = state, handed
+        self.launches += 1
+        # ragged and padded launches of the same shape are distinct jit
+        # traces (row_map None vs array), hence distinct dispatch keys
+        self._dispatch_keys.add((plan["sig"], n_rows, bool(ragged)))
+        t0 = self._tick("launch", t0)
+        out: Dict[str, Dict[str, np.ndarray]] = {}
+        for (mwords, mstate), rows_c, (name, svc, _, _) in zip(
+                member_out, member_rows, members):
+            served = svc.absorb(mwords, mstate, rows_c, deliver=deliver)
+            if served:
+                out[name] = served
+        self._tick("absorb", t0)
+        return out
+
+    def _launch_solo(self, member: Tuple, n_rows: int, *,
+                     deliver: bool) -> Dict[str, Dict[str, np.ndarray]]:
+        """A planner-split singleton: a plain per-core launch."""
+        name, svc, _, offsets = member
+        t0 = time.perf_counter()
+        words, new_x = svc._launch(n_rows, jnp.asarray(offsets))
+        t0 = self._tick("launch", t0)
+        served = svc.absorb(words, new_x, n_rows, deliver=deliver)
+        self._tick("absorb", t0)
+        return {name: served} if served else {}
 
     def launch(self, key: Tuple,
                members: List[Tuple[str, PRNGService, int, np.ndarray]],
                *, deliver: bool = True) -> Dict[str, Dict[str, np.ndarray]]:
-        """One gang launch for ``members`` (each with its prepare_rows plan).
+        """Serve one flush of ``members`` (each with its prepare_rows plan)
+        with the planner-chosen launch shape.
 
-        Every member advances by the same bucketed row count (the group
-        max) — overdraw lands in per-client buffers, so delivered words are
-        bit-identical to the per-core path (chunk-invariance of the
+        However the plan shapes launches, every member advances by a row
+        count >= its own demand with overdraw buffered, so delivered words
+        are bit-identical to the per-core path (chunk-invariance of the
         absolute-row Weyl indexing).
         """
-        from repro.kernels import ops
+        t0 = time.perf_counter()
         svc0 = members[0][1]
-        plan = self._plan(key, [(name, svc) for name, svc, _, _ in members])
-        n_rows = _round_rows(max(n for _, _, n, _ in members),
-                             svc0.config.t_block)
-        if plan["mode"] == "stacked":
-            x0 = jnp.stack([svc.pool_x for _, svc, _, _ in members])
-            offs = np.stack([offsets for _, _, _, offsets in members])
-            words, state = ops.chaotic_bits_gang_stacked(
-                plan["params"], x0, 2 * n_rows, jnp.asarray(offs),
-                activation=svc0.activation, backend=svc0.backend,
-                config=svc0.config)
-            words = np.asarray(words)
-            member_out = [(words[:, ci, :], state[ci])
-                          for ci in range(len(members))]
-        else:
-            parts, offs = [], np.zeros(plan["s_total"], np.uint32)
-            for (start, live, padded), (_, svc, _, offsets) in zip(
-                    plan["spans"], members):
-                parts.append(svc.pool_x)
-                if padded > live:  # pad to an s_block boundary (dead lanes)
-                    parts.append(jnp.zeros((padded - live, svc0.dim),
-                                           svc0.dtype))
-                offs[start:start + live] = offsets
-            words, state = ops.chaotic_bits_gang(
-                plan["params"], jnp.concatenate(parts, axis=0), 2 * n_rows,
-                jnp.asarray(offs), core_map=plan["core_map"],
-                activation=svc0.activation, backend=svc0.backend,
-                config=svc0.config)
-            words = np.asarray(words)
-            member_out = [(words[:, start:start + live],
-                           state[start:start + live])
-                          for (start, live, _) in plan["spans"]]
-        self.launches += 1
-        self._dispatch_keys.add((plan["sig"], n_rows))
+        demands = tuple(_round_rows(n, svc0.config.t_block)
+                        for _, _, n, _ in members)
+        dec = self._decide(key, members, demands)
+        self.decisions[dec["kind"]] += 1
+        self._tick("plan", t0)
         out: Dict[str, Dict[str, np.ndarray]] = {}
-        for (mwords, mstate), (name, svc, _, _) in zip(member_out, members):
-            served = svc.absorb(mwords, mstate, n_rows, deliver=deliver)
-            if served:
-                out[name] = served
+        for part in dec["parts"]:
+            sub = [members[i] for i in part["members"]]
+            if part["kind"] == "solo":
+                out.update(self._launch_solo(
+                    sub[0], demands[part["members"][0]], deliver=deliver))
+            else:
+                out.update(self._launch_group(
+                    key, sub, [demands[i] for i in part["members"]],
+                    layout=part["layout"], ragged=part["ragged"],
+                    deliver=deliver))
         return out
 
 
@@ -178,18 +392,31 @@ class OscillatorFarm:
     cores share one stacked-weight launch per flush.  ``gang=False``
     reproduces the legacy one-launch-per-core behavior — delivered words
     are bit-identical either way (tests/test_gang.py).
-    ``auto_flush_rows`` is the coalescing threshold for
+    ``planner=True`` (default) lets the gang scheduler shape each group's
+    launch to per-core demand with the ``GangCostModel`` (padded / ragged /
+    split, see ``GangScheduler``); ``planner=False`` pins the PR 3 padded
+    group-max policy.  Pass ``gang_cost_model`` (e.g. a measured
+    ``GangCostModel.fit``) to plan against this machine's real launch
+    overhead.  ``auto_flush_rows`` is the coalescing threshold for
     ``request(..., auto_flush=True)``: the farm auto-flushes once total
     pending work reaches that many word rows (None = flush on every
-    auto-flush request).
+    auto-flush request).  ``profile=True`` accumulates per-stage flush
+    wall times (plan / stack / launch / absorb) in ``profile_stats``.
     """
 
-    def __init__(self, *, gang: bool = True,
-                 auto_flush_rows: Optional[int] = None):
+    def __init__(self, *, gang: bool = True, planner: bool = True,
+                 gang_cost_model: Optional[GangCostModel] = None,
+                 auto_flush_rows: Optional[int] = None,
+                 profile: bool = False):
         self.services: Dict[str, PRNGService] = {}
         self.gang = bool(gang)
         self.auto_flush_rows = auto_flush_rows
-        self._sched = GangScheduler()
+        self._sched = GangScheduler(cost_model=gang_cost_model,
+                                    planner=planner)
+        if profile:
+            self._sched.profile = {"plan": 0.0, "stack": 0.0,
+                                   "launch": 0.0, "absorb": 0.0,
+                                   "flushes": 0.0}
         self._deferred: set = set()   # cores deferred by the last flush
 
     # -- core management ----------------------------------------------------
@@ -211,7 +438,8 @@ class OscillatorFarm:
     @classmethod
     def from_generated(cls, farm_dir: str | pathlib.Path,
                        cores: Optional[Iterable[str]] = None,
-                       gang: bool = True,
+                       gang: bool = True, planner: bool = True,
+                       gang_cost_model: Optional[GangCostModel] = None,
                        auto_flush_rows: Optional[int] = None,
                        **service_kw) -> "OscillatorFarm":
         """Build a farm from a ``generate_farm`` output directory.
@@ -234,7 +462,9 @@ class OscillatorFarm:
                 f"solution.json and cannot be overridden here; use "
                 f"add_core() to attach a core with custom values")
         farm_dir = pathlib.Path(farm_dir)
-        farm = cls(gang=gang, auto_flush_rows=auto_flush_rows)
+        farm = cls(gang=gang, planner=planner,
+                   gang_cost_model=gang_cost_model,
+                   auto_flush_rows=auto_flush_rows)
         names = sorted(cores) if cores is not None else sorted(
             p.name for p in farm_dir.iterdir()
             if (p / "solution.json").exists() and (p / "weights.npz").exists())
@@ -335,13 +565,19 @@ class OscillatorFarm:
                           for c in cores], deliver=deliver)
                 out.update(served)
             else:
+                prof = self._sched.profile
                 for c in cores:
                     svc = self.services[c]
+                    t0 = time.perf_counter()
                     n_rows = _round_rows(plans[c][0], svc.config.t_block)
                     words, new_x = svc._launch(n_rows,
                                                jnp.asarray(plans[c][1]))
+                    t1 = time.perf_counter()
                     served = svc.absorb(words, new_x, n_rows,
                                         deliver=deliver)
+                    if prof is not None:
+                        prof["launch"] += t1 - t0
+                        prof["absorb"] += time.perf_counter() - t1
                     if served:
                         out[c] = served
         # Launch-free delivery pass for cores with nothing to launch (their
@@ -356,6 +592,8 @@ class OscillatorFarm:
                 if served:
                     out[core] = served
         self._deferred = deferred_now
+        if self._sched.profile is not None:
+            self._sched.profile["flushes"] += 1.0
         return out
 
     def draw(self, core: str, client: str, n_words: int) -> np.ndarray:
@@ -381,6 +619,19 @@ class OscillatorFarm:
     def dispatch_misses(self) -> int:
         """Distinct (group, bucketed rows) gang keys compiled so far."""
         return self._sched.dispatch_misses
+
+    @property
+    def plan_decisions(self) -> Dict[str, int]:
+        """Executed planner decisions so far, by kind
+        (padded / ragged / split)."""
+        return dict(self._sched.decisions)
+
+    @property
+    def profile_stats(self) -> Optional[Dict[str, float]]:
+        """Accumulated per-stage flush seconds (``profile=True`` farms):
+        plan / stack / launch / absorb, plus the flush count."""
+        return (dict(self._sched.profile)
+                if self._sched.profile is not None else None)
 
     # -- resumability -------------------------------------------------------
 

@@ -1,0 +1,332 @@
+"""Demand-shaped gang launches: ragged kernels + the cost-model planner.
+
+Kernel level: a ragged launch (per-block / per-core row maps) must
+reproduce per-core launches of each member's OWN row count, bit for bit —
+words prefix AND final state — across dtypes and both gang layouts.
+
+Planner level: golden decisions (uniform demand -> one padded group-max
+launch; heavily skewed -> a ragged or split launch), bit-identity of
+delivered words vs ``gang=False`` whatever shape the planner picks, plan
+caching in steady state, and mid-flush snapshot/restore across a
+planner-chosen split.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dse import Candidate, GangCostModel
+from repro.kernels import ops
+from repro.kernels.chaotic_ann import gang_effective_rows
+from repro.serve.farm import OscillatorFarm
+
+from test_kernels import _mk
+
+CAND = Candidate(i_dim=3, h_dim=8, p=0, compute_unit="vpu",
+                 dtype_bytes=4, unroll=2, t_block=32)
+
+
+def _params(i_dim=3, h_dim=8, key=0):
+    w1, b1, w2, b2, _ = _mk(i_dim, h_dim, 1, key=key)
+    return {"w1": w1, "b1": b1, "w2": w2, "b2": b2}
+
+
+def _stacked(param_list):
+    return {k: jnp.stack([p[k] for p in param_list])
+            for k in ("w1", "b1", "w2", "b2")}
+
+
+# ---------------------------------------------------------------------------
+# Kernel level: ragged row maps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ragged_concat_matches_per_core(dtype):
+    """Each lane block of a ragged lane-concat launch computes exactly its
+    effective rows, bit-identical to a per-core launch of that many."""
+    s_block, n_steps = 128, 64
+    plist = [_params(key=k) for k in range(3)]
+    core_map = np.asarray([0, 2, 1, 2], np.int32)
+    row_map = np.asarray([32, 8, 4, 17], np.int32)
+    s_total = len(core_map) * s_block
+    _, _, _, _, x0 = _mk(3, 8, s_total, key=9)
+    x0 = x0.astype(dtype)
+    rng = np.random.default_rng(3)
+    offs = jnp.asarray(rng.integers(0, 10_000, size=s_total), np.uint32)
+
+    eff = gang_effective_rows(row_map, n_steps, 32, 2)
+    assert list(eff) == [32, 8, 4, 18]       # 17 rounds up to unroll chunks
+    gw, gs = ops.chaotic_bits_gang(
+        _stacked(plist), x0, n_steps, offs, core_map=core_map,
+        row_map=row_map, backend="pallas_interpret", s_block=s_block,
+        t_block=32, unroll=2)
+    for g, c in enumerate(core_map):
+        sl = slice(g * s_block, (g + 1) * s_block)
+        r_g = int(eff[g])
+        w, s = ops.chaotic_bits(
+            plist[c], x0[sl], 2 * r_g, offs[sl],
+            backend="pallas_interpret", s_block=s_block, t_block=32,
+            unroll=2)
+        np.testing.assert_array_equal(np.asarray(gw)[:r_g, sl],
+                                      np.asarray(w))
+        np.testing.assert_array_equal(
+            np.asarray(jnp.asarray(gs[sl], jnp.float32)),
+            np.asarray(jnp.asarray(s, jnp.float32)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ragged_stacked_matches_per_core(dtype):
+    """The sublane-stacked freeze: core c's state stops after exactly
+    row_map[c] rows and its word prefix matches a per-core launch."""
+    C, S, n_steps = 4, 256, 64
+    plist = [_params(key=k) for k in range(C)]
+    _, _, _, _, x0 = _mk(3, 8, C * S, key=6)
+    x0 = x0.reshape(C, S, 3).astype(dtype)
+    rng = np.random.default_rng(8)
+    offs = jnp.asarray(rng.integers(0, 10_000, size=(C, S)), np.uint32)
+    row_map = np.asarray([32, 5, 1, 20], np.int32)
+
+    gw, gs = ops.chaotic_bits_gang_stacked(
+        _stacked(plist), x0, n_steps, offs, row_map=row_map,
+        backend="pallas_interpret", s_block=128, t_block=32, unroll=2)
+    for c in range(C):
+        r_c = int(row_map[c])
+        w, s = ops.chaotic_bits(plist[c], x0[c], 2 * r_c, offs[c],
+                                backend="pallas_interpret", s_block=128,
+                                t_block=32, unroll=2)
+        np.testing.assert_array_equal(np.asarray(gw)[:r_c, c],
+                                      np.asarray(w))
+        np.testing.assert_array_equal(
+            np.asarray(jnp.asarray(gs[c], jnp.float32)),
+            np.asarray(jnp.asarray(s, jnp.float32)))
+
+
+def test_ragged_ref_backends_match_per_core_ref():
+    """Co-simulation contract for ragged launches: both gang 'ref'
+    backends equal per-core 'ref' draws over each member's own rows."""
+    plist = [_params(key=k) for k in range(3)]
+    core_map = np.asarray([0, 2, 1], np.int32)
+    row_map = np.asarray([16, 4, 8], np.int32)
+    _, _, _, _, x0 = _mk(3, 8, 3 * 128, key=4)
+    rw, rs = ops.chaotic_bits_gang(
+        _stacked(plist), x0, 32, jnp.uint32(5), core_map=core_map,
+        row_map=row_map, backend="ref", s_block=128, t_block=32, unroll=2)
+    eff = gang_effective_rows(row_map, 32, 32, 2)
+    for g, c in enumerate(core_map):
+        sl = slice(g * 128, (g + 1) * 128)
+        r_g = int(eff[g])
+        w, s = ops.chaotic_bits(plist[c], x0[sl], 2 * r_g, jnp.uint32(5),
+                                backend="ref", s_block=128)
+        np.testing.assert_array_equal(np.asarray(rw)[:r_g, sl],
+                                      np.asarray(w))
+        np.testing.assert_array_equal(np.asarray(rs[sl]), np.asarray(s))
+
+    xs = x0[:3 * 128].reshape(3, 128, 3)
+    rw, rs = ops.chaotic_bits_gang_stacked(
+        _stacked(plist), xs, 32, jnp.uint32(5), row_map=row_map,
+        backend="ref")
+    for c in range(3):
+        r_c = int(row_map[c])
+        w, s = ops.chaotic_bits(plist[c], xs[c], 2 * r_c, jnp.uint32(5),
+                                backend="ref", s_block=128)
+        np.testing.assert_array_equal(np.asarray(rw)[:r_c, c],
+                                      np.asarray(w))
+        np.testing.assert_array_equal(np.asarray(rs[c]), np.asarray(s))
+
+
+# ---------------------------------------------------------------------------
+# Planner level
+# ---------------------------------------------------------------------------
+
+def _farm(members, lanes=128, **kw):
+    farm = OscillatorFarm(**kw)
+    for core, params, config, dtype in members:
+        farm.add_core(core, params, config=config, dtype=dtype,
+                      lanes_per_client=lanes, backend="pallas_interpret")
+    return farm
+
+
+def _members(n=4, dtype=None):
+    return [(f"core{i}", _params(key=10 + i), CAND, dtype) for i in range(n)]
+
+
+def _request_rows(farm, rows_by_core):
+    for core, rows in rows_by_core.items():
+        farm.request(core, "t", rows * 128)
+
+
+def _register_all(farm, seed=7):
+    for core in farm.cores:
+        farm.register(core, "t", seed=seed)
+
+
+def test_golden_decision_uniform_is_single_padded_launch():
+    """Uniform demand: the planner must keep the PR 3 single group-max
+    launch (stacked layout for equal vpu pools) — no split, no raggedness."""
+    farm = _farm(_members())
+    _register_all(farm)
+    _request_rows(farm, {c: 16 for c in farm.cores})
+    farm.flush()
+    assert farm.plan_decisions == {"padded": 1, "ragged": 0, "split": 0}
+    assert farm.gang_launches == 1
+    assert farm.launches == 1
+    (plan,) = farm._sched._plans.values()
+    assert plan["mode"] == "stacked"
+
+
+def test_golden_decision_skewed_is_ragged_or_split():
+    """One hot tenant must not force co-tenants to group-max overdraw: the
+    planner picks a ragged launch or a split, never the padded policy."""
+    farm = _farm(_members())
+    _register_all(farm)
+    _request_rows(farm, {"core0": 64, "core1": 4, "core2": 4, "core3": 4})
+    out = farm.flush()
+    dec = farm.plan_decisions
+    assert dec["padded"] == 0 and dec["ragged"] + dec["split"] == 1
+
+    # the padded policy (planner=False) still works and matches bit for bit
+    policy = _farm(_members(), planner=False)
+    _register_all(policy)
+    _request_rows(policy, {"core0": 64, "core1": 4, "core2": 4, "core3": 4})
+    ref = policy.flush()
+    assert policy.plan_decisions["padded"] == 1
+    assert set(out) == set(ref)
+    for core in ref:
+        np.testing.assert_array_equal(out[core]["t"], ref[core]["t"])
+
+
+@pytest.mark.parametrize("dtype", [None, jnp.bfloat16])
+def test_planner_bit_identical_to_solo_across_flushes(dtype):
+    """Skewed multi-flush traffic through the planner delivers exactly the
+    gang=False words — whatever launch shapes it picks."""
+    farms = [_farm(_members(dtype=dtype)),
+             _farm(_members(dtype=dtype), gang=False)]
+    for f in farms:
+        for core in f.cores:
+            f.register(core, "u1", seed=21)
+            f.register(core, "u2", seed=22)
+    traffic = [
+        {"core0": [("u1", 64 * 128)], "core1": [("u2", 300)],
+         "core2": [("u1", 300)], "core3": [("u2", 300)]},
+        {"core0": [("u2", 17)], "core2": [("u1", 2048), ("u2", 7)]},
+        {"core1": [("u1", 4096)], "core3": [("u1", 1)]},
+    ]
+    for round_ in traffic:
+        outs = []
+        for f in farms:
+            for core, reqs in round_.items():
+                for client, n in reqs:
+                    f.request(core, client, n)
+            outs.append(f.flush())
+        plan_out, solo_out = outs
+        assert set(plan_out) == set(solo_out)
+        for core in plan_out:
+            assert set(plan_out[core]) == set(solo_out[core])
+            for client in plan_out[core]:
+                np.testing.assert_array_equal(plan_out[core][client],
+                                              solo_out[core][client])
+    assert farms[0].launches < farms[1].launches
+
+
+def test_planner_ragged_pools_still_bit_identical():
+    """Ragged POOLS (different client counts) + ragged DEMAND compose: the
+    lane-concat layout with a row map stays bit-identical to per-core."""
+    members = _members(3)
+    farms = [_farm(members), _farm(members, gang=False)]
+    for f in farms:
+        f.register("core0", "only", seed=31)          # 128-lane pool
+        for core in ("core1", "core2"):               # 256-lane pools
+            f.register(core, "u1", seed=32)
+            f.register(core, "u2", seed=33)
+    for f in farms:
+        f.request("core0", "only", 64 * 128)          # hot
+        f.request("core1", "u2", 512)                 # cold
+        f.request("core2", "u1", 512)
+    plan_out, solo_out = (f.flush() for f in farms)
+    assert set(plan_out) == set(solo_out)
+    for core in plan_out:
+        for client in plan_out[core]:
+            np.testing.assert_array_equal(plan_out[core][client],
+                                          solo_out[core][client])
+
+
+def test_planner_decision_cache_steady_state():
+    """Repeating the same bucketed demand vector replans never and
+    recompiles never."""
+    farm = _farm(_members())
+    _register_all(farm)
+    for _ in range(4):
+        _request_rows(farm, {"core0": 64, "core1": 4, "core2": 4,
+                             "core3": 4})
+        farm.flush()
+    assert len(farm._sched._decisions) == 1
+    misses_after_first = farm.dispatch_misses
+    _request_rows(farm, {"core0": 64, "core1": 4, "core2": 4, "core3": 4})
+    farm.flush()
+    assert farm.dispatch_misses == misses_after_first
+
+
+def test_snapshot_restore_across_planner_split():
+    """Snapshot with skewed requests in flight, restore, flush: identical
+    words even when the planner chose a SPLIT — and when restored onto a
+    padded-policy or gang=False farm (chunk-invariance)."""
+    # zero launch overhead makes the split strictly cheapest for this skew
+    split_model = GangCostModel(launch_overhead_cycles=0.0)
+    farm = _farm(_members(), gang_cost_model=split_model)
+    _register_all(farm, seed=9)
+    farm.draw("core1", "t", 100)                  # advance some state first
+    _request_rows(farm, {"core0": 64, "core1": 4, "core2": 4, "core3": 4})
+    snap = farm.snapshot()
+    a = farm.flush()
+    assert farm.plan_decisions["split"] == 1
+    assert farm.launches == 1 + 2         # draw + (solo hot + cold gang)
+
+    b_farm = _farm(_members(), gang_cost_model=split_model)
+    b_farm.restore(snap)
+    b = b_farm.flush()
+    c_farm = _farm(_members(), planner=False)
+    c_farm.restore(snap)
+    c = c_farm.flush()
+    d_farm = _farm(_members(), gang=False)
+    d_farm.restore(snap)
+    d = d_farm.flush()
+    assert set(a) == set(b) == set(c) == set(d)
+    for core in a:
+        np.testing.assert_array_equal(a[core]["t"], b[core]["t"])
+        np.testing.assert_array_equal(a[core]["t"], c[core]["t"])
+        np.testing.assert_array_equal(a[core]["t"], d[core]["t"])
+
+
+def test_gang_cost_multiblock_overdraw():
+    """Members spanning several lane blocks: the ragged concat cost must
+    credit each member its OWN effective rows (first entry of its block
+    span), and padded overdraw must count (dmax - d) words per lane."""
+    model = GangCostModel(launch_overhead_cycles=0.0)
+    demands, blocks, lanes = [16, 4], [2, 2], [512, 512]
+    eff = [16, 16, 4, 4]                   # per-block, member-major
+    ragged = model.gang_cost(CAND, demands, blocks, lanes,
+                             layout="concat", rows_by_block=eff)
+    padded = model.gang_cost(CAND, demands, blocks, lanes, layout="concat")
+    step = model.step_cycles(CAND)
+    # padded computes 4 blocks x 16 rows, ragged 16+16+4+4: 24 rows saved
+    # (48 steps), and padded buffers (16-4)*512 overdraw words
+    expected = 2 * 24 * step + model.buffer_cycles((16 - 4) * 512)
+    assert padded - ragged == pytest.approx(expected, rel=1e-9)
+    # a correct per-member credit means ragged matching demand buffers 0:
+    # doubling only the hot member's second block must not change overdraw
+    assert (model.gang_cost(CAND, demands, blocks, lanes, layout="concat",
+                            rows_by_block=[16, 16, 4, 4])
+            < model.gang_cost(CAND, demands, blocks, lanes, layout="concat",
+                              rows_by_block=[16, 16, 8, 8]))
+
+
+def test_profile_stats_accumulate():
+    """profile=True farms report per-stage flush wall times."""
+    farm = _farm(_members(2), profile=True)
+    _register_all(farm)
+    _request_rows(farm, {c: 4 for c in farm.cores})
+    farm.flush()
+    stats = farm.profile_stats
+    assert stats is not None and stats["flushes"] == 1.0
+    assert stats["launch"] > 0.0
+    assert set(stats) >= {"plan", "stack", "launch", "absorb"}
+    assert _farm(_members(2)).profile_stats is None
