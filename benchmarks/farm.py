@@ -16,6 +16,16 @@ Three sections:
   OFF, at two operating points: ``coalesced`` (small tenant flushes, the
   traffic gangs exist for) and ``bulk`` (full time-block flushes).
 
+* ``async`` — the asyncio front-end (``serve/async_frontend.py``) at the
+  coalesced operating point: every tenant independently ``await draw()``s
+  a small request (no manual flush coordination anywhere) and the
+  deadline/threshold flusher coalesces them into one gang launch per
+  round.  Reported against two sync baselines: ``per_draw`` (one launch
+  per draw — what uncoordinated tenants pay without the front-end) and
+  ``manual_flush`` (hand-coordinated request+flush — the coordination
+  optimum the front-end is supposed to recover).  Words/s plus p50/p99
+  deadline-miss latency (ms past each request's deadline at delivery).
+
 * ``planner`` — the demand-shaped launch planner vs the PR 3 padded
   group-max gang policy.  ``skewed`` is the operating point the planner
   exists for (one hot tenant drawing 128 word rows per flush, three cold
@@ -33,6 +43,7 @@ verified bit-identical to ``gang=False`` before any timing.
 CPU interpret mode: numbers are functional-relative, not TPU performance;
 relative ordering (and the gang/planner ratios) is still meaningful.
 """
+import asyncio
 import json
 import pathlib
 import time
@@ -55,6 +66,8 @@ except ModuleNotFoundError:          # invoked as `python benchmarks/farm.py`
 LANES_PER_CLIENT = 128
 HOT_ROWS, COLD_ROWS = 128, 8      # the skewed-demand operating point
 UNIFORM_ROWS = 16
+ASYNC_ROWS = 8                    # small per-tenant async draws (coalesced)
+ASYNC_DEADLINE_MS = 5.0
 
 
 def _system_rows(n_streams, n_steps, p, lm, cm, nist_words):
@@ -250,6 +263,143 @@ def _gang_section(n_streams, p, lm, cm, smoke):
     return result
 
 
+def _async_section(n_streams, p, lm, cm, smoke):
+    """Uncoordinated async tenants vs per-draw and manual-flush baselines.
+
+    Operating point: every tenant draws ``ASYNC_ROWS`` word rows per round
+    with a ``ASYNC_DEADLINE_MS`` deadline and no flush calls anywhere; the
+    front-end's row threshold is one full round of demand, so the launch
+    fires the moment the round's last tenant submits (the deadline is the
+    stragglers' backstop).  ``per_draw`` serves the same traffic one
+    ``farm.draw`` (= one launch) at a time; ``manual_flush`` queues the
+    whole round by hand and flushes once — the coordination optimum.
+    Deadline-miss latency is measured per request at delivery time.
+    """
+    from repro.serve.async_frontend import (AsyncOscillatorFarm,
+                                            percentile)
+
+    group, cand = _compatible_group(p, lm, cm)
+    n_clients = max(1, n_streams // LANES_PER_CLIENT)
+    tenants = [(name, f"c{j}") for name in group for j in range(n_clients)]
+    words_per_draw = ASYNC_ROWS * LANES_PER_CLIENT
+    words_per_round = len(tenants) * words_per_draw
+    round_rows = len(group) * ASYNC_ROWS     # launch rows of one full round
+    n_rounds = 3 if smoke else 9
+
+    # --- bit-identity gate: async-delivered words == gang=False solo ------
+    gate_farm = _build_farm(group, cand, n_clients, True)
+    delivered = {}
+
+    async def _round(af):
+        futs = [af.submit(core, cl, words_per_draw,
+                          deadline_ms=ASYNC_DEADLINE_MS)
+                for core, cl in tenants]
+        return list(await asyncio.gather(*futs))
+
+    async def _gate():
+        async with AsyncOscillatorFarm(gate_farm,
+                                       auto_flush_rows=round_rows) as af:
+            for _ in range(2):               # round 2 hits warmed caches
+                for (core, cl), w in zip(tenants, await _round(af)):
+                    delivered.setdefault((core, cl), []).append(
+                        np.asarray(w))
+
+    asyncio.run(_gate())
+    solo = _build_farm(group, cand, n_clients, False)
+    for (core, cl), chunks in delivered.items():
+        mine = np.concatenate(chunks)
+        np.testing.assert_array_equal(mine, solo.draw(core, cl, mine.size))
+
+    # --- async timing ------------------------------------------------------
+    stats = {}
+    farm = _build_farm(group, cand, n_clients, True)
+    times, first, miss = [], [None], [0.0, 0.0, 0.0]
+
+    async def _bench():
+        async with AsyncOscillatorFarm(farm,
+                                       auto_flush_rows=round_rows) as af:
+            t0 = time.perf_counter()
+            await _round(af)                               # compile
+            first[0] = (time.perf_counter() - t0) * 1e3
+            await _round(af)                               # warm
+            n_before = len(af.miss_samples_ms())
+            for _ in range(n_rounds):
+                t0 = time.perf_counter()
+                await _round(af)
+                times.append((time.perf_counter() - t0) * 1e3)
+            timed = af.miss_samples_ms()[n_before:]
+            miss[0] = percentile(timed, 0.50)
+            miss[1] = percentile(timed, 0.99)
+            miss[2] = max(timed)
+
+    l0 = farm.launches
+    asyncio.run(_bench())
+    ts = sorted(times)
+    stats["async"] = {
+        "ms_first_round": first[0],
+        "ms_per_round": ts[len(ts) // 2],
+        "words_per_s": words_per_round / (ts[len(ts) // 2] / 1e3),
+        "launches_per_round": (farm.launches - l0) / (n_rounds + 2),
+        "p50_miss_ms": miss[0], "p99_miss_ms": miss[1],
+        "max_miss_ms": miss[2],
+    }
+
+    # --- sync baselines ----------------------------------------------------
+    def _baseline(mode):
+        bfarm = _build_farm(group, cand, n_clients, True)
+
+        def round_():
+            if mode == "per_draw":
+                for core, cl in tenants:
+                    bfarm.draw(core, cl, words_per_draw)
+            else:                            # manual_flush: hand-coalesced
+                for core, cl in tenants:
+                    bfarm.request(core, cl, words_per_draw)
+                bfarm.flush()
+
+        t0 = time.perf_counter()
+        round_()
+        first_ms = (time.perf_counter() - t0) * 1e3
+        round_()
+        l0 = bfarm.launches
+        bts = []
+        for _ in range(n_rounds):
+            t0 = time.perf_counter()
+            round_()
+            bts.append((time.perf_counter() - t0) * 1e3)
+        bts.sort()
+        return {"ms_first_round": first_ms,
+                "ms_per_round": bts[len(bts) // 2],
+                "words_per_s": words_per_round / (bts[len(bts) // 2] / 1e3),
+                "launches_per_round": (bfarm.launches - l0) / n_rounds}
+
+    stats["per_draw"] = _baseline("per_draw")
+    stats["manual_flush"] = _baseline("manual_flush")
+
+    speedup = (stats["async"]["words_per_s"]
+               / stats["per_draw"]["words_per_s"])
+    vs_manual = (stats["async"]["words_per_s"]
+                 / stats["manual_flush"]["words_per_s"])
+    result = {
+        "group": group,
+        "n_tenants": len(tenants),
+        "rows_per_draw": ASYNC_ROWS,
+        "deadline_ms": ASYNC_DEADLINE_MS,
+        "auto_flush_rows": round_rows,
+        "words_per_round": words_per_round,
+        "bit_identical": True,
+        **stats,
+        "speedup_vs_per_draw": speedup,
+        "ratio_vs_manual_flush": vs_manual,
+    }
+    emit("farm/async_coalesced", stats["async"]["ms_per_round"] * 1e3,
+         f"tenants={len(tenants)};speedup_vs_per_draw={speedup:.2f}x;"
+         f"vs_manual={vs_manual:.2f}x;"
+         f"async_words_per_s={stats['async']['words_per_s']:.3e};"
+         f"p99_miss_ms={stats['async']['p99_miss_ms']:.2f}")
+    return result
+
+
 def _planner_section(n_streams, p, lm, cm, smoke, profile=False):
     """Demand-shaped planner vs the PR 3 padded group-max gang policy.
 
@@ -356,16 +506,41 @@ def run_farm(n_streams: int = 256, n_steps: int = 1024, p: int = 1,
         nist_words = 0
     table = _system_rows(n_streams, n_steps, p, lm, cm, nist_words)
     gang = _gang_section(n_streams, p, lm, cm, smoke)
+    async_ = _async_section(n_streams, p, lm, cm, smoke)
     planner = _planner_section(n_streams, p, lm, cm, smoke, profile=profile)
     res = {"config": {"n_streams": n_streams, "n_steps": n_steps,
                       "pareto_p": p, "backend": "pallas_interpret",
                       "smoke": smoke},
            "systems": table,
            "gang": gang,
+           "async": async_,
            "planner": planner}
     if out_json:
         pathlib.Path(out_json).write_text(json.dumps(res, indent=2))
     return res
+
+
+def async_gate(res: dict) -> list[str]:
+    """CI perf-smoke acceptance for the async front-end: async-delivered
+    words must be bit-identical to the ``gang=False`` solo path, the
+    coalesced rounds must actually coalesce (one launch per round), and
+    uncoordinated async tenants must beat one-launch-per-draw."""
+    errors = []
+    a = res["async"]
+    if not a.get("bit_identical"):
+        errors.append("async-delivered words NOT bit-identical to "
+                      "gang=False")
+    if a["async"]["launches_per_round"] > 1.0:
+        errors.append(
+            f"async rounds did not coalesce into one launch: "
+            f"{a['async']['launches_per_round']:.2f} launches/round")
+    if a["speedup_vs_per_draw"] < 1.0:
+        errors.append(
+            f"async front-end underperforms one-launch-per-draw: "
+            f"{a['speedup_vs_per_draw']:.3f}x "
+            f"({a['async']['words_per_s']:.3e} vs "
+            f"{a['per_draw']['words_per_s']:.3e} words/s)")
+    return errors
 
 
 def planner_gate(res: dict) -> list[str]:
@@ -389,11 +564,16 @@ if __name__ == "__main__":
     import sys
     res = run_farm(smoke="--smoke" in sys.argv,
                    profile="--profile" in sys.argv)
-    errors = planner_gate(res)
+    errors = [f"PLANNER GATE FAIL: {e}" for e in planner_gate(res)]
+    errors += [f"ASYNC GATE FAIL: {e}" for e in async_gate(res)]
     if errors:
         for e in errors:
-            print(f"PLANNER GATE FAIL: {e}", file=sys.stderr)
+            print(e, file=sys.stderr)
         raise SystemExit(1)
     print(f"planner gate OK: skewed speedup "
           f"{res['planner']['skewed']['speedup']:.2f}x, uniform ratio "
           f"{res['planner']['uniform']['speedup']:.2f}x")
+    print(f"async gate OK: {res['async']['speedup_vs_per_draw']:.2f}x over "
+          f"per-draw ({res['async']['ratio_vs_manual_flush']:.2f}x of the "
+          f"manual-flush optimum), p99 deadline miss "
+          f"{res['async']['async']['p99_miss_ms']:.2f} ms")

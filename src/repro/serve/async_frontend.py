@@ -1,0 +1,471 @@
+"""Asyncio serving front-end: deadline-driven gang flushes, no manual flush().
+
+The gang kernels and planner (``serve/farm.py``) amortize launch overhead
+across cores — but only for tenants that coordinate their ``flush()``
+calls by hand.  ``AsyncOscillatorFarm`` closes that gap: every tenant just
+``await draw(core, client, n_words, deadline_ms=...)`` and a single
+background *flusher* task coalesces pending demand across all tenants and
+coroutines, firing one planner-shaped gang flush when either
+
+  * the earliest wall-clock **deadline** among queued requests expires, or
+  * **auto_flush_rows** worth of launch work has accumulated (counted in
+    launch rows via ``PRNGService.rows_needed_with`` — a request coverable
+    from a client's buffer adds no rows), whichever comes first.
+
+Tenants on different threads participate through a thread-safe ingress
+(a deque appended from any thread + ``loop.call_soon_threadsafe`` to wake
+the flusher); sync callers block on ``draw_sync``.
+
+Determinism contract (tests/test_async_frontend.py): delivered words are
+bit-identical per tenant to the sync ``gang=False`` solo path, however
+requests interleave, coalesce, or get cancelled — a direct consequence of
+the farm's chunk-invariant absolute-row indexing plus two front-end rules:
+
+  * a request enters the farm (``svc.request``) only at flush time, so
+    cancelling a queued future rolls its demand back by simply never
+    submitting it;
+  * a flush's returned words are split FIFO per (core, client): words owed
+    to the sync surface (pre-existing service pending + outbox backlog)
+    are re-parked via ``PRNGService.park`` — never dropped — and the tail
+    resolves this front-end's futures in submission order.
+
+Every time read goes through the injectable ``Clock``
+(``repro.serve.clock``): under a manual-advance ``FakeClock`` the flusher
+wakes exactly when the test advances fake time past a deadline, so every
+deadline/coalescing behavior is testable with zero real sleeps.
+
+``snapshot()`` quiesces in-flight futures: it drains the ingress and folds
+still-queued front-end demand into the per-client ``pending`` counts of
+the farm snapshot.  Restoring that snapshot anywhere — a plain sync farm
+or another front-end — replays the in-flight draws through the sync
+surface (next ``flush()``), bit-identically to what the live futures
+receive.  The live front-end keeps serving its own futures after the
+snapshot.
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import concurrent.futures
+import dataclasses
+import threading
+from typing import Deque, Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.serve.clock import Clock, SystemClock
+from repro.serve.farm import OscillatorFarm
+
+_Future = Union["asyncio.Future", "concurrent.futures.Future"]
+
+
+@dataclasses.dataclass
+class _Request:
+    core: str
+    client: str
+    n_words: int
+    deadline: float            # absolute, in this front-end's clock
+    future: _Future
+
+
+def percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(round(q * (len(s) - 1))))]
+
+
+class AsyncOscillatorFarm:
+    """Async front-end over an ``OscillatorFarm``: futures in, gang
+    flushes out.
+
+    Two ways to run the flusher:
+
+      * ``async with AsyncOscillatorFarm(farm) as af`` (or ``await
+        af.start()`` / ``await af.aclose()``) inside an existing event
+        loop — the deterministic-test mode;
+      * ``af.start_thread()`` / ``af.close()`` — a daemon thread owns the
+        loop, and sync callers on any thread use ``draw_sync``.
+
+    ``deadline_ms`` is *relative* wall-clock budget per request; ``None``
+    falls back to ``default_deadline_ms`` (its own ``None`` meaning
+    "flush at the next flusher pass", i.e. no intentional batching delay).
+    A flush serves EVERY queued request, not just the due ones — riders
+    amortize the launch the deadline paid for.
+    """
+
+    def __init__(self, farm: OscillatorFarm, *,
+                 auto_flush_rows: Optional[int] = None,
+                 default_deadline_ms: Optional[float] = None,
+                 clock: Optional[Clock] = None):
+        self.farm = farm
+        self.auto_flush_rows = auto_flush_rows
+        self.default_deadline_ms = default_deadline_ms
+        self.clock: Clock = clock or farm.clock or SystemClock()
+        self._queue: List[_Request] = []
+        self._ingress: Deque[_Request] = collections.deque()
+        self._wake: Optional[asyncio.Event] = None
+        self._drain_waiters: List[asyncio.Future] = []
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._task: Optional[asyncio.Task] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop: Optional[asyncio.Event] = None
+        self.flushes = 0
+        self.served_words = 0
+        self._miss_ms: List[float] = []
+        # flush failures survive here (each batch future also carries its
+        # exception); the flusher itself never dies except by aclose()
+        self.flush_errors: List[BaseException] = []
+
+    # -- lifecycle -----------------------------------------------------------
+
+    async def start(self) -> "AsyncOscillatorFarm":
+        """Start the flusher task on the currently running loop."""
+        if self._task is not None:
+            raise RuntimeError("front-end already started")
+        self._loop = asyncio.get_running_loop()
+        self._wake = asyncio.Event()
+        self._task = self._loop.create_task(self._run())
+        return self
+
+    async def aclose(self) -> None:
+        """Stop the flusher; still-queued futures are cancelled."""
+        if self._task is not None:
+            self._task.cancel()
+            await asyncio.gather(self._task, return_exceptions=True)
+            self._task = None
+        self._ingest()
+        for r in self._queue:
+            r.future.cancel()
+        self._queue.clear()
+        for w in self._drain_waiters:
+            if not w.done():
+                w.set_result(None)
+        self._drain_waiters.clear()
+
+    async def __aenter__(self) -> "AsyncOscillatorFarm":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.aclose()
+
+    def start_thread(self) -> "AsyncOscillatorFarm":
+        """Run the event loop + flusher on a daemon thread (sync callers
+        then use ``draw_sync`` from any thread)."""
+        if self._thread is not None or self._task is not None:
+            raise RuntimeError("front-end already started")
+        started = threading.Event()
+        self._thread = threading.Thread(
+            target=lambda: asyncio.run(self._thread_body(started)),
+            name="async-farm-flusher", daemon=True)
+        self._thread.start()
+        started.wait()
+        return self
+
+    async def _thread_body(self, started: threading.Event) -> None:
+        self._stop = asyncio.Event()
+        await self.start()
+        started.set()
+        await self._stop.wait()
+        await self.aclose()
+
+    def close(self) -> None:
+        """Stop a ``start_thread`` front-end and join its thread."""
+        if self._thread is None:
+            return
+        self._loop.call_soon_threadsafe(self._stop.set)
+        self._thread.join()
+        self._thread = None
+        self._loop = None
+
+    # -- client surface ------------------------------------------------------
+
+    def register(self, core: str, client: str,
+                 seed: Optional[int] = None) -> None:
+        """Register a tenant stream (do this before serving traffic; it is
+        not synchronized against a running flusher on another thread)."""
+        self.farm.register(core, client, seed=seed)
+
+    def _deadline(self, deadline_ms: Optional[float]) -> float:
+        if deadline_ms is None:
+            deadline_ms = self.default_deadline_ms
+        if deadline_ms is None:
+            deadline_ms = 0.0
+        return self.clock.now() + float(deadline_ms) / 1e3
+
+    def _validate(self, core: str, client: str, n_words: int) -> None:
+        svc = self.farm.services.get(core)
+        if svc is None:
+            raise KeyError(f"unknown core {core!r}; "
+                           f"have {sorted(self.farm.services)}")
+        if client not in svc.clients:
+            raise KeyError(f"client {client!r} not registered on {core!r}")
+        if n_words < 0:
+            raise ValueError(f"n_words must be >= 0, got {n_words}")
+
+    def submit(self, core: str, client: str, n_words: int,
+               deadline_ms: Optional[float] = None) -> asyncio.Future:
+        """Queue a draw from the loop thread; returns the tenant's future.
+
+        The future resolves with exactly ``n_words`` uint32 words once a
+        flush (deadline- or threshold-triggered) serves it.  Cancelling it
+        while queued rolls the demand back cleanly — the farm never sees
+        the request, and no other tenant's stream shifts.
+        """
+        if self._task is None:
+            raise RuntimeError("front-end not started")
+        self._validate(core, client, n_words)
+        fut = self._loop.create_future()
+        if n_words == 0:
+            fut.set_result(np.empty(0, np.uint32))
+            return fut
+        self._queue.append(_Request(core, client, int(n_words),
+                                    self._deadline(deadline_ms), fut))
+        self._wake.set()
+        return fut
+
+    async def draw(self, core: str, client: str, n_words: int,
+                   deadline_ms: Optional[float] = None) -> np.ndarray:
+        """``await`` one tenant draw (see ``submit``)."""
+        return await self.submit(core, client, n_words, deadline_ms)
+
+    def draw_sync(self, core: str, client: str, n_words: int,
+                  deadline_ms: Optional[float] = None,
+                  timeout: Optional[float] = None) -> np.ndarray:
+        """Blocking draw from ANY thread: the thread-safe ingress.
+
+        Appends the request to a cross-thread deque and wakes the flusher
+        with ``call_soon_threadsafe``; blocks on a
+        ``concurrent.futures.Future`` until the coalesced flush serves it.
+        """
+        if self._task is None or self._loop is None:
+            # _task (not just _loop) is the liveness flag: after aclose()
+            # the loop object may survive with no flusher to serve us
+            raise RuntimeError("front-end not started")
+        try:
+            running = asyncio.get_running_loop()
+        except RuntimeError:
+            running = None
+        if running is self._loop:
+            # blocking the loop thread would starve the flusher forever
+            raise RuntimeError(
+                "draw_sync called from the event-loop thread would "
+                "deadlock; use `await draw(...)` / submit() there")
+        self._validate(core, client, n_words)
+        cfut: concurrent.futures.Future = concurrent.futures.Future()
+        if n_words == 0:
+            cfut.set_result(np.empty(0, np.uint32))
+            return cfut.result()
+        self._ingress.append(_Request(core, client, int(n_words),
+                                      self._deadline(deadline_ms), cfut))
+        self._loop.call_soon_threadsafe(self._wake.set)
+        return cfut.result(timeout)
+
+    async def drain(self) -> None:
+        """Wait until the flusher has no currently-actionable work left
+        (every due flush performed; remaining requests are all waiting on
+        future deadlines / more coalescing)."""
+        if self._task is None:
+            raise RuntimeError("front-end not started")
+        fut = self._loop.create_future()
+        self._drain_waiters.append(fut)
+        self._wake.set()
+        await fut
+
+    async def flush_now(self) -> None:
+        """Force one flush of everything queued, deadlines notwithstanding.
+
+        A flush failure is recorded in ``flush_errors`` (same as the
+        background path) and re-raised to this caller; the batch's
+        futures carry it either way.
+        """
+        self._ingest()
+        if self._queue:
+            try:
+                self._do_flush()
+            except Exception as e:
+                self.flush_errors.append(e)
+                raise
+        await self.drain()
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def pending_requests(self) -> int:
+        """Queued front-end draws not yet served (ingress included)."""
+        return (sum(1 for r in self._queue if not r.future.cancelled())
+                + len(self._ingress))
+
+    @property
+    def launches(self) -> int:
+        return self.farm.launches
+
+    def pending_rows(self) -> int:
+        """Launch rows the queued front-end demand would add on top of the
+        farm's own pending — the quantity compared against
+        ``auto_flush_rows``."""
+        extra: Dict[str, Dict[str, int]] = {}
+        for r in self._queue:
+            if not r.future.cancelled():
+                per = extra.setdefault(r.core, {})
+                per[r.client] = per.get(r.client, 0) + r.n_words
+        return sum(svc.rows_needed_with(extra.get(core))
+                   for core, svc in self.farm.services.items())
+
+    def miss_samples_ms(self) -> List[float]:
+        """Recorded deadline-miss samples (ms past deadline, 0 = on time),
+        oldest first — the raw series behind ``deadline_stats()``; public
+        so benchmarks can window it (e.g. timed region only)."""
+        return list(self._miss_ms)
+
+    def deadline_stats(self) -> Dict[str, float]:
+        """p50/p99/max deadline-miss latency (ms) over served requests;
+        a request served before its deadline counts as 0 miss."""
+        return {"served_requests": float(len(self._miss_ms)),
+                "p50_miss_ms": percentile(self._miss_ms, 0.50),
+                "p99_miss_ms": percentile(self._miss_ms, 0.99),
+                "max_miss_ms": max(self._miss_ms, default=0.0)}
+
+    # -- flusher -------------------------------------------------------------
+
+    def _ingest(self) -> None:
+        """Move thread-ingress requests into the queue; prune cancelled."""
+        while self._ingress:
+            self._queue.append(self._ingress.popleft())
+        self._queue = [r for r in self._queue if not r.future.cancelled()]
+
+    def _earliest_deadline(self) -> Optional[float]:
+        return min((r.deadline for r in self._queue), default=None)
+
+    def _due(self) -> bool:
+        if not self._queue:
+            return False
+        if self._earliest_deadline() <= self.clock.now():
+            return True
+        return (self.auto_flush_rows is not None
+                and self.pending_rows() >= self.auto_flush_rows)
+
+    def _do_flush(self) -> None:
+        """ONE coalesced farm flush serving every queued request.
+
+        Runs synchronously on the loop thread, so nothing interleaves with
+        it: an asyncio future cannot be cancelled mid-flush, and a
+        concurrent future is moved to RUNNING first (late ``cancel()``
+        calls fail instead of racing the launch).
+        """
+        batch: List[_Request] = []
+        for r in self._queue:
+            f = r.future
+            if isinstance(f, concurrent.futures.Future):
+                if not f.set_running_or_notify_cancel():
+                    continue               # cancelled: demand rolled back
+            elif f.cancelled():
+                continue
+            batch.append(r)
+        self._queue = []
+        if not batch:
+            return
+        # Words the sync surface is owed come FIRST in each client's flush
+        # output (outbox backlog, then earlier-requested service pending);
+        # record the counts so the split below can re-park them.
+        owed: Dict[Tuple[str, str], int] = {}
+        for core, svc in self.farm.services.items():
+            for name in svc.clients:
+                n = svc.pending_words(name) + svc.outbox_words(name)
+                if n:
+                    owed[(core, name)] = n
+        fifo: Dict[Tuple[str, str], List[_Request]] = {}
+        try:
+            for r in batch:
+                self.farm.services[r.core].request(r.client, r.n_words)
+                fifo.setdefault((r.core, r.client), []).append(r)
+            # Launch with deliver=False so every served word is parked in
+            # its service outbox the moment its group absorbs: if a later
+            # group's launch fails mid-flush, already-absorbed words are
+            # safe on the sync surface instead of vanishing with the
+            # in-flight return value.  The second pass is launch-free
+            # delivery (identical content/order to a deliver=True flush).
+            self.farm.flush(deliver=False)
+            out = self.farm.flush()
+            now = self.clock.now()
+            self.flushes += 1
+            for core, per_client in out.items():
+                for client, words in per_client.items():
+                    head = owed.get((core, client), 0)
+                    if head:
+                        self.farm.services[core].park(client, words[:head])
+                    pos = head
+                    for r in fifo.pop((core, client), ()):
+                        r.future.set_result(words[pos:pos + r.n_words])
+                        pos += r.n_words
+                        self.served_words += r.n_words
+                        self._miss_ms.append(
+                            max(0.0, now - r.deadline) * 1e3)
+                    if pos != len(words):
+                        raise AssertionError(
+                            f"flush word accounting broken for "
+                            f"{core}/{client}: {len(words)} words, "
+                            f"consumed {pos}")
+            if fifo:
+                raise AssertionError(
+                    f"flush served no words for queued requests: "
+                    f"{sorted(fifo)}")
+        except Exception as e:
+            # Fail loudly, never hang: every batched future still pending
+            # carries the error — including when the accounting backstops
+            # above fire after some futures already resolved.
+            for r in batch:
+                if not r.future.done():
+                    r.future.set_exception(e)
+            raise
+
+    async def _run(self) -> None:
+        while True:
+            self._wake.clear()
+            self._ingest()
+            if self._due():
+                try:
+                    self._do_flush()
+                except Exception as e:     # noqa: BLE001 - kept, not lost
+                    self.flush_errors.append(e)
+                continue
+            for w in self._drain_waiters:
+                if not w.done():
+                    w.set_result(None)
+            self._drain_waiters.clear()
+            nxt = self._earliest_deadline()
+            timeout = None if nxt is None else max(0.0, nxt - self.clock.now())
+            await self.clock.wait(self._wake, timeout)
+
+    # -- resumability --------------------------------------------------------
+
+    async def snapshot(self) -> Dict[str, object]:
+        """Quiesce + snapshot: farm state with still-queued front-end
+        demand folded into the per-client ``pending`` counts.
+
+        Runs on the loop thread between flushes (a flush is atomic there),
+        so no launch is in flight; the ingress is drained first so
+        requests already submitted by sync threads are captured too.
+        Restoring the result on ANY farm/front-end replays the in-flight
+        draws through the next sync ``flush()``, while this front-end
+        still serves its own futures afterwards.
+        """
+        self._ingest()
+        snap = self.farm.snapshot()
+        for r in self._queue:
+            if r.future.cancelled():
+                continue
+            cl = snap["cores"][r.core]["clients"][r.client]
+            cl["pending"] = int(cl.get("pending", 0)) + r.n_words
+        return snap
+
+    def restore(self, snap: Dict[str, object]) -> None:
+        """Restore a snapshot; requires a quiesced front-end (no queued
+        futures — they would double-count against the snapshot's merged
+        pending demand)."""
+        self._ingest()
+        if self._queue:
+            raise RuntimeError(
+                f"{len(self._queue)} in-flight request(s); drain or cancel "
+                f"them before restore()")
+        self.farm.restore(snap)

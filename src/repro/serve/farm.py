@@ -34,7 +34,6 @@ from __future__ import annotations
 
 import json
 import pathlib
-import time
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -42,6 +41,7 @@ import numpy as np
 
 from repro.core.dse import GangCostModel
 from repro.prng.stream import _round_rows
+from repro.serve.clock import Clock, SystemClock
 from repro.serve.prng_service import PRNGService
 
 
@@ -87,7 +87,8 @@ class GangScheduler:
     """
 
     def __init__(self, cost_model: Optional[GangCostModel] = None,
-                 planner: bool = True):
+                 planner: bool = True, clock: Optional[Clock] = None):
+        self.clock: Clock = clock or SystemClock()
         self._plans: Dict[Tuple, Dict] = {}
         self._decisions: Dict[Tuple, Dict] = {}
         self._dispatch_keys = set()   # (plan key, n_rows) ever launched
@@ -104,7 +105,7 @@ class GangScheduler:
         return len(self._dispatch_keys)
 
     def _tick(self, stage: str, t0: float) -> float:
-        t1 = time.perf_counter()
+        t1 = self.clock.now()
         if self.profile is not None:
             self.profile[stage] = self.profile.get(stage, 0.0) + (t1 - t0)
         return t1
@@ -271,7 +272,7 @@ class GangScheduler:
         """One gang launch (padded or ragged) for ``members``."""
         from repro.kernels import ops
         from repro.kernels.chaotic_ann import gang_effective_rows
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         svc0 = members[0][1]
         cfg = svc0.config
         plan = self._plan(key, [(name, svc) for name, svc, _, _ in members],
@@ -346,7 +347,7 @@ class GangScheduler:
                      deliver: bool) -> Dict[str, Dict[str, np.ndarray]]:
         """A planner-split singleton: a plain per-core launch."""
         name, svc, _, offsets = member
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         words, new_x = svc._launch(n_rows, jnp.asarray(offsets))
         t0 = self._tick("launch", t0)
         served = svc.absorb(words, new_x, n_rows, deliver=deliver)
@@ -364,7 +365,7 @@ class GangScheduler:
         are bit-identical to the per-core path (chunk-invariance of the
         absolute-row Weyl indexing).
         """
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         svc0 = members[0][1]
         demands = tuple(_round_rows(n, svc0.config.t_block)
                         for _, _, n, _ in members)
@@ -402,17 +403,23 @@ class OscillatorFarm:
     pending work reaches that many word rows (None = flush on every
     auto-flush request).  ``profile=True`` accumulates per-stage flush
     wall times (plan / stack / launch / absorb) in ``profile_stats``.
+    Every time read (the profile timers are the only ones) goes through
+    the injectable ``clock`` (``repro.serve.clock``): the sync farm's own
+    deferral/coalescing logic is flush-cycle- and row-counted, never
+    wall-clock-dependent, and a frozen ``FakeClock`` proves it
+    (tests/test_async_frontend.py).
     """
 
     def __init__(self, *, gang: bool = True, planner: bool = True,
                  gang_cost_model: Optional[GangCostModel] = None,
                  auto_flush_rows: Optional[int] = None,
-                 profile: bool = False):
+                 profile: bool = False, clock: Optional[Clock] = None):
         self.services: Dict[str, PRNGService] = {}
         self.gang = bool(gang)
         self.auto_flush_rows = auto_flush_rows
+        self.clock: Clock = clock or SystemClock()
         self._sched = GangScheduler(cost_model=gang_cost_model,
-                                    planner=planner)
+                                    planner=planner, clock=self.clock)
         if profile:
             self._sched.profile = {"plan": 0.0, "stack": 0.0,
                                    "launch": 0.0, "absorb": 0.0,
@@ -513,9 +520,18 @@ class OscillatorFarm:
         """
         self._svc(core).request(client, n_words)
         if auto_flush:
-            total = sum(svc.rows_needed() for svc in self.services.values())
-            if self.auto_flush_rows is None or total >= self.auto_flush_rows:
+            if (self.auto_flush_rows is None
+                    or self.pending_rows >= self.auto_flush_rows):
                 self.flush(deliver=False)
+
+    @property
+    def pending_rows(self) -> int:
+        """Unserved demand across all cores, in launch rows (words already
+        coverable from client buffers contribute nothing).  This is the
+        quantity the ``auto_flush_rows`` threshold compares against — the
+        same accounting the async front-end uses for its coalescing
+        trigger (``repro.serve.async_frontend``)."""
+        return sum(svc.rows_needed() for svc in self.services.values())
 
     def flush(self, max_wait_rows: Optional[int] = None,
               deliver: bool = True) -> Dict[str, Dict[str, np.ndarray]]:
@@ -568,16 +584,16 @@ class OscillatorFarm:
                 prof = self._sched.profile
                 for c in cores:
                     svc = self.services[c]
-                    t0 = time.perf_counter()
+                    t0 = self._sched.clock.now()
                     n_rows = _round_rows(plans[c][0], svc.config.t_block)
                     words, new_x = svc._launch(n_rows,
                                                jnp.asarray(plans[c][1]))
-                    t1 = time.perf_counter()
+                    t1 = self._sched.clock.now()
                     served = svc.absorb(words, new_x, n_rows,
                                         deliver=deliver)
                     if prof is not None:
                         prof["launch"] += t1 - t0
-                        prof["absorb"] += time.perf_counter() - t1
+                        prof["absorb"] += self._sched.clock.now() - t1
                     if served:
                         out[c] = served
         # Launch-free delivery pass for cores with nothing to launch (their

@@ -122,13 +122,33 @@ class PRNGService:
     def rows_needed(self) -> int:
         """Unrounded max word rows any pending request still needs (0 when
         no launch is required).  Cheap — safe to poll per request()."""
+        return self.rows_needed_with(None)
+
+    def rows_needed_with(self, extra: Optional[Dict[str, int]] = None) -> int:
+        """``rows_needed()`` if ``extra`` words per client were also pending.
+
+        Demand introspection for front-ends that hold requests of their own
+        (the async flusher): a request coverable from a client's buffer
+        contributes zero rows, so coalescing thresholds count launch work,
+        not raw words.  No state changes.
+        """
         L = self.lanes_per_client
+        extra = extra or {}
         n_rows = 0
         for c in self.clients.values():
-            need = c.pending - len(c.buf)
+            need = c.pending + extra.get(c.name, 0) - len(c.buf)
             if need > 0:
                 n_rows = max(n_rows, -(-need // L))
         return n_rows
+
+    def pending_words(self, name: str) -> int:
+        """Words this client has requested but not yet been served."""
+        return self.clients[name].pending
+
+    def outbox_words(self, name: str) -> int:
+        """Words already served for this client but parked undelivered."""
+        parked = self._outbox.get(name)
+        return 0 if parked is None else int(parked.size)
 
     def prepare_rows(self) -> Tuple[int, Optional[np.ndarray]]:
         """Plan a pool launch without performing it: (rows needed, offsets).
@@ -241,11 +261,18 @@ class PRNGService:
             self._park(other, words)
         return mine
 
-    def _park(self, name: str, words: np.ndarray) -> None:
+    def park(self, name: str, words: np.ndarray) -> None:
+        """Append already-served words to this client's outbox (delivered,
+        outbox-first, by the next flush()/draw()).  Public for front-ends
+        that receive a flush()'s words on behalf of other callers: words a
+        front-end cannot route to one of its own requests are parked back
+        here — never dropped — and surface on the sync path."""
         if words.size == 0:
             return
         self._outbox[name] = (np.concatenate([self._outbox[name], words])
                               if name in self._outbox else words)
+
+    _park = park
 
     def _by_slot(self) -> List[_Client]:
         return sorted(self.clients.values(), key=lambda c: c.slot)
