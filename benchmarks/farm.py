@@ -1,6 +1,6 @@
 """Cross-system oscillator-farm benchmark (BENCH_farm.json).
 
-Three sections:
+Sections:
 
 * ``systems`` — one row per registered chaotic system: the registry-trained
   oscillator drawn through the fused ``ops.chaotic_bits`` path with that
@@ -25,6 +25,14 @@ Three sections:
   ``manual_flush`` (hand-coordinated request+flush — the coordination
   optimum the front-end is supposed to recover).  Words/s plus p50/p99
   deadline-miss latency (ms past each request's deadline at delivery).
+
+* ``async_offload`` — the production-tier proof: with every launch padded
+  to a known duration, a foreign thread measures ingress round-trips
+  through the event loop WHILE a launch is in flight.  Executor offload
+  (PR 6) must keep p99 under 10% of the launch duration where the on-loop
+  baseline pins near 100%, words must stay bit-identical across offload
+  on/off/solo, and a low queued-rows ceiling must shed overload with
+  typed ``Overloaded`` rejects while admitted futures all resolve.
 
 * ``planner`` — the demand-shaped launch planner vs the PR 3 padded
   group-max gang policy.  ``skewed`` is the operating point the planner
@@ -400,6 +408,171 @@ def _async_section(n_streams, p, lm, cm, smoke):
     return result
 
 
+SLOW_LAUNCH_S = 0.25              # injected launch duration (offload proof)
+
+
+class _SlowFlush:
+    """Wrap ``farm.flush`` so every launch pass (``deliver=False``) takes
+    a known ``delay_s`` — the offload section needs a launch long enough
+    that loop (un)responsiveness during it is unambiguous."""
+
+    def __init__(self, farm, delay_s):
+        self.farm = farm
+        self.orig = farm.flush
+        self.delay_s = delay_s
+
+    def __call__(self, *a, **kw):
+        if not kw.get("deliver", True):
+            time.sleep(self.delay_s)
+        return self.orig(*a, **kw)
+
+
+def _offload_probe(offload, group, cand, n_clients, n_rounds, delay_s):
+    """Ingress latency while a slow launch is in flight, one mode.
+
+    A foreign thread (this one) submits a big draw, waits for its launch
+    to be in flight, then measures round-trips of zero-word draws through
+    the event loop — the loop-liveness probe behind every ingress path
+    (submit scheduling, draw_sync wakeups, cancellation, deadlines).
+    With ``offload=True`` the launch runs on the worker thread and probes
+    return in microseconds; with ``offload=False`` (the PR 5 on-loop
+    behavior) the first probe blocks for the whole launch.
+
+    Returns (probe samples ms, delivered words per round).
+    """
+    from repro.serve.async_frontend import AsyncOscillatorFarm
+
+    farm = _build_farm(group, cand, n_clients, True)
+    slow = _SlowFlush(farm, delay_s)
+    farm.flush = slow
+    af = AsyncOscillatorFarm(farm, offload=offload).start_thread()
+    probes, words = [], []
+    core0 = group[0]
+    try:
+        for _ in range(n_rounds):
+            dfut = asyncio.run_coroutine_threadsafe(
+                af.draw(core0, "c0", ASYNC_ROWS * LANES_PER_CLIENT,
+                        deadline_ms=0), af.loop)
+            deadline = time.perf_counter() + 4 * delay_s + 5.0
+            while not af.in_flight and not dfut.done():
+                if time.perf_counter() > deadline:
+                    raise RuntimeError("launch never became in-flight")
+                time.sleep(1e-4)
+            while af.in_flight and not dfut.done():
+                t0 = time.perf_counter()
+                asyncio.run_coroutine_threadsafe(
+                    af.draw(core0, "c0", 0), af.loop).result(30.0)
+                probes.append((time.perf_counter() - t0) * 1e3)
+            words.append(np.asarray(dfut.result(30.0)))
+    finally:
+        farm.flush = slow.orig
+        af.close()
+    return probes, words
+
+
+def _backpressure_point(group, cand, n_clients, delay_s):
+    """Overload the front-end past a low queued-rows ceiling: over-limit
+    submits must fail fast with ``Overloaded`` (typed, with a retry hint)
+    while every admitted future still resolves with its exact words."""
+    from repro.serve.admission import AdmissionController, Overloaded
+    from repro.serve.async_frontend import AsyncOscillatorFarm
+
+    farm = _build_farm(group, cand, n_clients, True)
+    slow = _SlowFlush(farm, delay_s)
+    farm.flush = slow
+    ceiling = 2 * ASYNC_ROWS
+    ac = AdmissionController(max_queued_rows=ceiling)
+    af = AsyncOscillatorFarm(farm, admission=ac).start_thread()
+    n_offered = 32
+    words_per_draw = ASYNC_ROWS * LANES_PER_CLIENT
+    served = rejected = failed = 0
+    try:
+        futs = [asyncio.run_coroutine_threadsafe(
+                    af.draw(group[0], "c0", words_per_draw, deadline_ms=1.0),
+                    af.loop)
+                for _ in range(n_offered)]
+        for f in futs:
+            try:
+                served += int(f.result(60.0).size == words_per_draw)
+            except Overloaded as e:
+                rejected += 1
+                assert e.retry_after_ms >= 0.0 and e.scope == "farm"
+            except Exception:            # noqa: BLE001 - tallied for the gate
+                failed += 1
+    finally:
+        farm.flush = slow.orig
+        af.close()
+    stats = ac.stats()
+    return {"offered": n_offered, "queued_rows_ceiling": ceiling,
+            "served": served, "rejected": rejected,
+            "failed_other": failed,
+            "admitted": stats["admitted"],
+            "rejected_farm": stats["rejected_farm"],
+            "all_admitted_resolved": failed == 0
+            and served + rejected == n_offered}
+
+
+def _async_offload_section(n_streams, p, lm, cm, smoke):
+    """The production-tier proof: executor offload keeps ingress live
+    during slow launches, and admission control sheds overload.
+
+    ``offload`` vs ``on_loop`` run identical traffic against a launch
+    padded to ``SLOW_LAUNCH_S``; the p99 ingress probe (foreign-thread
+    round-trip through the event loop while the launch is in flight) is
+    the headline — the acceptance bar is p99 < 10% of the launch
+    duration, where the on-loop baseline is pinned near 100%.  Delivered
+    words are checked bit-identical across both modes and against the
+    ``gang=False`` solo path before anything is reported.
+    """
+    from repro.serve.async_frontend import percentile
+
+    group, cand = _compatible_group(p, lm, cm)
+    n_clients = max(1, n_streams // LANES_PER_CLIENT)
+    n_rounds = 2 if smoke else 4
+    delay_s = SLOW_LAUNCH_S / (2 if smoke else 1)
+
+    modes = {}
+    delivered = {}
+    for label, offload in (("offload", True), ("on_loop", False)):
+        probes, words = _offload_probe(offload, group, cand, n_clients,
+                                       n_rounds, delay_s)
+        delivered[label] = words
+        modes[label] = {
+            "probe_samples": len(probes),
+            "ingress_p50_ms": percentile(probes, 0.50),
+            "ingress_p99_ms": percentile(probes, 0.99),
+            "ingress_max_ms": max(probes, default=0.0),
+        }
+
+    # bit-identity: offload on == off == gang=False solo, round by round
+    solo = _build_farm(group, cand, n_clients, False)
+    bit_identical = True
+    for a, b in zip(delivered["offload"], delivered["on_loop"]):
+        ref = solo.draw(group[0], "c0", a.size)
+        if not (np.array_equal(a, b) and np.array_equal(a, ref)):
+            bit_identical = False
+    back = _backpressure_point(group, cand, n_clients, delay_s / 4)
+
+    launch_ms = delay_s * 1e3
+    p99_frac = modes["offload"]["ingress_p99_ms"] / launch_ms
+    result = {
+        "group": group,
+        "launch_ms_injected": launch_ms,
+        "rounds": n_rounds,
+        "bit_identical": bit_identical,
+        "offload": modes["offload"],
+        "on_loop": modes["on_loop"],
+        "offload_p99_frac_of_launch": p99_frac,
+        "backpressure": back,
+    }
+    emit("farm/async_offload", modes["offload"]["ingress_p99_ms"] * 1e3,
+         f"p99_frac_of_launch={p99_frac:.4f};"
+         f"on_loop_p99_ms={modes['on_loop']['ingress_p99_ms']:.1f};"
+         f"bit_identical={bit_identical};"
+         f"backpressure_rejects={back['rejected']}")
+    return result
+
+
 def _planner_section(n_streams, p, lm, cm, smoke, profile=False):
     """Demand-shaped planner vs the PR 3 padded group-max gang policy.
 
@@ -507,6 +680,7 @@ def run_farm(n_streams: int = 256, n_steps: int = 1024, p: int = 1,
     table = _system_rows(n_streams, n_steps, p, lm, cm, nist_words)
     gang = _gang_section(n_streams, p, lm, cm, smoke)
     async_ = _async_section(n_streams, p, lm, cm, smoke)
+    async_offload = _async_offload_section(n_streams, p, lm, cm, smoke)
     planner = _planner_section(n_streams, p, lm, cm, smoke, profile=profile)
     res = {"config": {"n_streams": n_streams, "n_steps": n_steps,
                       "pareto_p": p, "backend": "pallas_interpret",
@@ -514,6 +688,7 @@ def run_farm(n_streams: int = 256, n_steps: int = 1024, p: int = 1,
            "systems": table,
            "gang": gang,
            "async": async_,
+           "async_offload": async_offload,
            "planner": planner}
     if out_json:
         pathlib.Path(out_json).write_text(json.dumps(res, indent=2))
@@ -543,6 +718,37 @@ def async_gate(res: dict) -> list[str]:
     return errors
 
 
+def async_offload_gate(res: dict) -> list[str]:
+    """CI perf-smoke acceptance for the production tier: with a launch
+    padded to a known duration, foreign-thread ingress p99 during the
+    launch must stay under 10% of that duration under offload (the
+    on-loop baseline pins near 100%), words must be bit-identical across
+    offload on/off and the solo path, and backpressure must shed
+    over-ceiling load with typed rejects while admitted futures all
+    resolve."""
+    errors = []
+    o = res["async_offload"]
+    if not o.get("bit_identical"):
+        errors.append("offloaded words NOT bit-identical to the on-loop / "
+                      "solo paths")
+    if o["offload_p99_frac_of_launch"] >= 0.10:
+        errors.append(
+            f"ingress p99 during an offloaded launch is "
+            f"{o['offload']['ingress_p99_ms']:.2f} ms = "
+            f"{o['offload_p99_frac_of_launch']:.1%} of the "
+            f"{o['launch_ms_injected']:.0f} ms launch (bar: <10%)")
+    b = o["backpressure"]
+    if b["rejected"] == 0:
+        errors.append("overload shed no requests: the queued-rows ceiling "
+                      "never rejected")
+    if not b["all_admitted_resolved"]:
+        errors.append(
+            f"admitted futures did not all resolve under overload: "
+            f"served={b['served']} rejected={b['rejected']} "
+            f"failed_other={b['failed_other']} of {b['offered']}")
+    return errors
+
+
 def planner_gate(res: dict) -> list[str]:
     """CI perf-smoke acceptance: bit-identity must hold and the planner
     must not lose to the padded group-max policy on the skewed workload."""
@@ -566,6 +772,7 @@ if __name__ == "__main__":
                    profile="--profile" in sys.argv)
     errors = [f"PLANNER GATE FAIL: {e}" for e in planner_gate(res)]
     errors += [f"ASYNC GATE FAIL: {e}" for e in async_gate(res)]
+    errors += [f"OFFLOAD GATE FAIL: {e}" for e in async_offload_gate(res)]
     if errors:
         for e in errors:
             print(e, file=sys.stderr)
@@ -577,3 +784,10 @@ if __name__ == "__main__":
           f"per-draw ({res['async']['ratio_vs_manual_flush']:.2f}x of the "
           f"manual-flush optimum), p99 deadline miss "
           f"{res['async']['async']['p99_miss_ms']:.2f} ms")
+    o = res["async_offload"]
+    print(f"offload gate OK: ingress p99 "
+          f"{o['offload']['ingress_p99_ms']:.2f} ms during a "
+          f"{o['launch_ms_injected']:.0f} ms launch "
+          f"({o['offload_p99_frac_of_launch']:.1%}; on-loop baseline "
+          f"{o['on_loop']['ingress_p99_ms']:.1f} ms), "
+          f"{o['backpressure']['rejected']} typed rejects under overload")

@@ -1,0 +1,203 @@
+"""Admission control for the serving tier: rate limits + backpressure.
+
+Without policy, the async front-end's queue grows without bound the moment
+aggregate tenant demand outruns the farm's flush rate — every queued
+request makes the *next* flush bigger and slower, which makes the queue
+grow faster (the classic congestion-collapse spiral).  This module is the
+policy layer the front-end consults **before** a request ever enters its
+queue:
+
+* **per-tenant token buckets** — each (core, client) pair refills at
+  ``rate_words_per_s`` with a burst allowance of ``burst_words``; a draw
+  that would overdraw the bucket is rejected with the time at which the
+  bucket will next cover it;
+* **a farm-wide queued-rows ceiling** — a thread-safe gauge of launch
+  rows currently queued in the front-end (each admitted request adds its
+  own row estimate, released when the request leaves the queue: flushed,
+  cancelled, or pruned).  When the gauge would exceed
+  ``max_queued_rows``, further submits are rejected until flushes drain
+  the backlog.
+
+Rejections raise :class:`Overloaded` — a *typed* fail-fast error carrying
+a ``retry_after_ms`` hint — instead of silently queueing work that cannot
+meet any deadline.  In-flight (already admitted) requests are never
+affected: the controller only gates entry.
+
+Every time read comes from an injectable ``Clock`` (the same seam as the
+rest of the serving stack), so the whole policy is testable under a
+manual-advance ``FakeClock`` with zero real sleeps
+(tests/test_admission.py).  The gauge and buckets take an internal lock:
+``admit`` is safe from any thread, matching ``draw_sync``'s cross-thread
+ingress.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Tuple
+
+from repro.serve.clock import Clock, SystemClock
+
+
+class Overloaded(RuntimeError):
+    """A submit was rejected by admission control (fail fast, retry later).
+
+    ``retry_after_ms`` is the caller's backoff hint: for a tenant-rate
+    rejection it is the time until the token bucket covers the request;
+    for a farm-ceiling rejection it is the controller's configured hint
+    (the queue drains on flushes, whose timing the controller cannot
+    know).  ``scope`` is ``"tenant"`` or ``"farm"``.
+    """
+
+    def __init__(self, message: str, *, retry_after_ms: float, scope: str,
+                 core: Optional[str] = None, client: Optional[str] = None):
+        super().__init__(message)
+        self.retry_after_ms = float(retry_after_ms)
+        self.scope = scope
+        self.core = core
+        self.client = client
+
+
+@dataclasses.dataclass
+class _Bucket:
+    """One tenant's token bucket (tokens are words)."""
+    rate: float               # words per second
+    burst: float              # bucket capacity, words
+    tokens: float             # current fill
+    stamp: float              # clock time of the last refill
+
+    def refill(self, now: float) -> None:
+        if now > self.stamp:
+            self.tokens = min(self.burst, self.tokens
+                              + (now - self.stamp) * self.rate)
+        self.stamp = now
+
+    def try_take(self, n: float, now: float) -> float:
+        """Take ``n`` tokens; returns 0.0 on success, else the seconds
+        until the bucket will cover ``n`` (state unchanged on failure)."""
+        self.refill(now)
+        if n <= self.tokens:
+            self.tokens -= n
+            return 0.0
+        if self.rate <= 0.0 or n > self.burst:
+            return float("inf")       # no amount of waiting covers this
+        return (n - self.tokens) / self.rate
+
+
+class AdmissionController:
+    """Gates front-end submits: per-tenant rate limits + a farm ceiling.
+
+    Parameters
+    ----------
+    rate_words_per_s / burst_words
+        Default per-tenant token-bucket parameters; ``None`` disables
+        tenant rate limiting.  A request larger than ``burst_words`` can
+        never be admitted (rejected with an infinite retry hint) — size
+        the burst to the largest legitimate draw.
+    max_queued_rows
+        Farm-wide ceiling on launch rows queued in the front-end;
+        ``None`` disables the ceiling.  The gauge counts each admitted
+        request's own row estimate (``ceil(n_words / lanes)``) — it is
+        deliberately conservative: a request coverable from a client's
+        buffer still counts, because admission runs before the farm is
+        consulted.
+    ceiling_retry_ms
+        The ``retry_after_ms`` hint attached to farm-ceiling rejections.
+    per_tenant
+        ``{(core, client): (rate_words_per_s, burst_words)}`` overrides
+        for specific tenants (e.g. a paid tier).
+    """
+
+    def __init__(self, *, rate_words_per_s: Optional[float] = None,
+                 burst_words: Optional[float] = None,
+                 max_queued_rows: Optional[int] = None,
+                 ceiling_retry_ms: float = 5.0,
+                 per_tenant: Optional[Dict[Tuple[str, str],
+                                           Tuple[float, float]]] = None,
+                 clock: Optional[Clock] = None):
+        if (rate_words_per_s is None) != (burst_words is None):
+            raise ValueError("rate_words_per_s and burst_words must be "
+                             "set together")
+        self.rate_words_per_s = rate_words_per_s
+        self.burst_words = burst_words
+        self.max_queued_rows = max_queued_rows
+        self.ceiling_retry_ms = float(ceiling_retry_ms)
+        self.clock: Clock = clock or SystemClock()
+        self._overrides = dict(per_tenant or {})
+        self._buckets: Dict[Tuple[str, str], _Bucket] = {}
+        self._lock = threading.Lock()
+        self._queued_rows = 0
+        self.admitted = 0
+        self.rejected_tenant = 0
+        self.rejected_farm = 0
+
+    # -- gauge ---------------------------------------------------------------
+
+    @property
+    def queued_rows(self) -> int:
+        """Launch rows currently admitted into (and not yet released from)
+        the front-end queue."""
+        return self._queued_rows
+
+    def release(self, rows: int) -> None:
+        """Return ``rows`` to the ceiling gauge (request left the queue:
+        committed to a flush, cancelled, or pruned)."""
+        with self._lock:
+            self._queued_rows = max(0, self._queued_rows - int(rows))
+
+    # -- the gate ------------------------------------------------------------
+
+    def _bucket(self, core: str, client: str,
+                now: float) -> Optional[_Bucket]:
+        key = (core, client)
+        b = self._buckets.get(key)
+        if b is None:
+            rb = self._overrides.get(key)
+            if rb is not None:
+                rate, burst = rb
+            elif self.rate_words_per_s is not None:
+                rate, burst = self.rate_words_per_s, self.burst_words
+            else:
+                return None
+            b = _Bucket(rate=float(rate), burst=float(burst),
+                        tokens=float(burst), stamp=now)
+            self._buckets[key] = b
+        return b
+
+    def admit(self, core: str, client: str, n_words: int,
+              rows_est: int) -> None:
+        """Admit one request of ``n_words`` (``rows_est`` launch rows) or
+        raise :class:`Overloaded`.  On success the ceiling gauge grows by
+        ``rows_est``; the caller owes a matching :meth:`release` when the
+        request leaves the queue."""
+        now = self.clock.now()
+        with self._lock:
+            if (self.max_queued_rows is not None
+                    and self._queued_rows + rows_est > self.max_queued_rows):
+                self.rejected_farm += 1
+                raise Overloaded(
+                    f"farm over queued-rows ceiling: "
+                    f"{self._queued_rows} + {rows_est} > "
+                    f"{self.max_queued_rows} rows queued",
+                    retry_after_ms=self.ceiling_retry_ms, scope="farm",
+                    core=core, client=client)
+            b = self._bucket(core, client, now)
+            if b is not None:
+                wait_s = b.try_take(float(n_words), now)
+                if wait_s > 0.0:
+                    self.rejected_tenant += 1
+                    raise Overloaded(
+                        f"tenant {core}/{client} over rate limit "
+                        f"({n_words} words > {b.tokens:.0f} available)",
+                        retry_after_ms=wait_s * 1e3, scope="tenant",
+                        core=core, client=client)
+            self._queued_rows += int(rows_est)
+            self.admitted += 1
+
+    def stats(self) -> Dict[str, float]:
+        """Admission counters: admitted / rejected by scope + the live
+        queued-rows gauge."""
+        return {"admitted": float(self.admitted),
+                "rejected_tenant": float(self.rejected_tenant),
+                "rejected_farm": float(self.rejected_farm),
+                "queued_rows": float(self._queued_rows)}

@@ -16,14 +16,51 @@ Tenants on different threads participate through a thread-safe ingress
 (a deque appended from any thread + ``loop.call_soon_threadsafe`` to wake
 the flusher); sync callers block on ``draw_sync``.
 
+**The production tier** (everything below is optional and off by default
+except offload):
+
+* **Executor offload** (``offload=True``): a flush is split into an
+  on-loop *commit* phase (requests enter the services, demand freezes, an
+  asyncio future can no longer be cancelled and a concurrent future is
+  moved to RUNNING) and an off-loop *launch* phase — ``farm.flush
+  (deliver=False)`` runs on a worker thread via ``run_in_executor``, so
+  ingress, cancellation, and deadline accounting stay live while a slow
+  gang launch is in flight.  Served words park in the service outboxes as
+  each group absorbs; the launch-free delivery pass + FIFO split run back
+  on the loop.  A single-flight ``asyncio.Lock`` guarantees two flushes
+  never interleave ``absorb()`` against one farm — the committed batch is
+  the *only* demand the in-flight launch serves, so requests arriving
+  mid-launch wait for the next cycle and bit-identity to the solo path is
+  preserved (property-tested with mid-launch submits/cancels).
+
+* **Admission control** (``admission=AdmissionController(...)``,
+  ``repro.serve.admission``): per-tenant token buckets and a farm-wide
+  queued-rows ceiling gate every submit *before* it queues; over-limit
+  submits fail fast with a typed ``Overloaded`` carrying a
+  ``retry_after_ms`` hint.  Already-admitted futures always resolve.
+
+* **SLO classes** (``slo=`` per request): ``"latency"`` demand forbids
+  the padded group-max launch shape when demand is skewed (the planner
+  must pick ragged/split, so a latency tenant never waits for co-tenants'
+  overdraw rows); ``"bulk"`` demand always rides the padded,
+  maximally-amortized launch.  SLO never changes delivered words — only
+  the launch shape that serves them.
+
+* **Crash recovery** (``journal=`` a ``FlushJournal`` or path,
+  ``repro.serve.journal``): one appended record per completed flush
+  (per-client row/pending/buffer/outbox positions) + one per
+  registration.  A restarted process rebuilds the same farm and calls
+  ``journal.replay_journal(farm, path)`` to resume every tenant stream
+  bit-exactly at the last flush boundary.
+
 Determinism contract (tests/test_async_frontend.py): delivered words are
 bit-identical per tenant to the sync ``gang=False`` solo path, however
 requests interleave, coalesce, or get cancelled — a direct consequence of
 the farm's chunk-invariant absolute-row indexing plus two front-end rules:
 
-  * a request enters the farm (``svc.request``) only at flush time, so
-    cancelling a queued future rolls its demand back by simply never
-    submitting it;
+  * a request enters the farm (``svc.request``) only at flush-commit
+    time, so cancelling a queued future rolls its demand back by simply
+    never submitting it;
   * a flush's returned words are split FIFO per (core, client): words owed
     to the sync surface (pre-existing service pending + outbox backlog)
     are re-parked via ``PRNGService.park`` — never dropped — and the tail
@@ -34,13 +71,13 @@ Every time read goes through the injectable ``Clock``
 wakes exactly when the test advances fake time past a deadline, so every
 deadline/coalescing behavior is testable with zero real sleeps.
 
-``snapshot()`` quiesces in-flight futures: it drains the ingress and folds
-still-queued front-end demand into the per-client ``pending`` counts of
-the farm snapshot.  Restoring that snapshot anywhere — a plain sync farm
-or another front-end — replays the in-flight draws through the sync
-surface (next ``flush()``), bit-identically to what the live futures
-receive.  The live front-end keeps serving its own futures after the
-snapshot.
+``snapshot()`` quiesces in-flight futures: it waits out any launch in
+flight (single-flight lock), drains the ingress, and folds still-queued
+front-end demand into the per-client ``pending`` counts of the farm
+snapshot.  Restoring that snapshot anywhere — a plain sync farm or
+another front-end — replays the in-flight draws through the sync surface
+(next ``flush()``), bit-identically to what the live futures receive.
+The live front-end keeps serving its own futures after the snapshot.
 """
 from __future__ import annotations
 
@@ -48,15 +85,21 @@ import asyncio
 import collections
 import concurrent.futures
 import dataclasses
+import functools
+import os
 import threading
 from typing import Deque, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.serve.admission import AdmissionController
 from repro.serve.clock import Clock, SystemClock
 from repro.serve.farm import OscillatorFarm
+from repro.serve.journal import FlushJournal
 
 _Future = Union["asyncio.Future", "concurrent.futures.Future"]
+
+_SLO_CLASSES = (None, "latency", "bulk")
 
 
 @dataclasses.dataclass
@@ -66,6 +109,9 @@ class _Request:
     n_words: int
     deadline: float            # absolute, in this front-end's clock
     future: _Future
+    slo: Optional[str] = None
+    rows_est: int = 0          # admission gauge units owed back on dequeue
+    released: bool = False
 
 
 def percentile(xs: List[float], q: float) -> float:
@@ -92,30 +138,62 @@ class AsyncOscillatorFarm:
     "flush at the next flusher pass", i.e. no intentional batching delay).
     A flush serves EVERY queued request, not just the due ones — riders
     amortize the launch the deadline paid for.
+
+    ``offload=True`` (default) runs the launch phase of every flush on a
+    worker thread so the event loop stays live; ``offload=False`` pins
+    the PR 5 on-loop behavior (the benchmark baseline).  ``executor``
+    optionally supplies the worker pool (otherwise a single-thread
+    executor is owned and shut down with the front-end).
+
+    ``stats_window`` / ``error_window`` bound ``deadline_stats()`` and
+    ``flush_errors`` to the most recent N samples/errors (ring buffers) —
+    a long-running front-end holds constant memory.
     """
 
     def __init__(self, farm: OscillatorFarm, *,
                  auto_flush_rows: Optional[int] = None,
                  default_deadline_ms: Optional[float] = None,
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None,
+                 offload: bool = True,
+                 executor: Optional[concurrent.futures.Executor] = None,
+                 admission: Optional[AdmissionController] = None,
+                 journal: Union[FlushJournal, str, os.PathLike, None] = None,
+                 stats_window: int = 4096,
+                 error_window: int = 64):
         self.farm = farm
         self.auto_flush_rows = auto_flush_rows
         self.default_deadline_ms = default_deadline_ms
         self.clock: Clock = clock or farm.clock or SystemClock()
+        self.admission = admission
+        self._own_journal = journal is not None and not isinstance(
+            journal, FlushJournal)
+        self.journal: Optional[FlushJournal] = (
+            FlushJournal(journal, clock=self.clock) if self._own_journal
+            else journal)
+        self._offload = bool(offload)
+        self._executor = executor
+        self._own_executor = False
         self._queue: List[_Request] = []
         self._ingress: Deque[_Request] = collections.deque()
         self._wake: Optional[asyncio.Event] = None
         self._drain_waiters: List[asyncio.Future] = []
         self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._loop_thread: Optional[int] = None
         self._task: Optional[asyncio.Task] = None
         self._thread: Optional[threading.Thread] = None
         self._stop: Optional[asyncio.Event] = None
+        self._flush_lock: Optional[asyncio.Lock] = None
+        self._inflight = False
         self.flushes = 0
         self.served_words = 0
-        self._miss_ms: List[float] = []
+        # Ring buffers: a long-running front-end must not grow linearly in
+        # served requests / failures.  deadline_stats() is windowed to the
+        # stats_window most recent samples.
+        self._miss_ms: Deque[float] = collections.deque(maxlen=stats_window)
         # flush failures survive here (each batch future also carries its
         # exception); the flusher itself never dies except by aclose()
-        self.flush_errors: List[BaseException] = []
+        self.flush_errors: Deque[BaseException] = collections.deque(
+            maxlen=error_window)
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -124,24 +202,43 @@ class AsyncOscillatorFarm:
         if self._task is not None:
             raise RuntimeError("front-end already started")
         self._loop = asyncio.get_running_loop()
+        self._loop_thread = threading.get_ident()
         self._wake = asyncio.Event()
+        self._flush_lock = asyncio.Lock()
+        if self._offload and self._executor is None:
+            self._executor = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="farm-launch")
+            self._own_executor = True
         self._task = self._loop.create_task(self._run())
         return self
 
     async def aclose(self) -> None:
-        """Stop the flusher; still-queued futures are cancelled."""
+        """Stop the flusher; still-queued futures are cancelled.
+
+        An in-flight offloaded launch is allowed to FINISH (executor
+        shutdown waits): its words are already parked in the service
+        outboxes by the ``deliver=False`` pass, so nothing is lost — they
+        surface on the sync surface, same as the partial-failure path.
+        """
         if self._task is not None:
             self._task.cancel()
             await asyncio.gather(self._task, return_exceptions=True)
             self._task = None
+        if self._own_executor and self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
+            self._own_executor = False
         self._ingest()
         for r in self._queue:
+            self._release(r)
             r.future.cancel()
         self._queue.clear()
         for w in self._drain_waiters:
             if not w.done():
                 w.set_result(None)
         self._drain_waiters.clear()
+        if self._own_journal and self.journal is not None:
+            self.journal.close()
 
     async def __aenter__(self) -> "AsyncOscillatorFarm":
         return await self.start()
@@ -183,8 +280,14 @@ class AsyncOscillatorFarm:
     def register(self, core: str, client: str,
                  seed: Optional[int] = None) -> None:
         """Register a tenant stream (do this before serving traffic; it is
-        not synchronized against a running flusher on another thread)."""
+        not synchronized against a running flusher on another thread).
+        With a journal attached, the registration — including the seed
+        actually used — is journaled so crash recovery re-derives the
+        identical stream."""
         self.farm.register(core, client, seed=seed)
+        if self.journal is not None:
+            self.journal.record_register(
+                core, client, self.farm.services[core].clients[client].seed)
 
     def _deadline(self, deadline_ms: Optional[float]) -> float:
         if deadline_ms is None:
@@ -193,7 +296,8 @@ class AsyncOscillatorFarm:
             deadline_ms = 0.0
         return self.clock.now() + float(deadline_ms) / 1e3
 
-    def _validate(self, core: str, client: str, n_words: int) -> None:
+    def _validate(self, core: str, client: str, n_words: int,
+                  slo: Optional[str]) -> None:
         svc = self.farm.services.get(core)
         if svc is None:
             raise KeyError(f"unknown core {core!r}; "
@@ -202,41 +306,83 @@ class AsyncOscillatorFarm:
             raise KeyError(f"client {client!r} not registered on {core!r}")
         if n_words < 0:
             raise ValueError(f"n_words must be >= 0, got {n_words}")
+        if slo not in _SLO_CLASSES:
+            raise ValueError(f"slo must be one of {_SLO_CLASSES}, "
+                             f"got {slo!r}")
+
+    def _admit(self, core: str, client: str, n_words: int) -> int:
+        """Admission gate (may raise ``Overloaded``); returns the request's
+        launch-row estimate owed back to the ceiling gauge on dequeue."""
+        rows_est = -(-int(n_words)
+                     // self.farm.services[core].lanes_per_client)
+        if self.admission is not None:
+            self.admission.admit(core, client, n_words, rows_est)
+        return rows_est
+
+    def _release(self, r: _Request) -> None:
+        """Return a dequeued request's rows to the admission gauge
+        (exactly once per request)."""
+        if not r.released:
+            r.released = True
+            if self.admission is not None:
+                self.admission.release(r.rows_est)
 
     def submit(self, core: str, client: str, n_words: int,
-               deadline_ms: Optional[float] = None) -> asyncio.Future:
+               deadline_ms: Optional[float] = None,
+               slo: Optional[str] = None) -> asyncio.Future:
         """Queue a draw from the loop thread; returns the tenant's future.
 
         The future resolves with exactly ``n_words`` uint32 words once a
         flush (deadline- or threshold-triggered) serves it.  Cancelling it
         while queued rolls the demand back cleanly — the farm never sees
         the request, and no other tenant's stream shifts.
+
+        Loop-thread only (enforced): an asyncio future and the queue are
+        not thread-safe, so a foreign-thread caller must use ``draw_sync``
+        (the thread-safe ingress) instead.
         """
         if self._task is None:
             raise RuntimeError("front-end not started")
-        self._validate(core, client, n_words)
+        if threading.get_ident() != self._loop_thread:
+            raise RuntimeError(
+                "submit() called from a foreign thread would race the "
+                "queue unsynchronized; use draw_sync() (the thread-safe "
+                "ingress) there")
+        self._validate(core, client, n_words, slo)
         fut = self._loop.create_future()
         if n_words == 0:
             fut.set_result(np.empty(0, np.uint32))
             return fut
+        rows_est = self._admit(core, client, n_words)
         self._queue.append(_Request(core, client, int(n_words),
-                                    self._deadline(deadline_ms), fut))
+                                    self._deadline(deadline_ms), fut,
+                                    slo=slo, rows_est=rows_est))
         self._wake.set()
         return fut
 
     async def draw(self, core: str, client: str, n_words: int,
-                   deadline_ms: Optional[float] = None) -> np.ndarray:
+                   deadline_ms: Optional[float] = None,
+                   slo: Optional[str] = None) -> np.ndarray:
         """``await`` one tenant draw (see ``submit``)."""
-        return await self.submit(core, client, n_words, deadline_ms)
+        return await self.submit(core, client, n_words, deadline_ms, slo)
 
     def draw_sync(self, core: str, client: str, n_words: int,
                   deadline_ms: Optional[float] = None,
-                  timeout: Optional[float] = None) -> np.ndarray:
+                  timeout: Optional[float] = None,
+                  slo: Optional[str] = None) -> np.ndarray:
         """Blocking draw from ANY thread: the thread-safe ingress.
 
         Appends the request to a cross-thread deque and wakes the flusher
         with ``call_soon_threadsafe``; blocks on a
         ``concurrent.futures.Future`` until the coalesced flush serves it.
+
+        On ``timeout`` the request is PRUNED: a still-queued future is
+        cancelled (its demand rolls back — the farm never sees it, and no
+        stats are recorded for it); a request already committed to an
+        in-flight flush cannot be un-launched, so its words are routed
+        back to the service outbox when they arrive — the stream stays
+        gap-free either way, and no launch rows are ever spent on a
+        future nobody reads twice.
         """
         if self._task is None or self._loop is None:
             # _task (not just _loop) is the liveness flag: after aclose()
@@ -251,20 +397,39 @@ class AsyncOscillatorFarm:
             raise RuntimeError(
                 "draw_sync called from the event-loop thread would "
                 "deadlock; use `await draw(...)` / submit() there")
-        self._validate(core, client, n_words)
+        self._validate(core, client, n_words, slo)
         cfut: concurrent.futures.Future = concurrent.futures.Future()
         if n_words == 0:
             cfut.set_result(np.empty(0, np.uint32))
             return cfut.result()
+        rows_est = self._admit(core, client, n_words)
         self._ingress.append(_Request(core, client, int(n_words),
-                                      self._deadline(deadline_ms), cfut))
+                                      self._deadline(deadline_ms), cfut,
+                                      slo=slo, rows_est=rows_est))
         self._loop.call_soon_threadsafe(self._wake.set)
-        return cfut.result(timeout)
+        try:
+            return cfut.result(timeout)
+        except concurrent.futures.TimeoutError:
+            if not cfut.cancel():
+                # Too late to prune: the flush already committed this
+                # request (future RUNNING) or resolved it.  Re-park the
+                # words on the sync surface so the stream stays gap-free
+                # instead of stranding them in a future nobody reads.
+                def _repark(f: concurrent.futures.Future) -> None:
+                    if not f.cancelled() and f.exception() is None:
+                        self.farm.services[core].park(client, f.result())
+                cfut.add_done_callback(
+                    lambda f: self._loop.call_soon_threadsafe(_repark, f))
+            # wake the flusher so a cancelled request is pruned promptly
+            # (it may hold the earliest deadline)
+            self._loop.call_soon_threadsafe(self._wake.set)
+            raise
 
     async def drain(self) -> None:
         """Wait until the flusher has no currently-actionable work left
-        (every due flush performed; remaining requests are all waiting on
-        future deadlines / more coalescing)."""
+        (every due flush performed — including any launch in flight;
+        remaining requests are all waiting on future deadlines / more
+        coalescing)."""
         if self._task is None:
             raise RuntimeError("front-end not started")
         fut = self._loop.create_future()
@@ -277,12 +442,15 @@ class AsyncOscillatorFarm:
 
         A flush failure is recorded in ``flush_errors`` (same as the
         background path) and re-raised to this caller; the batch's
-        futures carry it either way.
+        futures carry it either way.  Serialized against the background
+        flusher by the single-flight lock.
         """
+        if self._task is None:
+            raise RuntimeError("front-end not started")
         self._ingest()
         if self._queue:
             try:
-                self._do_flush()
+                await self._flush_cycle()
             except Exception as e:
                 self.flush_errors.append(e)
                 raise
@@ -295,6 +463,18 @@ class AsyncOscillatorFarm:
         """Queued front-end draws not yet served (ingress included)."""
         return (sum(1 for r in self._queue if not r.future.cancelled())
                 + len(self._ingress))
+
+    @property
+    def in_flight(self) -> bool:
+        """True while a committed flush's launch phase is running (the
+        window during which ingress must stay live under offload)."""
+        return self._inflight
+
+    @property
+    def loop(self) -> Optional[asyncio.AbstractEventLoop]:
+        """The event loop serving this front-end (``None`` before start) —
+        for foreign threads that need ``run_coroutine_threadsafe``."""
+        return self._loop
 
     @property
     def launches(self) -> int:
@@ -315,24 +495,34 @@ class AsyncOscillatorFarm:
     def miss_samples_ms(self) -> List[float]:
         """Recorded deadline-miss samples (ms past deadline, 0 = on time),
         oldest first — the raw series behind ``deadline_stats()``; public
-        so benchmarks can window it (e.g. timed region only)."""
+        so benchmarks can window it (e.g. timed region only).  Bounded to
+        the ``stats_window`` most recent samples."""
         return list(self._miss_ms)
 
     def deadline_stats(self) -> Dict[str, float]:
-        """p50/p99/max deadline-miss latency (ms) over served requests;
-        a request served before its deadline counts as 0 miss."""
+        """p50/p99/max deadline-miss latency (ms) over the most recent
+        ``stats_window`` served requests (ring buffer — a long-running
+        front-end reports a sliding window, not all-time); a request
+        served before its deadline counts as 0 miss."""
         return {"served_requests": float(len(self._miss_ms)),
-                "p50_miss_ms": percentile(self._miss_ms, 0.50),
-                "p99_miss_ms": percentile(self._miss_ms, 0.99),
+                "p50_miss_ms": percentile(list(self._miss_ms), 0.50),
+                "p99_miss_ms": percentile(list(self._miss_ms), 0.99),
                 "max_miss_ms": max(self._miss_ms, default=0.0)}
 
     # -- flusher -------------------------------------------------------------
 
     def _ingest(self) -> None:
-        """Move thread-ingress requests into the queue; prune cancelled."""
+        """Move thread-ingress requests into the queue; prune cancelled
+        (returning their rows to the admission gauge)."""
         while self._ingress:
             self._queue.append(self._ingress.popleft())
-        self._queue = [r for r in self._queue if not r.future.cancelled()]
+        keep = []
+        for r in self._queue:
+            if r.future.cancelled():
+                self._release(r)
+            else:
+                keep.append(r)
+        self._queue = keep
 
     def _earliest_deadline(self) -> Optional[float]:
         return min((r.deadline for r in self._queue), default=None)
@@ -345,16 +535,23 @@ class AsyncOscillatorFarm:
         return (self.auto_flush_rows is not None
                 and self.pending_rows() >= self.auto_flush_rows)
 
-    def _do_flush(self) -> None:
-        """ONE coalesced farm flush serving every queued request.
+    def _commit(self) -> Optional[Tuple[List[_Request],
+                                        Dict[Tuple[str, str], int],
+                                        Dict[Tuple[str, str],
+                                             List[_Request]],
+                                        Dict[str, str]]]:
+        """On-loop commit phase: freeze the queued demand into the farm.
 
         Runs synchronously on the loop thread, so nothing interleaves with
-        it: an asyncio future cannot be cancelled mid-flush, and a
-        concurrent future is moved to RUNNING first (late ``cancel()``
-        calls fail instead of racing the launch).
+        it: an asyncio future can no longer be cancelled once committed,
+        and a concurrent future is moved to RUNNING first (late
+        ``cancel()`` calls fail instead of racing the launch).  After
+        commit, the batch is the ONLY demand the launch phase serves —
+        requests arriving mid-launch stay queued for the next cycle.
         """
         batch: List[_Request] = []
         for r in self._queue:
+            self._release(r)
             f = r.future
             if isinstance(f, concurrent.futures.Future):
                 if not f.set_running_or_notify_cancel():
@@ -364,7 +561,7 @@ class AsyncOscillatorFarm:
             batch.append(r)
         self._queue = []
         if not batch:
-            return
+            return None
         # Words the sync surface is owed come FIRST in each client's flush
         # output (outbox backlog, then earlier-requested service pending);
         # record the counts so the split below can re-park them.
@@ -375,49 +572,108 @@ class AsyncOscillatorFarm:
                 if n:
                     owed[(core, name)] = n
         fifo: Dict[Tuple[str, str], List[_Request]] = {}
-        try:
-            for r in batch:
-                self.farm.services[r.core].request(r.client, r.n_words)
-                fifo.setdefault((r.core, r.client), []).append(r)
-            # Launch with deliver=False so every served word is parked in
-            # its service outbox the moment its group absorbs: if a later
-            # group's launch fails mid-flush, already-absorbed words are
-            # safe on the sync surface instead of vanishing with the
-            # in-flight return value.  The second pass is launch-free
-            # delivery (identical content/order to a deliver=True flush).
-            self.farm.flush(deliver=False)
-            out = self.farm.flush()
-            now = self.clock.now()
-            self.flushes += 1
-            for core, per_client in out.items():
-                for client, words in per_client.items():
-                    head = owed.get((core, client), 0)
-                    if head:
-                        self.farm.services[core].park(client, words[:head])
-                    pos = head
-                    for r in fifo.pop((core, client), ()):
-                        r.future.set_result(words[pos:pos + r.n_words])
-                        pos += r.n_words
-                        self.served_words += r.n_words
-                        self._miss_ms.append(
-                            max(0.0, now - r.deadline) * 1e3)
-                    if pos != len(words):
-                        raise AssertionError(
-                            f"flush word accounting broken for "
-                            f"{core}/{client}: {len(words)} words, "
-                            f"consumed {pos}")
-            if fifo:
-                raise AssertionError(
-                    f"flush served no words for queued requests: "
-                    f"{sorted(fifo)}")
-        except Exception as e:
-            # Fail loudly, never hang: every batched future still pending
-            # carries the error — including when the accounting backstops
-            # above fire after some futures already resolved.
-            for r in batch:
-                if not r.future.done():
-                    r.future.set_exception(e)
-            raise
+        slos: Dict[str, set] = {}
+        for r in batch:
+            self.farm.services[r.core].request(r.client, r.n_words)
+            fifo.setdefault((r.core, r.client), []).append(r)
+            slos.setdefault(r.core, set()).add(r.slo)
+        slo_by_core = {}
+        for core, classes in slos.items():
+            if "latency" in classes:
+                slo_by_core[core] = "latency"
+            elif classes == {"bulk"}:
+                slo_by_core[core] = "bulk"
+        return batch, owed, fifo, slo_by_core
+
+    def _resolve(self, batch: List[_Request],
+                 owed: Dict[Tuple[str, str], int],
+                 fifo: Dict[Tuple[str, str], List[_Request]]) -> None:
+        """On-loop resolution phase: launch-free delivery + FIFO split.
+
+        Every group already absorbed its words into the service outboxes
+        during the launch phase (``deliver=False``), so this second
+        ``farm.flush()`` performs no kernel launch — it only drains
+        outboxes (cheap, safe on the loop thread) and its content/order
+        is identical to a ``deliver=True`` flush.
+        """
+        out = self.farm.flush()
+        now = self.clock.now()
+        self.flushes += 1
+        for core, per_client in out.items():
+            for client, words in per_client.items():
+                head = owed.get((core, client), 0)
+                if head:
+                    self.farm.services[core].park(client, words[:head])
+                pos = head
+                for r in fifo.pop((core, client), ()):
+                    r.future.set_result(words[pos:pos + r.n_words])
+                    pos += r.n_words
+                    self.served_words += r.n_words
+                    self._miss_ms.append(
+                        max(0.0, now - r.deadline) * 1e3)
+                if pos != len(words):
+                    raise AssertionError(
+                        f"flush word accounting broken for "
+                        f"{core}/{client}: {len(words)} words, "
+                        f"consumed {pos}")
+        if fifo:
+            raise AssertionError(
+                f"flush served no words for queued requests: "
+                f"{sorted(fifo)}")
+
+    async def _flush_cycle(self) -> None:
+        """ONE coalesced flush: commit (on-loop) -> launch (executor when
+        ``offload``) -> deliver + resolve (on-loop), under the
+        single-flight lock so two flushes never interleave ``absorb()``
+        against one farm."""
+        assert self._flush_lock is not None
+        async with self._flush_lock:
+            committed = self._commit()
+            if committed is None:
+                return
+            batch, owed, fifo, slo_by_core = committed
+            self._inflight = True
+            try:
+                launch = functools.partial(self.farm.flush, deliver=False,
+                                           slo_by_core=slo_by_core)
+                if self._offload:
+                    # The loop stays live here: submits, cancellations,
+                    # draw_sync ingress, and deadline tracking all proceed
+                    # while the launch runs on the worker thread.
+                    await self._loop.run_in_executor(self._executor, launch)
+                else:
+                    launch()
+                self._resolve(batch, owed, fifo)
+                if self.journal is not None:
+                    self.journal.record_flush(self.farm)
+            except asyncio.CancelledError:
+                # aclose() mid-launch: the executor finishes the launch
+                # (aclose waits), and its words are parked in the service
+                # outboxes — lossless.  These futures just never resolve
+                # here; fail them so nobody blocks forever.
+                for r in batch:
+                    f = r.future
+                    if f.done():
+                        continue
+                    if isinstance(f, concurrent.futures.Future):
+                        f.set_exception(
+                            RuntimeError("front-end closed mid-flush; "
+                                         "words parked on the sync surface"))
+                    else:
+                        f.cancel()
+                raise
+            except Exception as e:
+                # Fail loudly, never hang: every batched future still
+                # pending carries the error — including when the
+                # accounting backstops above fire after some futures
+                # already resolved.
+                for r in batch:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+                raise
+            finally:
+                self._inflight = False
+                self._wake.set()     # re-check work queued mid-launch
 
     async def _run(self) -> None:
         while True:
@@ -425,14 +681,15 @@ class AsyncOscillatorFarm:
             self._ingest()
             if self._due():
                 try:
-                    self._do_flush()
+                    await self._flush_cycle()
                 except Exception as e:     # noqa: BLE001 - kept, not lost
                     self.flush_errors.append(e)
                 continue
-            for w in self._drain_waiters:
-                if not w.done():
-                    w.set_result(None)
-            self._drain_waiters.clear()
+            if not self._inflight:         # a flush_now() launch may be live
+                for w in self._drain_waiters:
+                    if not w.done():
+                        w.set_result(None)
+                self._drain_waiters.clear()
             nxt = self._earliest_deadline()
             timeout = None if nxt is None else max(0.0, nxt - self.clock.now())
             await self.clock.wait(self._wake, timeout)
@@ -443,13 +700,19 @@ class AsyncOscillatorFarm:
         """Quiesce + snapshot: farm state with still-queued front-end
         demand folded into the per-client ``pending`` counts.
 
-        Runs on the loop thread between flushes (a flush is atomic there),
-        so no launch is in flight; the ingress is drained first so
-        requests already submitted by sync threads are captured too.
-        Restoring the result on ANY farm/front-end replays the in-flight
-        draws through the next sync ``flush()``, while this front-end
-        still serves its own futures afterwards.
+        Waits out any launch in flight (single-flight lock), so the farm
+        state is never captured mid-mutation; the ingress is drained
+        first so requests already submitted by sync threads are captured
+        too.  Restoring the result on ANY farm/front-end replays the
+        in-flight draws through the next sync ``flush()``, while this
+        front-end still serves its own futures afterwards.
         """
+        if self._flush_lock is None:          # not started: nothing in flight
+            return self._snapshot_now()
+        async with self._flush_lock:
+            return self._snapshot_now()
+
+    def _snapshot_now(self) -> Dict[str, object]:
         self._ingest()
         snap = self.farm.snapshot()
         for r in self._queue:
@@ -461,8 +724,12 @@ class AsyncOscillatorFarm:
 
     def restore(self, snap: Dict[str, object]) -> None:
         """Restore a snapshot; requires a quiesced front-end (no queued
-        futures — they would double-count against the snapshot's merged
-        pending demand)."""
+        futures or in-flight launch — they would double-count against the
+        snapshot's merged pending demand)."""
+        if self._inflight:
+            raise RuntimeError(
+                "a flush launch is in flight; await drain() before "
+                "restore()")
         self._ingest()
         if self._queue:
             raise RuntimeError(

@@ -24,9 +24,19 @@ from typing import List, Optional, Protocol, runtime_checkable
 
 @runtime_checkable
 class Clock(Protocol):
-    """Monotonic seconds + an awaitable event-or-timeout wait."""
+    """Monotonic seconds + an awaitable event-or-timeout wait.
+
+    ``time()`` is the epoch-seconds sibling of ``now()``: monotonic time
+    is meaningless across process restarts, so anything that persists
+    timestamps (the flush journal, ``repro.serve.journal``) stamps with
+    ``time()`` instead.  ``FakeClock`` advances both together, so
+    journaled timestamps stay deterministic in tests.
+    """
 
     def now(self) -> float:
+        ...
+
+    def time(self) -> float:
         ...
 
     async def wait(self, event: "asyncio.Event",
@@ -39,6 +49,9 @@ class SystemClock:
 
     def now(self) -> float:
         return time.perf_counter()
+
+    def time(self) -> float:
+        return time.time()
 
     async def wait(self, event: asyncio.Event,
                    timeout: Optional[float]) -> None:
@@ -69,6 +82,9 @@ class FakeClock:
         self._ticks: List[asyncio.Event] = []
 
     def now(self) -> float:
+        return self._now
+
+    def time(self) -> float:
         return self._now
 
     def advance(self, dt: float) -> None:

@@ -96,6 +96,8 @@ class GangScheduler:
         self.planner = bool(planner)
         self.cost_model = cost_model or GangCostModel()
         self.decisions = {"padded": 0, "ragged": 0, "split": 0}
+        # flushes where an SLO class actually constrained the choice set
+        self.slo_forced = {"latency": 0, "bulk": 0}
         self.profile: Optional[Dict[str, float]] = None
 
     @property
@@ -158,12 +160,13 @@ class GangScheduler:
     # -- planning ------------------------------------------------------------
 
     def _decide(self, key: Tuple, members: Sequence[Tuple],
-                demands: Tuple[int, ...]) -> Dict:
+                demands: Tuple[int, ...],
+                slo: Optional[str] = None) -> Dict:
         """Pick the cost-minimizing launch shape for one flush.
 
         ``demands`` are the ``_round_rows``-bucketed per-member word rows;
-        the decision is cached on (membership, demands) so steady-state
-        traffic replans exactly never.  Candidate plans:
+        the decision is cached on (membership, demands, slo) so
+        steady-state traffic replans exactly never.  Candidate plans:
 
         * ``padded``  — one launch, every member at the group max
           (sublane-stacked when pools are equal + vpu, else lane-concat);
@@ -173,11 +176,22 @@ class GangScheduler:
         * ``split``   — demand-homogeneous subgroups, each padded (solo
           per-core launches for singletons), paying one launch overhead
           per subgroup.
+
+        ``slo`` constrains the choice set (the deadline-tier contract of
+        the async front-end): ``"latency"`` forbids the padded group-max
+        launch whenever demand is actually skewed — a latency-class
+        tenant must not wait for co-tenants' overdraw rows, so the
+        planner must pick a demand-shaped ragged or split plan even when
+        the cost model scores padded cheaper; ``"bulk"`` pins the padded
+        launch — bulk tenants always ride the maximally-amortized shape.
+        ``None`` leaves the planner free (cost-minimizing).
         """
         from repro.kernels.chaotic_ann import gang_effective_rows
+        if not self.planner:
+            slo = None          # policy pinned: PR 3 padded group-max
         mem_sig = (key, tuple((name, int(svc.pool_x.shape[0]))
                               for name, svc, _, _ in members))
-        dsig = (mem_sig, demands)
+        dsig = (mem_sig, demands, slo)
         dec = self._decisions.get(dsig)
         if dec is not None:
             return dec
@@ -238,8 +252,18 @@ class GangScheduler:
                     parts.append({"members": tuple(idxs), "kind": "gang",
                                   "layout": lay, "ragged": False})
             options.append(("split", cost, parts))
-        kind, cost, parts = min(options, key=lambda o: o[1])
-        dec = {"kind": kind, "parts": parts,
+        free_kind = min(options, key=lambda o: o[1])[0]
+        eligible = options
+        if slo == "bulk":
+            eligible = [o for o in options if o[0] == "padded"]
+        elif slo == "latency" and len(options) > 1:
+            # skewed demand + a latency-class tenant: the padded group-max
+            # launch would make that tenant wait for co-tenants' overdraw
+            eligible = [o for o in options if o[0] != "padded"]
+        kind, cost, parts = min(eligible, key=lambda o: o[1])
+        if slo is not None and kind != free_kind:
+            self.slo_forced[slo] += 1
+        dec = {"kind": kind, "parts": parts, "slo": slo,
                "modeled_cycles": {k: v for k, v, _ in options}}
         self._decisions[dsig] = dec
         return dec
@@ -356,9 +380,11 @@ class GangScheduler:
 
     def launch(self, key: Tuple,
                members: List[Tuple[str, PRNGService, int, np.ndarray]],
-               *, deliver: bool = True) -> Dict[str, Dict[str, np.ndarray]]:
+               *, deliver: bool = True,
+               slo: Optional[str] = None) -> Dict[str, Dict[str, np.ndarray]]:
         """Serve one flush of ``members`` (each with its prepare_rows plan)
-        with the planner-chosen launch shape.
+        with the planner-chosen launch shape (``slo`` constrains the
+        choice set — see ``_decide``).
 
         However the plan shapes launches, every member advances by a row
         count >= its own demand with overdraw buffered, so delivered words
@@ -369,7 +395,7 @@ class GangScheduler:
         svc0 = members[0][1]
         demands = tuple(_round_rows(n, svc0.config.t_block)
                         for _, _, n, _ in members)
-        dec = self._decide(key, members, demands)
+        dec = self._decide(key, members, demands, slo)
         self.decisions[dec["kind"]] += 1
         self._tick("plan", t0)
         out: Dict[str, Dict[str, np.ndarray]] = {}
@@ -534,7 +560,9 @@ class OscillatorFarm:
         return sum(svc.rows_needed() for svc in self.services.values())
 
     def flush(self, max_wait_rows: Optional[int] = None,
-              deliver: bool = True) -> Dict[str, Dict[str, np.ndarray]]:
+              deliver: bool = True,
+              slo_by_core: Optional[Dict[str, str]] = None,
+              ) -> Dict[str, Dict[str, np.ndarray]]:
         """Serve every pending request: one batched launch per core GROUP.
 
         Cores are grouped by gang-compatibility signature (``_compat_key``);
@@ -550,6 +578,15 @@ class OscillatorFarm:
 
         ``deliver=False`` parks all served words in the per-service
         outboxes instead of returning them (the auto-flush path).
+
+        ``slo_by_core`` maps a core name to the SLO class of this flush's
+        demand on it (``"latency"`` / ``"bulk"``, the async front-end's
+        per-request tiers aggregated per core).  A group launches as
+        ``"latency"`` if ANY member core carries latency-class demand
+        (forbids the padded group-max shape on skewed demand), as
+        ``"bulk"`` only if EVERY member is bulk (pins the padded shape);
+        mixed/absent leaves the planner free.  SLO classes never change
+        delivered words — only which launch shape serves them.
 
         Returns {core: {client: words}} for every client that received
         words (pending requests and previously parked outbox words alike).
@@ -574,11 +611,15 @@ class OscillatorFarm:
                 deferred_now.update(cores)
         out: Dict[str, Dict[str, np.ndarray]] = {}
         launching_cores = {c for _, cores in launching for c in cores}
+        slo_by_core = slo_by_core or {}
         for key, cores in launching:
+            classes = {slo_by_core.get(c) for c in cores}
+            group_slo = ("latency" if "latency" in classes
+                         else "bulk" if classes == {"bulk"} else None)
             if self.gang and len(cores) > 1:
                 served = self._sched.launch(
                     key, [(c, self.services[c], plans[c][0], plans[c][1])
-                          for c in cores], deliver=deliver)
+                          for c in cores], deliver=deliver, slo=group_slo)
                 out.update(served)
             else:
                 prof = self._sched.profile
@@ -641,6 +682,12 @@ class OscillatorFarm:
         """Executed planner decisions so far, by kind
         (padded / ragged / split)."""
         return dict(self._sched.decisions)
+
+    @property
+    def slo_forced(self) -> Dict[str, int]:
+        """Planner decisions where an SLO class overrode the free
+        cost-minimizing choice (by class)."""
+        return dict(self._sched.slo_forced)
 
     @property
     def profile_stats(self) -> Optional[Dict[str, float]]:

@@ -1,0 +1,195 @@
+"""Crash recovery for the serving tier: an append-only flush journal.
+
+``OscillatorFarm.snapshot()`` is the *explicit* resumability surface —
+somebody has to call it, serialize it, and put it somewhere.  A crash
+asks for the implicit version: the front-end appends one small record per
+**completed flush** (plus one per client registration) to an append-only
+JSONL file, and a restarted farm replays the journal to bit-exact stream
+positions without any of the crashed process's memory.
+
+What makes tiny records sufficient is the engine's determinism contract:
+a client's word stream depends only on (weights, seed, lanes_per_client,
+kernel config) plus its absolute word-row counter.  So the journal never
+stores words or pool state — only each client's *position*:
+
+    {"type": "flush", "seq": 7, "cores": {core: {client:
+        [row, pending, buf_words, outbox_words]}}}
+
+Recovery (:func:`replay_journal`) re-registers every journaled client
+(same seed => same burn-in => same lane state), then recomputes each
+client's lanes forward to ``row`` with the same fused kernel — the words
+regenerated along the way rebuild the undelivered tail (service buffer +
+outbox) bit-exactly, because chunk-invariant absolute-row indexing makes
+one big replay launch identical to however many launches the crashed
+process actually issued (``PRNGService.replay_client``).
+
+Durability contract (tests/test_journal.py proves the kill window):
+
+* a record is appended (and by default fsync'd) only *after* its flush
+  fully absorbed — a crash mid-flush recovers to the previous flush
+  boundary, and the words of the interrupted flush are regenerated, not
+  lost and not double-served;
+* requests queued in the front-end but not yet flushed are NOT journaled
+  — they failed with the crash and the tenant retries (the same contract
+  a deadline timeout gives);
+* a torn final line (crash mid-append) is detected and ignored on
+  replay.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+from typing import Dict, List, Optional, Tuple
+
+from repro.serve.clock import Clock, SystemClock
+
+_VERSION = 1
+
+
+def farm_positions(farm) -> Dict[str, Dict[str, List[int]]]:
+    """Per-client stream positions of a farm right now:
+    ``{core: {client: [row, pending, buf_words, outbox_words]}}``."""
+    out: Dict[str, Dict[str, List[int]]] = {}
+    for core, svc in farm.services.items():
+        per = {}
+        for c in svc.clients.values():
+            per[c.name] = [int(c.row), int(c.pending), int(len(c.buf)),
+                           int(svc.outbox_words(c.name))]
+        out[core] = per
+    return out
+
+
+class FlushJournal:
+    """Append-only JSONL journal of client registrations + flush positions.
+
+    One journal belongs to one serving process; attach it to an
+    ``AsyncOscillatorFarm(journal=...)`` and it records automatically.
+    ``fsync=True`` (default) makes each record durable before the writer
+    returns — the crash-recovery guarantee costs one fsync per flush, not
+    per request.  An existing file is appended to (seq continues), so a
+    recovered process can keep journaling into the same file.
+    """
+
+    def __init__(self, path: str | os.PathLike, *, fsync: bool = True,
+                 clock: Optional[Clock] = None):
+        self.path = pathlib.Path(path)
+        self.fsync = bool(fsync)
+        self.clock: Clock = clock or SystemClock()
+        self.seq = 0
+        if self.path.exists():
+            _, last_seq, _, _ = read_journal(self.path)
+            self.seq = last_seq
+        self._f = open(self.path, "a", encoding="utf-8")
+        if self.seq == 0 and self._f.tell() == 0:
+            self._append({"type": "open", "v": _VERSION})
+
+    def _append(self, rec: Dict) -> None:
+        rec["ts"] = self.clock.time()
+        self._f.write(json.dumps(rec, separators=(",", ":")) + "\n")
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+
+    def record_register(self, core: str, client: str, seed: int) -> None:
+        """Journal one client registration (the seed actually used, so
+        replay re-derives the identical burn-in state)."""
+        self._append({"type": "register", "core": core, "client": client,
+                      "seed": int(seed)})
+
+    def record_flush(self, farm) -> None:
+        """Journal the post-flush position of every client (call only
+        after the flush fully absorbed + delivered)."""
+        self.seq += 1
+        self._append({"type": "flush", "seq": self.seq,
+                      "cores": farm_positions(farm)})
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+    def __enter__(self) -> "FlushJournal":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_journal(path: str | os.PathLike) -> Tuple[
+        List[Tuple[str, str, int]], int,
+        Optional[Dict[str, Dict[str, List[int]]]], bool]:
+    """Parse a journal: (registrations in order, last flush seq, last
+    flush positions or None, torn_tail).
+
+    A truncated final line (the crash landed mid-append) is ignored and
+    reported via ``torn_tail`` — every complete record before it is
+    still recovered.
+    """
+    registrations: List[Tuple[str, str, int]] = []
+    last_seq, last_pos, torn = 0, None, False
+    data = pathlib.Path(path).read_bytes().decode("utf-8", errors="replace")
+    lines = data.split("\n")
+    # a well-formed journal ends with "\n": the final split element is ""
+    if lines and lines[-1] == "":
+        lines.pop()
+    elif lines:
+        torn = True
+        lines.pop()
+    for line in lines:
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            # torn line in the middle => everything after it is suspect;
+            # stop at the last known-good prefix
+            torn = True
+            break
+        t = rec.get("type")
+        if t == "register":
+            registrations.append((rec["core"], rec["client"],
+                                  int(rec["seed"])))
+        elif t == "flush":
+            last_seq = int(rec["seq"])
+            last_pos = rec["cores"]
+    return registrations, last_seq, last_pos, torn
+
+
+def replay_journal(farm, path: str | os.PathLike,
+                   chunk_rows: int = 4096) -> Dict[str, object]:
+    """Rebuild a crashed serving process's stream positions onto ``farm``.
+
+    ``farm`` must have the same cores attached (same weights/configs —
+    e.g. rebuilt via ``OscillatorFarm.from_generated`` or the weight
+    registry) and **no clients registered yet**.  Every journaled client
+    is re-registered with its journaled seed, then advanced to its last
+    flushed position with ``PRNGService.replay_client`` — after which
+    every stream continues bit-exactly where the crashed process left
+    off, including words that were generated but still undelivered
+    (service buffer + outbox).
+
+    Returns a summary: flushes recovered, clients replayed, word rows
+    recomputed, and whether a torn tail record was discarded.
+    """
+    registrations, last_seq, positions, torn = read_journal(path)
+    unknown = {core for core, _, _ in registrations} - set(farm.services)
+    if unknown:
+        raise ValueError(
+            f"journal references cores not attached to this farm: "
+            f"{sorted(unknown)} (attach the same core set before replay)")
+    for core, client, seed in registrations:
+        farm.register(core, client, seed=seed)
+    rows_replayed = 0
+    if positions:
+        for core, per_client in positions.items():
+            svc = farm.services[core]
+            for client, (row, pending, buf, outbox) in per_client.items():
+                if client not in svc.clients:
+                    raise ValueError(
+                        f"journal flush record names unregistered client "
+                        f"{core}/{client} (journal corrupt?)")
+                svc.replay_client(client, row=int(row), pending=int(pending),
+                                  buf_words=int(buf),
+                                  outbox_words=int(outbox),
+                                  chunk_rows=chunk_rows)
+                rows_replayed += int(row)
+    return {"flushes": last_seq, "clients": len(registrations),
+            "rows_replayed": rows_replayed, "torn_tail": torn}

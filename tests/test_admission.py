@@ -1,0 +1,184 @@
+"""Admission control: token-bucket math, ceiling gauge, front-end wiring.
+
+Pure-policy tests drive ``AdmissionController`` directly under a
+``FakeClock`` (token refill is arithmetic on fake time — zero sleeps);
+the integration tests attach a controller to ``AsyncOscillatorFarm`` and
+prove the serving-tier contract: over-limit submits fail fast with a
+typed ``Overloaded`` (carrying ``retry_after_ms``) while already-admitted
+futures all resolve.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.serve.admission import AdmissionController, Overloaded
+from repro.serve.async_frontend import AsyncOscillatorFarm
+from repro.serve.clock import FakeClock
+
+from test_async_frontend import TEST_TIMEOUT, _farm, _run
+
+
+# ---------------------------------------------------------------------------
+# Token-bucket policy (no farm involved)
+# ---------------------------------------------------------------------------
+
+def test_bucket_burst_then_rate():
+    fc = FakeClock()
+    ac = AdmissionController(rate_words_per_s=100.0, burst_words=500.0,
+                             clock=fc)
+    # burst drains first...
+    ac.admit("c", "t", 500, rows_est=1)
+    # ...then an empty bucket rejects with an exact refill-time hint
+    with pytest.raises(Overloaded) as ei:
+        ac.admit("c", "t", 200, rows_est=1)
+    assert ei.value.scope == "tenant"
+    assert ei.value.core == "c" and ei.value.client == "t"
+    assert ei.value.retry_after_ms == pytest.approx(2000.0)  # 200 w / 100 w/s
+    # a rejection must not consume tokens: refill exactly the hint and
+    # the same request is admitted
+    fc.advance(2.0)
+    ac.admit("c", "t", 200, rows_est=1)
+    assert ac.stats()["admitted"] == 2.0
+    assert ac.stats()["rejected_tenant"] == 1.0
+
+
+def test_bucket_refill_caps_at_burst():
+    fc = FakeClock()
+    ac = AdmissionController(rate_words_per_s=10.0, burst_words=100.0,
+                             clock=fc)
+    ac.admit("c", "t", 100, rows_est=1)
+    fc.advance(1e6)                        # eons: still only `burst` tokens
+    ac.admit("c", "t", 100, rows_est=1)
+    with pytest.raises(Overloaded):
+        ac.admit("c", "t", 1, rows_est=1)
+
+
+def test_oversized_request_never_admissible():
+    ac = AdmissionController(rate_words_per_s=10.0, burst_words=50.0,
+                             clock=FakeClock())
+    with pytest.raises(Overloaded) as ei:
+        ac.admit("c", "t", 51, rows_est=1)
+    assert ei.value.retry_after_ms == float("inf")
+
+
+def test_per_tenant_override_and_isolation():
+    fc = FakeClock()
+    ac = AdmissionController(rate_words_per_s=10.0, burst_words=10.0,
+                             per_tenant={("c", "vip"): (1000.0, 1000.0)},
+                             clock=fc)
+    ac.admit("c", "vip", 900, rows_est=1)      # override bucket
+    ac.admit("c", "t", 10, rows_est=1)         # default bucket
+    with pytest.raises(Overloaded):
+        ac.admit("c", "t", 10, rows_est=1)     # t exhausted...
+    ac.admit("c", "vip", 100, rows_est=1)      # ...vip unaffected
+
+
+def test_ceiling_gauge_admit_release_lifecycle():
+    ac = AdmissionController(max_queued_rows=10, ceiling_retry_ms=7.5,
+                             clock=FakeClock())
+    ac.admit("c", "t", 1, rows_est=6)
+    ac.admit("c", "u", 1, rows_est=4)
+    assert ac.queued_rows == 10
+    with pytest.raises(Overloaded) as ei:
+        ac.admit("c", "v", 1, rows_est=1)
+    assert ei.value.scope == "farm"
+    assert ei.value.retry_after_ms == pytest.approx(7.5)
+    ac.release(4)                              # one request left the queue
+    ac.admit("c", "v", 1, rows_est=1)
+    assert ac.queued_rows == 7
+    assert ac.stats()["rejected_farm"] == 1.0
+
+
+def test_rate_and_burst_must_pair():
+    with pytest.raises(ValueError, match="together"):
+        AdmissionController(rate_words_per_s=10.0)
+
+
+# ---------------------------------------------------------------------------
+# Front-end integration
+# ---------------------------------------------------------------------------
+
+def test_frontend_rejects_fail_fast_admitted_futures_resolve():
+    """Over-ceiling load is refused at submit() with Overloaded while every
+    already-admitted future still resolves with its exact words."""
+    async def go():
+        fc = FakeClock()
+        farm = _farm(clock=fc)
+        ac = AdmissionController(max_queued_rows=3, clock=fc)
+        async with AsyncOscillatorFarm(farm, clock=fc, admission=ac) as af:
+            # lanes_per_client=128 => 128 words = 1 row estimate
+            admitted = [af.submit("core0", "t", 128, deadline_ms=50)
+                        for _ in range(3)]
+            assert ac.queued_rows == 3
+            with pytest.raises(Overloaded) as ei:
+                af.submit("core0", "t", 128, deadline_ms=50)
+            assert ei.value.scope == "farm"
+            assert ei.value.retry_after_ms > 0.0
+            fc.advance(0.05)
+            await af.drain()
+            assert all(f.result().size == 128 for f in admitted)
+            # the flush released the gauge: the same submit now admits
+            assert ac.queued_rows == 0
+            ok = await af.draw("core0", "t", 128, deadline_ms=0)
+            assert ok.size == 128
+    _run(go())
+
+
+def test_frontend_cancel_releases_ceiling_rows():
+    async def go():
+        fc = FakeClock()
+        farm = _farm(clock=fc)
+        ac = AdmissionController(max_queued_rows=2, clock=fc)
+        async with AsyncOscillatorFarm(farm, clock=fc, admission=ac) as af:
+            doomed = af.submit("core0", "t", 256, deadline_ms=10_000)
+            with pytest.raises(Overloaded):
+                af.submit("core0", "t", 128, deadline_ms=10_000)
+            doomed.cancel()
+            await af.drain()                  # flusher pass prunes + releases
+            assert ac.queued_rows == 0
+            ok = await af.draw("core0", "t", 128, deadline_ms=0)
+            assert ok.size == 128
+    _run(go())
+
+
+def test_frontend_tenant_rate_limit_and_stream_integrity():
+    """A rate-limited tenant's rejected submit never reaches the farm: the
+    served stream stays bit-identical to a solo farm that saw only the
+    admitted draws."""
+    async def go():
+        fc = FakeClock()
+        farm = _farm(clock=fc)
+        ac = AdmissionController(rate_words_per_s=1000.0, burst_words=200.0,
+                                 clock=fc)
+        served = []
+        async with AsyncOscillatorFarm(farm, clock=fc, admission=ac) as af:
+            served.append(await af.draw("core0", "t", 200, deadline_ms=0))
+            with pytest.raises(Overloaded) as ei:
+                af.submit("core0", "t", 200, deadline_ms=0)
+            # bucket refills on fake time: the hint is honest
+            fc.advance(ei.value.retry_after_ms / 1e3)
+            served.append(await af.draw("core0", "t", 200, deadline_ms=0))
+        solo = _farm(gang=False)
+        for words in served:
+            np.testing.assert_array_equal(words, solo.draw("core0", "t", 200))
+    _run(go())
+
+
+def test_draw_sync_rejected_by_admission_raises_in_caller_thread():
+    fc = FakeClock()
+    farm = _farm(clock=fc)
+    ac = AdmissionController(rate_words_per_s=10.0, burst_words=64.0,
+                             clock=fc)
+    af = AsyncOscillatorFarm(farm, clock=fc, admission=ac).start_thread()
+    try:
+        out = af.draw_sync("core0", "t", 64, deadline_ms=0,
+                           timeout=TEST_TIMEOUT)
+        assert out.size == 64
+        with pytest.raises(Overloaded):
+            af.draw_sync("core0", "t", 64, deadline_ms=0,
+                         timeout=TEST_TIMEOUT)
+        assert ac.stats()["rejected_tenant"] == 1.0
+        assert ac.queued_rows == 0            # rejected submit queued nothing
+    finally:
+        af.close()

@@ -14,8 +14,10 @@ path, no matter how requests coalesce, interleave across coroutines and
 threads, get cancelled, or straddle a snapshot.
 """
 import asyncio
+import concurrent.futures
 import random
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -564,3 +566,353 @@ def test_system_clock_is_a_clock():
     from repro.serve.clock import Clock
     assert isinstance(SystemClock(), Clock)
     assert isinstance(FakeClock(), Clock)
+
+
+# ---------------------------------------------------------------------------
+# Executor offload: the loop stays live while a launch is in flight
+# ---------------------------------------------------------------------------
+
+class _GatedFlush:
+    """Wrap ``farm.flush`` so each launch pass (``deliver=False``) blocks
+    on a semaphore permit before running — it executes on the offload
+    worker thread, so blocking it is safe and the event loop's liveness
+    mid-launch becomes directly observable.  ``release()`` lets exactly
+    one launch proceed (auto-re-arms for the next)."""
+
+    def __init__(self, farm):
+        self.farm = farm
+        self.orig = farm.flush
+        self.entered = threading.Event()
+        self._sem = threading.Semaphore(0)
+
+    def release(self):
+        self._sem.release()
+
+    def __call__(self, *a, **kw):
+        if not kw.get("deliver", True):
+            self.entered.set()
+            assert self._sem.acquire(timeout=TEST_TIMEOUT), \
+                "gated launch never released"
+        return self.orig(*a, **kw)
+
+
+def test_offload_keeps_loop_live_during_launch():
+    """While a gated launch is in flight on the worker thread, the event
+    loop still serves zero-word draws, accepts submits, and prunes
+    cancellations — and none of that traffic interleaves into the
+    in-flight launch (single-flight)."""
+    async def go():
+        fc = FakeClock()
+        farm = _farm(clock=fc, n_cores=2)
+        async with AsyncOscillatorFarm(farm, clock=fc) as af:
+            g = _GatedFlush(farm)
+            farm.flush = g
+            slow = af.submit("core0", "t", 64, deadline_ms=0)
+            while not af.in_flight:             # commit happened, launch live
+                await asyncio.sleep(0)
+            # the loop is demonstrably live mid-launch:
+            z = await af.draw("core0", "t", 0)          # round-trips NOW
+            assert z.size == 0 and af.in_flight
+            rider = af.submit("core1", "t", 32, deadline_ms=0)
+            doomed = af.submit("core0", "t", 500, deadline_ms=10_000)
+            doomed.cancel()
+            assert not slow.done()              # still gated
+            g.release()                         # permit: the gated launch
+            g.release()                         # permit: rider's own flush
+            await af.drain()
+            assert slow.done() and rider.done() and doomed.cancelled()
+            farm.flush = g.orig
+            later = await af.draw("core0", "t", 90)
+            # rider arrived mid-launch => NOT folded into the in-flight
+            # launch; it rode its own later flush
+            assert farm.launches >= 2
+        solo = _farm(gang=False, n_cores=2)
+        np.testing.assert_array_equal(slow.result(),
+                                      solo.draw("core0", "t", 64))
+        np.testing.assert_array_equal(rider.result(),
+                                      solo.draw("core1", "t", 32))
+        # the cancelled 500 never reached any farm
+        np.testing.assert_array_equal(later, solo.draw("core0", "t", 90))
+    _run(go())
+
+
+def test_offload_off_matches_offload_on_bit_for_bit():
+    """offload=False pins the on-loop launch path; served words must be
+    bit-identical between the two modes (and to solo)."""
+    def serve(offload):
+        out = []
+
+        async def go():
+            fc = FakeClock()
+            farm = _farm(clock=fc, n_cores=2)
+            async with AsyncOscillatorFarm(farm, clock=fc,
+                                           offload=offload) as af:
+                out.append(await af.draw("core0", "t", 200, deadline_ms=0))
+                out.append(await af.draw("core1", "t", 75, deadline_ms=0))
+                out.append(await af.draw("core0", "t", 130, deadline_ms=0))
+        _run(go())
+        return out
+
+    a, b = serve(True), serve(False)
+    solo = _farm(gang=False, n_cores=2)
+    ref = [solo.draw("core0", "t", 200), solo.draw("core1", "t", 75),
+           solo.draw("core0", "t", 130)]
+    for wa, wb, wr in zip(a, b, ref):
+        np.testing.assert_array_equal(wa, wb)
+        np.testing.assert_array_equal(wa, wr)
+
+
+# ---------------------------------------------------------------------------
+# SLO classes shape the launch, never the words
+# ---------------------------------------------------------------------------
+
+def test_slo_latency_forbids_padded_launch():
+    async def go():
+        fc = FakeClock()
+        farm = _farm(clock=fc, n_cores=2)
+        async with AsyncOscillatorFarm(farm, clock=fc) as af:
+            fa = af.submit("core0", "t", 128, deadline_ms=0, slo="latency")
+            fb = af.submit("core1", "t", 128 * 40, deadline_ms=0)
+            await af.drain()
+            dec = farm.plan_decisions
+            assert sum(dec.values()) >= 1
+            # a latency tenant on a skewed group: padded group-max (which
+            # would make core0 wait out core1's 40 rows) is off the table
+            assert dec.get("padded", 0) == 0, dec
+        solo = _farm(gang=False, n_cores=2)
+        np.testing.assert_array_equal(fa.result(),
+                                      solo.draw("core0", "t", 128))
+        np.testing.assert_array_equal(fb.result(),
+                                      solo.draw("core1", "t", 128 * 40))
+    _run(go())
+
+
+def test_slo_bulk_forces_padded_launch():
+    async def go():
+        fc = FakeClock()
+        farm = _farm(clock=fc, n_cores=2)
+        async with AsyncOscillatorFarm(farm, clock=fc) as af:
+            fa = af.submit("core0", "t", 128, deadline_ms=0, slo="bulk")
+            fb = af.submit("core1", "t", 128 * 40, deadline_ms=0, slo="bulk")
+            await af.drain()
+            dec = farm.plan_decisions
+            assert dec.get("padded", 0) == sum(dec.values()) >= 1, dec
+            # with this much skew the free planner would NOT pick padded:
+            # the bulk class forced it, and the farm counts that
+            assert farm.slo_forced["bulk"] >= 1
+        solo = _farm(gang=False, n_cores=2)
+        np.testing.assert_array_equal(fa.result(),
+                                      solo.draw("core0", "t", 128))
+        np.testing.assert_array_equal(fb.result(),
+                                      solo.draw("core1", "t", 128 * 40))
+    _run(go())
+
+
+def test_slo_validated_at_submit():
+    async def go():
+        farm = _farm()
+        async with AsyncOscillatorFarm(farm) as af:
+            with pytest.raises(ValueError, match="slo"):
+                af.submit("core0", "t", 8, slo="gold-tier")
+    _run(go())
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: front-end lifecycle bugs
+# ---------------------------------------------------------------------------
+
+def test_draw_sync_timeout_prunes_queued_request():
+    """S1: a timed-out draw_sync must not leak its request — the queued
+    future is cancelled, the demand never reaches the farm, and the
+    admission gauge is released (FakeClock: the flush deadline is far in
+    fake-future, so without the fix the request would sit forever)."""
+    from repro.serve.admission import AdmissionController
+    fc = FakeClock()
+    farm = _farm(clock=fc)
+    ac = AdmissionController(max_queued_rows=2, clock=fc)
+    af = AsyncOscillatorFarm(farm, clock=fc, admission=ac).start_thread()
+    try:
+        with pytest.raises(concurrent.futures.TimeoutError):
+            af.draw_sync("core0", "t", 256, deadline_ms=10_000, timeout=0.05)
+        # the prune is prompt (the timeout path wakes the flusher): the
+        # gauge frees without any fake-time advance
+        deadline = time.monotonic() + TEST_TIMEOUT
+        while ac.queued_rows and time.monotonic() < deadline:
+            time.sleep(0.002)
+        assert ac.queued_rows == 0
+        assert af.pending_requests == 0
+        # and the farm never saw the demand: next words match a solo farm
+        # that never had the timed-out request
+        out = af.draw_sync("core0", "t", 64, deadline_ms=0,
+                           timeout=TEST_TIMEOUT)
+    finally:
+        af.close()
+    solo = _farm(gang=False)
+    np.testing.assert_array_equal(out, solo.draw("core0", "t", 64))
+
+
+def test_draw_sync_timeout_after_commit_reparks_words():
+    """S1 (committed half): once the flush committed the request, it can't
+    be un-launched — on timeout its words are re-parked on the sync
+    surface instead of stranding in a future nobody reads."""
+    fc = FakeClock()
+    farm = _farm(clock=fc)
+    af = AsyncOscillatorFarm(farm, clock=fc).start_thread()
+    g = _GatedFlush(farm)
+    try:
+        farm.flush = g
+        with pytest.raises(concurrent.futures.TimeoutError):
+            # deadline 0: the flusher commits + launches immediately; the
+            # gate holds the launch past our real-time wait
+            af.draw_sync("core0", "t", 150, deadline_ms=0, timeout=0.5)
+        assert g.entered.is_set()          # the request WAS committed
+        g.release()
+        deadline = time.monotonic() + TEST_TIMEOUT
+        while (farm.services["core0"].outbox_words("t") < 150
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+        assert farm.services["core0"].outbox_words("t") == 150
+    finally:
+        farm.flush = g.orig
+        af.close()
+    out = farm.flush()                     # launch-free outbox delivery
+    solo = _farm(gang=False)
+    np.testing.assert_array_equal(out["core0"]["t"],
+                                  solo.draw("core0", "t", 150))
+
+
+def test_flush_now_before_start_raises_cleanly():
+    """S2: flush_now() on a never-started front-end must refuse up front —
+    not half-run (ingest + farm.flush) and then crash on the missing
+    loop."""
+    async def go():
+        farm = _farm()
+        af = AsyncOscillatorFarm(farm)
+        with pytest.raises(RuntimeError, match="not started"):
+            await af.flush_now()
+        assert farm.launches == 0          # nothing half-ran
+        async with af:                     # still perfectly startable
+            out = await af.draw("core0", "t", 16)
+            assert out.size == 16
+    _run(go())
+
+
+def test_stats_and_error_windows_are_bounded():
+    """S3: a long-running front-end must hold constant memory — miss
+    samples and flush errors are ring buffers, and deadline_stats()
+    reports the window, not all-time."""
+    async def go():
+        fc = FakeClock()
+        farm = _farm(clock=fc)
+        async with AsyncOscillatorFarm(farm, clock=fc, stats_window=4,
+                                       error_window=2) as af:
+            words = []
+            for _ in range(7):
+                words.append(await af.draw("core0", "t", 8, deadline_ms=0))
+            assert len(af.miss_samples_ms()) == 4          # not 7
+            assert af.deadline_stats()["served_requests"] == 4.0
+            orig = farm.flush
+
+            def boom(*a, **kw):
+                raise RuntimeError("injected")
+
+            farm.flush = boom
+            for _ in range(3):
+                f = af.submit("core0", "t", 8, deadline_ms=0)
+                await af.drain()
+                assert isinstance(f.exception(), RuntimeError)
+            assert len(af.flush_errors) == 2               # not 3
+            farm.flush = orig
+    _run(go())
+
+
+def test_submit_refused_from_foreign_thread():
+    """S4: submit() from a non-loop thread used to race the queue
+    unsynchronized and silently corrupt state; now it raises the same
+    clear redirect draw_sync gives on the loop thread."""
+    farm = _farm()
+    af = AsyncOscillatorFarm(farm).start_thread()
+    try:
+        with pytest.raises(RuntimeError, match="draw_sync"):
+            af.submit("core0", "t", 8, deadline_ms=0)
+        # the supported cross-thread path still works
+        out = af.draw_sync("core0", "t", 8, deadline_ms=0,
+                           timeout=TEST_TIMEOUT)
+        assert out.size == 8
+    finally:
+        af.close()
+
+
+# ---------------------------------------------------------------------------
+# Property-based: mid-launch submits/cancels under offload, bit for bit
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=9_999))
+def test_offload_midlaunch_interleaving_matches_solo(seed):
+    """Random schedules where submits and cancels land WHILE a gated
+    launch is in flight on the executor: per-tenant streams must stay
+    bit-identical to the sync gang=False solo path — mid-launch arrivals
+    ride the next cycle, cancels prune cleanly, nothing interleaves."""
+    rng = random.Random(seed)
+
+    async def go():
+        fc = FakeClock()
+        farm = _farm(clock=fc, n_cores=2, clients=("a", "b"))
+        solo = _farm(gang=False, n_cores=2, clients=("a", "b"))
+        tenants = [(f"core{i}", c) for i in range(2) for c in ("a", "b")]
+        log_async = {}
+        log_solo = {}
+        g = _GatedFlush(farm)
+        async with AsyncOscillatorFarm(farm, clock=fc) as af:
+            farm.flush = g
+
+            def submit_some(cancellable):
+                batch = []
+                for k, (core, c) in enumerate(
+                        rng.sample(tenants, rng.randint(1, 4))):
+                    n = rng.randint(1, 300)
+                    f = af.submit(core, c, n, deadline_ms=0)
+                    if cancellable and k > 0 and rng.random() < 0.35:
+                        f.cancel()         # never reaches any farm
+                    else:
+                        batch.append((core, c, f, n))
+                return batch
+
+            batch = submit_some(cancellable=False)
+            for _ in range(rng.randint(2, 3)):
+                while not af.in_flight:     # the batch's launch is gated
+                    await asyncio.sleep(0)
+                # mid-launch traffic lands now, against a live loop
+                next_batch = submit_some(cancellable=True)
+                g.release()
+                for core, c, f, n in batch:
+                    log_async.setdefault((core, c), []).append(
+                        np.asarray(await f))
+                # mirror ONLY the committed batch into solo, same order
+                for core, c, f, n in batch:
+                    solo.request(core, c, n)
+                out = solo.flush()
+                for core, per in out.items():
+                    for c, w in per.items():
+                        log_solo.setdefault((core, c), []).append(w)
+                batch = next_batch
+            g.release()                     # final batch's launch
+            for core, c, f, n in batch:
+                log_async.setdefault((core, c), []).append(
+                    np.asarray(await f))
+            for core, c, f, n in batch:
+                solo.request(core, c, n)
+            out = solo.flush()
+            for core, per in out.items():
+                for c, w in per.items():
+                    log_solo.setdefault((core, c), []).append(w)
+            farm.flush = g.orig
+        assert set(log_async) == set(log_solo)
+        for key in log_async:
+            np.testing.assert_array_equal(
+                np.concatenate(log_async[key]),
+                np.concatenate(log_solo[key]),
+                err_msg=f"stream diverged for {key} (seed={seed})")
+
+    _run(go())

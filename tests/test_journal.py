@@ -1,0 +1,198 @@
+"""Crash recovery: the flush journal replays streams bit-exactly.
+
+The harsh contract under test: a process serving tenants through the
+async front-end dies *between* flushes (queued-but-unflushed demand dies
+with it, exactly like a deadline timeout), a new process rebuilds the
+same farm from weights + journal alone — no crashed-process memory — and
+every tenant stream continues bit-identically to an uncrashed reference,
+including words that were generated but still undelivered at the kill
+point (service buffer + outbox backlog).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.serve.async_frontend import AsyncOscillatorFarm
+from repro.serve.clock import FakeClock
+from repro.serve.farm import OscillatorFarm
+from repro.serve.journal import FlushJournal, read_journal, replay_journal
+
+from test_async_frontend import CAND, _farm, _params, _run
+
+
+def _collect(coro):
+    """Run ``coro`` under the suite's hang guard and return its result."""
+    box = []
+
+    async def wrap():
+        box.append(await coro)
+
+    _run(wrap())
+    return box[0]
+
+
+def _bare_farm(n_cores=2, clock=None, gang=True):
+    """Same cores as ``_farm`` but NO clients registered — registration is
+    the journal's job on the recovery path."""
+    farm = OscillatorFarm(gang=gang, clock=clock)
+    for i in range(n_cores):
+        farm.add_core(f"core{i}", _params(key=10 + i), config=CAND,
+                      lanes_per_client=128, backend="pallas_interpret")
+    return farm
+
+
+# ---------------------------------------------------------------------------
+# The headline: kill between flushes, replay, continue bit-exactly
+# ---------------------------------------------------------------------------
+
+def test_kill_between_flushes_replays_bit_exact(tmp_path):
+    jpath = tmp_path / "farm.journal"
+    delivered = {}
+
+    async def serve_until_kill():
+        fc = FakeClock()
+        farm = _bare_farm(clock=fc)
+        async with AsyncOscillatorFarm(farm, clock=fc,
+                                       journal=jpath) as af:
+            for i in range(2):
+                af.register(f"core{i}", "t", seed=40)
+            af.register("core0", "s", seed=41)
+            # flush 1: 200 % 128 != 0 leaves buffered overdraw (buf > 0 at
+            # the journaled boundary — the replay must regenerate it)
+            delivered["d1"] = await af.draw("core0", "t", 200, deadline_ms=0)
+            # flush 2 also serves sync-surface demand for "s": those words
+            # re-park into the outbox => outbox > 0 at the boundary too
+            farm.request("core0", "s", 150)
+            delivered["d2"] = await af.draw("core0", "t", 100, deadline_ms=0)
+            delivered["d3"] = await af.draw("core1", "t", 64, deadline_ms=0)
+            # the kill window: queued demand that never reached a flush —
+            # it dies with the process and must NOT appear after recovery
+            af.submit("core0", "t", 999, deadline_ms=10_000)
+
+    _run(serve_until_kill())
+
+    # ---- recovery: fresh process, same weights, zero crashed-state ----
+    farm2 = _bare_farm()
+    info = replay_journal(farm2, jpath)
+    assert info["flushes"] == 3
+    assert info["clients"] == 3
+    assert info["rows_replayed"] > 0
+    assert info["torn_tail"] is False
+
+    # undelivered tail was rebuilt, not dropped:
+    svc0 = farm2.services["core0"]
+    assert len(svc0.clients["t"].buf) > 0          # buffered overdraw
+    assert svc0.outbox_words("s") == 150           # parked sync words
+
+    # reference: an uncrashed solo farm that served exactly the DELIVERED
+    # draws (never the killed 999-word request)
+    solo = _farm(gang=False, n_cores=2, clients=("t", "s"))
+    np.testing.assert_array_equal(delivered["d1"],
+                                  solo.draw("core0", "t", 200))
+    np.testing.assert_array_equal(delivered["d2"],
+                                  solo.draw("core0", "t", 100))
+    np.testing.assert_array_equal(delivered["d3"],
+                                  solo.draw("core1", "t", 64))
+
+    # the parked outbox words surface on the recovered sync surface,
+    # bit-identical to the solo stream
+    out = farm2.flush()
+    np.testing.assert_array_equal(out["core0"]["s"],
+                                  solo.draw("core0", "s", 150))
+    # and every stream CONTINUES bit-exactly past the kill point
+    np.testing.assert_array_equal(farm2.draw("core0", "t", 120),
+                                  solo.draw("core0", "t", 120))
+    np.testing.assert_array_equal(farm2.draw("core1", "t", 77),
+                                  solo.draw("core1", "t", 77))
+
+
+def test_recovered_process_keeps_journaling_same_file(tmp_path):
+    """Seq numbers continue across recovery: the journal is reusable as
+    the recovered process's own journal, and a SECOND crash recovers to
+    the post-recovery positions."""
+    jpath = tmp_path / "farm.journal"
+
+    async def phase(register: bool, n_words: int):
+        fc = FakeClock()
+        farm = _bare_farm(n_cores=1, clock=fc)
+        if not register:
+            replay_journal(farm, jpath)
+        async with AsyncOscillatorFarm(farm, clock=fc,
+                                       journal=jpath) as af:
+            if register:
+                af.register("core0", "t", seed=40)
+            return await af.draw("core0", "t", n_words, deadline_ms=0)
+
+    first = _collect(phase(True, 90))
+    assert read_journal(jpath)[1] == 1             # one flush journaled
+    second = _collect(phase(False, 70))
+    _, last_seq, positions, torn = read_journal(jpath)
+    assert last_seq == 2 and not torn
+    # second recovery sees the concatenated stream position
+    farm3 = _bare_farm(n_cores=1)
+    replay_journal(farm3, jpath)
+    solo = _farm(gang=False, n_cores=1)
+    np.testing.assert_array_equal(first, solo.draw("core0", "t", 90))
+    np.testing.assert_array_equal(second, solo.draw("core0", "t", 70))
+    np.testing.assert_array_equal(farm3.draw("core0", "t", 55),
+                                  solo.draw("core0", "t", 55))
+
+
+# ---------------------------------------------------------------------------
+# Durability edge cases
+# ---------------------------------------------------------------------------
+
+def test_torn_tail_record_is_discarded(tmp_path):
+    jpath = tmp_path / "farm.journal"
+
+    async def serve():
+        fc = FakeClock()
+        farm = _bare_farm(n_cores=1, clock=fc)
+        async with AsyncOscillatorFarm(farm, clock=fc,
+                                       journal=jpath) as af:
+            af.register("core0", "t", seed=40)
+            return await af.draw("core0", "t", 100, deadline_ms=0)
+
+    got = _collect(serve())
+    # the crash lands mid-append: a torn, non-JSON final line
+    with open(jpath, "a", encoding="utf-8") as f:
+        f.write('{"type":"flush","seq":2,"cor')
+    regs, last_seq, positions, torn = read_journal(jpath)
+    assert torn is True and last_seq == 1
+    farm2 = _bare_farm(n_cores=1)
+    info = replay_journal(farm2, jpath)
+    assert info["torn_tail"] is True and info["flushes"] == 1
+    solo = _farm(gang=False, n_cores=1)
+    np.testing.assert_array_equal(got, solo.draw("core0", "t", 100))
+    np.testing.assert_array_equal(farm2.draw("core0", "t", 60),
+                                  solo.draw("core0", "t", 60))
+
+
+def test_replay_refuses_mismatched_farm(tmp_path):
+    jpath = tmp_path / "farm.journal"
+    with FlushJournal(jpath, clock=FakeClock()) as j:
+        j.record_register("core9", "t", seed=1)
+    with pytest.raises(ValueError, match="core9"):
+        replay_journal(_bare_farm(n_cores=1), jpath)
+
+
+def test_replay_refuses_advanced_client():
+    """replay_client is a from-zero rebuild: replaying onto a client that
+    already served words would corrupt stream positions, so it refuses
+    (and a farm with pre-registered clients fails the re-register)."""
+    farm = _bare_farm(n_cores=1)
+    farm.register("core0", "t", seed=40)
+    farm.draw("core0", "t", 10)
+    with pytest.raises(ValueError, match="replay"):
+        farm.services["core0"].replay_client("t", row=5)
+
+
+def test_journal_timestamps_come_from_the_clock(tmp_path):
+    fc = FakeClock(start=777.0)
+    jpath = tmp_path / "farm.journal"
+    with FlushJournal(jpath, clock=fc) as j:
+        j.record_register("core0", "t", seed=1)
+    recs = [json.loads(line)
+            for line in jpath.read_text().splitlines()]
+    assert all(r["ts"] == 777.0 for r in recs)
