@@ -1,0 +1,16 @@
+"""Invariant linter + asyncio race detector for the serving stack.
+
+Run it::
+
+    PYTHONPATH=src python -m repro.analysis            # human output
+    PYTHONPATH=src python -m repro.analysis --format=json
+
+See :mod:`repro.analysis.engine` for the rule/suppression/baseline
+model and :mod:`repro.analysis.rules` for what is enforced.
+"""
+from repro.analysis.engine import (Finding, Report, Suppression,
+                                   analyze_text, check_baseline,
+                                   run_analysis)
+
+__all__ = ["Finding", "Report", "Suppression", "analyze_text",
+           "check_baseline", "run_analysis"]

@@ -1,0 +1,84 @@
+"""CLI: ``python -m repro.analysis`` — lint the repo, gate on the baseline.
+
+Exit status:
+  0  no unsuppressed findings and the tree matches the committed baseline
+  1  findings (or baseline violations: new findings / new suppressions)
+  2  usage / IO errors
+
+``--update-baseline`` rewrites ``.repro-analysis-baseline.json`` from the
+current tree (do this in the same PR that adds a finding or suppression,
+so the growth is explicit and reviewed).  Baseline entries the tree no
+longer needs are warnings, never errors — the file only shrinks quietly.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from repro.analysis.engine import (BASELINE_NAME, baseline_from_report,
+                                   check_baseline, format_human, repo_root,
+                                   run_analysis)
+from repro.atomicio import atomic_write_text
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="invariant linter + asyncio race detector")
+    ap.add_argument("--root", default=None,
+                    help="repo root to scan (default: auto-detected)")
+    ap.add_argument("--format", choices=("human", "json"), default="human")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default: <root>/{BASELINE_NAME}; "
+                         f"'none' disables the baseline gate)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the current tree")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report to this path")
+    args = ap.parse_args(argv)
+
+    root = pathlib.Path(args.root).resolve() if args.root else repo_root()
+    if not root.is_dir():
+        print(f"error: root {root} is not a directory", file=sys.stderr)
+        return 2
+    report = run_analysis(root)
+
+    baseline_path = (root / BASELINE_NAME if args.baseline is None
+                     else pathlib.Path(args.baseline))
+    if args.update_baseline:
+        atomic_write_text(baseline_path,
+                          json.dumps(baseline_from_report(report), indent=2)
+                          + "\n")
+        print(f"wrote {baseline_path}")
+
+    errors, warnings = [], []
+    if args.baseline != "none":
+        if baseline_path.is_file():
+            try:
+                baseline = json.loads(baseline_path.read_text())
+            except json.JSONDecodeError as e:
+                print(f"error: {baseline_path} is not valid JSON: {e}",
+                      file=sys.stderr)
+                return 2
+            errors, warnings = check_baseline(report, baseline)
+        elif not args.update_baseline:
+            errors = [f"{BASELINE_NAME} missing at {baseline_path}; run "
+                      f"with --update-baseline to create it"]
+
+    payload = report.to_json()
+    payload["baseline_errors"] = errors
+    payload["baseline_warnings"] = warnings
+    payload["ok"] = not report.findings and not errors
+    if args.out:
+        atomic_write_text(args.out, json.dumps(payload, indent=2) + "\n")
+    if args.format == "json":
+        print(json.dumps(payload, indent=2))
+    else:
+        print(format_human(report, errors, warnings))
+    return 0 if payload["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,364 @@
+"""Rule engine for the project linter (``python -m repro.analysis``).
+
+HENNC ships every generated hardware core with a machine-checked
+validation testbench: correctness is enforced by tooling, not review.
+This package is the same discipline applied to the *software* contracts
+the serving stack has already paid for in bugs — injectable-Clock time
+discipline, no blocking work on the event loop, exactly-once admission
+release, fsync-then-replace atomic publishes, half-width bf16 bitcasts —
+each codified as an AST rule that runs on every file, every PR.
+
+Deliberately stdlib-only (``ast`` + ``re`` + ``json``): the CI lint job
+needs no jax install and finishes in seconds.
+
+Vocabulary
+----------
+* A **rule** inspects one file's AST/text and yields findings.  Rules
+  self-scope by repo-relative path (``Rule.applies``), so e.g. the
+  kernel-dtype rule only reads ``src/repro/kernels/``.
+* A **finding** is (rule, path, line, message).
+* A **suppression** is an inline comment on the finding's line or the
+  line above::
+
+      # repro: allow[rule-name] reason=why this site is exempt
+
+  The reason is REQUIRED: a reasonless ``allow`` does not suppress and
+  is itself reported (``suppression-hygiene``).  A suppression that
+  matches no finding is reported too (``unused-suppression``), so stale
+  exemptions cannot accumulate.
+* The **baseline** (``.repro-analysis-baseline.json``) pins the accepted
+  state: the set of known findings (empty on a clean tree) plus the full
+  suppression inventory.  The gate is subset-only — a new finding or a
+  new suppression fails until the baseline file is explicitly edited in
+  the same PR, and entries the tree no longer needs are reported so the
+  file only ever shrinks silently, never grows.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import pathlib
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*repro:\s*allow\[([A-Za-z0-9_,-]+)\]\s*(?:reason=(.*?))?\s*$")
+
+#: Scan roots, relative to the repo root.  ``results/generated_cores`` is
+#: restricted to package ``__init__.py`` files (the generated-core
+#: contract surface); everything under ``src/repro`` is in scope.
+SCAN_SRC = "src/repro"
+SCAN_CORES = "results/generated_cores"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # repo-relative, posix separators
+    line: int
+    message: str
+
+    def ident(self) -> Tuple[str, str]:
+        """Baseline identity: line numbers drift, (path, rule) does not."""
+        return (self.path, self.rule)
+
+
+@dataclasses.dataclass
+class Suppression:
+    rule: str
+    path: str
+    line: int          # line of the comment
+    reason: str
+    used: bool = False
+
+
+class FileContext:
+    """Everything a rule may inspect about one file."""
+
+    def __init__(self, rel: str, text: str):
+        self.rel = rel
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree: Optional[ast.AST] = None
+        self.parse_error: Optional[SyntaxError] = None
+        try:
+            self.tree = ast.parse(text)
+        except SyntaxError as e:
+            self.parse_error = e
+        self._parents: Optional[Dict[ast.AST, ast.AST]] = None
+
+    def parents(self) -> Dict[ast.AST, ast.AST]:
+        """Child -> parent map over the whole tree (computed lazily)."""
+        if self._parents is None:
+            self._parents = {}
+            assert self.tree is not None
+            for node in ast.walk(self.tree):
+                for child in ast.iter_child_nodes(node):
+                    self._parents[child] = node
+        return self._parents
+
+    def ancestors(self, node: ast.AST) -> Iterable[ast.AST]:
+        p = self.parents()
+        while node in p:
+            node = p[node]
+            yield node
+
+    def enclosing_function(self, node: ast.AST):
+        """Nearest enclosing (async) function, or None at module level."""
+        for anc in self.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return anc
+        return None
+
+
+class Rule:
+    """Base class: subclasses set ``name``/``doc`` and implement check()."""
+
+    name = "abstract"
+    doc = ""
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith(SCAN_SRC)
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: FileContext, node_or_line, message: str) -> Finding:
+        line = (node_or_line if isinstance(node_or_line, int)
+                else getattr(node_or_line, "lineno", 1))
+        return Finding(self.name, ctx.rel, line, message)
+
+
+def default_rules() -> List[Rule]:
+    from repro.analysis.rules import all_rules
+    return all_rules()
+
+
+def parse_suppressions(rel: str, text: str) -> List[Suppression]:
+    """Extract ``allow[...]`` suppressions from real COMMENT tokens only
+    (so the syntax can be *documented* in docstrings without registering
+    as a stale suppression)."""
+    try:
+        comments = [(t.start[0], t.string)
+                    for t in tokenize.generate_tokens(
+                        io.StringIO(text).readline)
+                    if t.type == tokenize.COMMENT]
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        # unparseable file: fall back to raw lines so the parse-error
+        # finding cannot be accompanied by silently-dropped suppressions
+        comments = list(enumerate(text.splitlines(), start=1))
+    out = []
+    for lineno, comment in comments:
+        m = SUPPRESS_RE.search(comment)
+        if not m:
+            continue
+        reason = (m.group(2) or "").strip()
+        for rule in m.group(1).split(","):
+            out.append(Suppression(rule=rule.strip(), path=rel, line=lineno,
+                                   reason=reason))
+    return out
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    suppressed: List[Finding] = dataclasses.field(default_factory=list)
+    suppressions: List[Suppression] = dataclasses.field(default_factory=list)
+    files_scanned: int = 0
+
+    def to_json(self) -> Dict:
+        return {
+            "files_scanned": self.files_scanned,
+            "findings": [dataclasses.asdict(f) for f in self.findings],
+            "suppressed": [dataclasses.asdict(f) for f in self.suppressed],
+            "suppressions": [dataclasses.asdict(s)
+                             for s in self.suppressions],
+        }
+
+
+def analyze_text(rel: str, text: str,
+                 rules: Optional[Sequence[Rule]] = None) -> Report:
+    """Lint one file's source under a virtual repo-relative path.
+
+    The public seam for the fixture tests: rules scope by ``rel``, so a
+    fixture can impersonate e.g. ``src/repro/serve/fake.py``.
+    """
+    rules = list(rules) if rules is not None else default_rules()
+    ctx = FileContext(rel, text)
+    report = Report(files_scanned=1)
+    raw: List[Finding] = []
+    if ctx.parse_error is not None:
+        raw.append(Finding("parse-error", rel,
+                           ctx.parse_error.lineno or 1,
+                           f"file does not parse: {ctx.parse_error.msg}"))
+    else:
+        for rule in rules:
+            if rule.applies(rel):
+                raw.extend(rule.check(ctx))
+    # Dedupe (nested async defs make some walks overlap), stable order.
+    seen = set()
+    uniq = []
+    for f in sorted(raw, key=lambda f: (f.line, f.rule, f.message)):
+        key = (f.rule, f.line, f.message)
+        if key not in seen:
+            seen.add(key)
+            uniq.append(f)
+
+    sups = parse_suppressions(rel, ctx.text)
+    by_key: Dict[Tuple[str, int], Suppression] = {}
+    for s in sups:
+        # A suppression covers its own line and the line below it.
+        by_key[(s.rule, s.line)] = s
+        by_key[(s.rule, s.line + 1)] = s
+    for f in uniq:
+        s = by_key.get((f.rule, f.line))
+        if s is not None and s.reason:
+            s.used = True
+            report.suppressed.append(f)
+        else:
+            report.findings.append(f)
+            if s is not None:
+                s.used = True   # it matched; the missing reason is the bug
+    for s in sups:
+        if not s.reason:
+            report.findings.append(Finding(
+                "suppression-hygiene", rel, s.line,
+                f"allow[{s.rule}] without reason=...: suppressions must "
+                f"say why the site is exempt"))
+        elif not s.used:
+            report.findings.append(Finding(
+                "unused-suppression", rel, s.line,
+                f"allow[{s.rule}] matches no finding on line {s.line} or "
+                f"{s.line + 1}; delete the stale exemption"))
+    report.suppressions = sups
+    return report
+
+
+def repo_root() -> pathlib.Path:
+    """The repo root, derived from this file (src/repro/analysis/...)."""
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def iter_target_files(root: pathlib.Path) -> List[pathlib.Path]:
+    targets: List[pathlib.Path] = []
+    src = root / SCAN_SRC
+    if src.is_dir():
+        targets.extend(p for p in sorted(src.rglob("*.py"))
+                       if "__pycache__" not in p.parts)
+    cores = root / SCAN_CORES
+    if cores.is_dir():
+        targets.extend(sorted(cores.rglob("__init__.py")))
+    return targets
+
+
+def run_analysis(root: Optional[pathlib.Path] = None,
+                 rules: Optional[Sequence[Rule]] = None) -> Report:
+    """Lint the whole repo; returns the merged report."""
+    root = root or repo_root()
+    rules = list(rules) if rules is not None else default_rules()
+    merged = Report()
+    for path in iter_target_files(root):
+        rel = path.relative_to(root).as_posix()
+        rep = analyze_text(rel, path.read_text(encoding="utf-8"), rules)
+        merged.findings.extend(rep.findings)
+        merged.suppressed.extend(rep.suppressed)
+        merged.suppressions.extend(rep.suppressions)
+        merged.files_scanned += 1
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# Baseline: the committed accepted state (subset-only gate)
+# ---------------------------------------------------------------------------
+
+BASELINE_NAME = ".repro-analysis-baseline.json"
+_BASELINE_VERSION = 1
+
+
+def baseline_from_report(report: Report) -> Dict:
+    return {
+        "version": _BASELINE_VERSION,
+        "findings": sorted(
+            [{"path": f.path, "rule": f.rule} for f in report.findings],
+            key=lambda d: (d["path"], d["rule"])),
+        "suppressions": sorted(
+            [{"path": s.path, "rule": s.rule, "reason": s.reason}
+             for s in report.suppressions],
+            key=lambda d: (d["path"], d["rule"], d["reason"])),
+    }
+
+
+def _counts(items: Iterable[Tuple[str, str]]) -> Dict[Tuple[str, str], int]:
+    out: Dict[Tuple[str, str], int] = {}
+    for k in items:
+        out[k] = out.get(k, 0) + 1
+    return out
+
+
+def check_baseline(report: Report, baseline: Dict
+                   ) -> Tuple[List[str], List[str]]:
+    """Compare a report against the committed baseline.
+
+    Returns (errors, warnings).  Errors — new findings or new
+    suppressions beyond the baseline inventory — must fail CI; warnings
+    flag baseline entries the tree no longer needs (shrink the file).
+    """
+    errors: List[str] = []
+    warnings: List[str] = []
+    base_f = _counts((d["path"], d["rule"])
+                     for d in baseline.get("findings", []))
+    cur_f = _counts(f.ident() for f in report.findings)
+    for key, n in sorted(cur_f.items()):
+        allowed = base_f.get(key, 0)
+        if n > allowed:
+            errors.append(
+                f"{key[0]}: {n - allowed} new [{key[1]}] finding(s) not in "
+                f"the baseline — fix them or suppress with a reason")
+    base_s = _counts((d["path"], d["rule"])
+                     for d in baseline.get("suppressions", []))
+    cur_s = _counts((s.path, s.rule) for s in report.suppressions)
+    for key, n in sorted(cur_s.items()):
+        allowed = base_s.get(key, 0)
+        if n > allowed:
+            errors.append(
+                f"{key[0]}: {n - allowed} new allow[{key[1]}] "
+                f"suppression(s) beyond the baseline inventory — update "
+                f"{BASELINE_NAME} in the same PR so the growth is explicit")
+    for key, n in sorted(base_f.items()):
+        if cur_f.get(key, 0) < n:
+            warnings.append(
+                f"{key[0]}: baseline lists {n} [{key[1]}] finding(s) but "
+                f"the tree has {cur_f.get(key, 0)} — shrink {BASELINE_NAME}")
+    for key, n in sorted(base_s.items()):
+        if cur_s.get(key, 0) < n:
+            warnings.append(
+                f"{key[0]}: baseline lists {n} allow[{key[1]}] but the "
+                f"tree has {cur_s.get(key, 0)} — shrink {BASELINE_NAME}")
+    return errors, warnings
+
+
+# ---------------------------------------------------------------------------
+# Output formatting
+# ---------------------------------------------------------------------------
+
+def format_human(report: Report, errors: Sequence[str] = (),
+                 warnings: Sequence[str] = ()) -> str:
+    out: List[str] = []
+    for f in sorted(report.findings,
+                    key=lambda f: (f.path, f.line, f.rule)):
+        out.append(f"{f.path}:{f.line}: [{f.rule}] {f.message}")
+    for e in errors:
+        out.append(f"BASELINE ERROR: {e}")
+    for w in warnings:
+        out.append(f"baseline warning: {w}")
+    n_sup = len(report.suppressed)
+    out.append(
+        f"repro.analysis: {report.files_scanned} files, "
+        f"{len(report.findings)} finding(s), {n_sup} suppressed "
+        f"(all with reasons)" if not report.findings else
+        f"repro.analysis: {report.files_scanned} files, "
+        f"{len(report.findings)} finding(s), {n_sup} suppressed")
+    return "\n".join(out)

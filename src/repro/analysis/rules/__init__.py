@@ -1,0 +1,41 @@
+"""The enforced invariants, one module per rule.
+
+Each rule encodes a contract the codebase has already paid for — either
+a property the tests prove (and a later edit could silently break) or a
+bug class that actually shipped here once:
+
+========================  ==================================================
+clock-discipline          every time read goes through the injectable Clock
+async-blocking            no blocking work lexically on the event loop
+lock-await-race           single-flight-lock state is await-safe
+crash-safety              committed artifacts publish via tmp + os.replace;
+                          journal appends are fsync-backed
+kernel-dtype              no entropy-zeroing astype-before-bitcast; Pallas
+                          kernel bodies call only jax-family ops
+broad-except              except Exception/bare except needs a reason
+core-contract             generated cores draw through fused ops.chaotic_bits
+                          with word_offset + final-state plumbing
+========================  ==================================================
+"""
+from typing import List
+
+from repro.analysis.engine import Rule
+from repro.analysis.rules.async_blocking import AsyncBlockingRule
+from repro.analysis.rules.broad_except import BroadExceptRule
+from repro.analysis.rules.clock_discipline import ClockDisciplineRule
+from repro.analysis.rules.core_contract import CoreContractRule
+from repro.analysis.rules.crash_safety import CrashSafetyRule
+from repro.analysis.rules.kernel_dtype import KernelDtypeRule
+from repro.analysis.rules.lock_race import LockAwaitRaceRule
+
+
+def all_rules() -> List[Rule]:
+    return [
+        ClockDisciplineRule(),
+        AsyncBlockingRule(),
+        LockAwaitRaceRule(),
+        CrashSafetyRule(),
+        KernelDtypeRule(),
+        BroadExceptRule(),
+        CoreContractRule(),
+    ]

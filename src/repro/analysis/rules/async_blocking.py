@@ -1,0 +1,123 @@
+"""async-blocking: no blocking work lexically inside ``async def`` bodies.
+
+The production tier's whole point (PR 6) is that the event loop stays
+live while a gang launch runs on the executor: ingress, cancellation and
+deadline accounting proceed mid-launch.  One blocking call on the loop
+thread silently re-serializes everything — no test fails, p99 just
+collapses.  This rule flags the blocking calls this codebase actually
+has, when they appear lexically inside an ``async def`` in ``serve/``:
+
+* ``time.sleep`` / ``os.fsync`` — the classic loop-stallers;
+* ``.record_flush(`` / ``.record_register(`` — journal appends are
+  fsync-backed (``FlushJournal._append``), so each call is a disk
+  barrier (allowed only with a reasoned suppression, e.g. the one
+  durability-ordering site in ``_flush_cycle``);
+* ``.flush(`` without ``deliver=False`` — a delivering farm flush runs
+  the gang kernel launch on the caller's thread; async code must split
+  commit / offloaded launch / resolve instead;
+* direct ``chaotic_bits`` launches — same, the kernel belongs on the
+  executor;
+* ``draw_sync`` — blocks on a future only the flusher on this very
+  loop can resolve: a guaranteed deadlock (also enforced at runtime).
+
+The inverse misuse is flagged too: a front-end ``.submit(`` from *sync*
+code (the foreign-thread queue race, PR 6's S4 bugfix class) — sync
+callers go through the thread-safe ``draw_sync`` ingress.  Executor /
+pool ``submit`` is exempt by receiver name.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.engine import FileContext, Finding, Rule
+
+_BLOCKING_METHODS = {
+    "record_flush": "fsync-backed journal append",
+    "record_register": "fsync-backed journal append",
+}
+
+
+def _call_name(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def _dotted(call: ast.Call) -> str:
+    try:
+        return ast.unparse(call.func)
+    except (ValueError, RecursionError):   # pathological/deep tree
+        return ""
+
+
+class AsyncBlockingRule(Rule):
+    name = "async-blocking"
+    doc = "no blocking calls lexically inside async def bodies in serve/"
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith("src/repro/serve/")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = ctx.enclosing_function(node)
+            if not isinstance(fn, ast.AsyncFunctionDef):
+                yield from self._check_sync_misuse(ctx, node)
+                continue
+            name = _call_name(node)
+            dotted = _dotted(node)
+            if dotted in ("time.sleep", "os.fsync"):
+                yield self.finding(
+                    ctx, node,
+                    f"{dotted}() blocks the event loop; use `await "
+                    f"clock.wait(...)` / run_in_executor instead")
+            elif name in _BLOCKING_METHODS:
+                yield self.finding(
+                    ctx, node,
+                    f".{name}() is a {_BLOCKING_METHODS[name]} — a disk "
+                    f"barrier on the loop thread; offload it or suppress "
+                    f"with the durability reason")
+            elif name == "flush" and isinstance(node.func, ast.Attribute):
+                if not any(k.arg == "deliver"
+                           and isinstance(k.value, ast.Constant)
+                           and k.value.value is False
+                           for k in node.keywords):
+                    yield self.finding(
+                        ctx, node,
+                        "delivering farm .flush() runs the gang launch on "
+                        "the loop thread; async code must commit on-loop, "
+                        "launch flush(deliver=False) on the executor, and "
+                        "resolve on-loop")
+            elif name == "draw_sync":
+                yield self.finding(
+                    ctx, node,
+                    "draw_sync() from the loop thread deadlocks (it blocks "
+                    "on a future only this loop's flusher resolves); use "
+                    "`await draw(...)`")
+            elif name.startswith("chaotic_bits"):
+                yield self.finding(
+                    ctx, node,
+                    f"direct kernel launch {name}() inside async def: the "
+                    f"launch belongs on the executor (offloaded flush), "
+                    f"not the loop thread")
+
+    def _check_sync_misuse(self, ctx, node: ast.Call):
+        """Front-end .submit() from sync code: the foreign-thread queue
+        race (asyncio futures and the queue are loop-thread-only)."""
+        f = node.func
+        if not (isinstance(f, ast.Attribute) and f.attr == "submit"):
+            return
+        recv = _dotted(node).rsplit(".", 1)[0].lower()
+        if "executor" in recv or "pool" in recv:
+            return            # ThreadPoolExecutor.submit is sync-safe
+        yield self.finding(
+            ctx, node,
+            ".submit() outside the event loop's coroutines races the "
+            "request queue unsynchronized (asyncio futures are loop-"
+            "thread-only); sync callers use draw_sync(), the thread-safe "
+            "ingress")

@@ -1,0 +1,47 @@
+"""broad-except: ``except Exception`` / bare ``except`` needs a reason.
+
+A broad catch is sometimes exactly right here — the flusher task must
+survive any flush failure, a sweep cell must record its traceback and
+let the other cells run.  But each such site is a place where a typo-
+level bug (AttributeError, NameError) gets swallowed into a log nobody
+reads, so the policy is: every broad catch either narrows to the
+exceptions the code actually expects, or carries
+``# repro: allow[broad-except] reason=...`` stating what is caught and
+where the error is kept.  The suppression reason IS the documentation.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.engine import FileContext, Finding, Rule
+
+_BROAD = ("Exception", "BaseException")
+
+
+def _is_broad(type_node) -> bool:
+    if type_node is None:
+        return True                      # bare except:
+    if isinstance(type_node, ast.Name):
+        return type_node.id in _BROAD
+    if isinstance(type_node, ast.Tuple):
+        return any(_is_broad(e) for e in type_node.elts)
+    return False
+
+
+class BroadExceptRule(Rule):
+    name = "broad-except"
+    doc = "broad exception handlers must narrow or carry a reasoned allow"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ExceptHandler) and _is_broad(node.type):
+                what = ("bare except:" if node.type is None
+                        else f"except {ast.unparse(node.type)}")
+                yield self.finding(
+                    ctx, node,
+                    f"{what} swallows typo-level bugs (AttributeError, "
+                    f"NameError) along with the expected failures: narrow "
+                    f"to the exceptions this site really expects, or "
+                    f"suppress with a reason saying what is caught and "
+                    f"where the error is kept")

@@ -1,0 +1,58 @@
+"""clock-discipline: every time read goes through the injectable Clock.
+
+The serving stack's determinism contract (tests/test_async_frontend.py)
+and the dry-run duration measurements both depend on time being an
+*injected* dependency: a ``FakeClock`` makes every deadline/coalescing
+behavior testable with zero real sleeps, and ``SystemClock.now()`` is
+monotonic where ``time.time()`` can step under NTP mid-measurement.
+That only holds if nobody reaches around the seam — so ``repro.clock``
+is the ONE module allowed to import ``time``, and this rule flags any
+other ``import time`` / ``time.<read>`` in the project.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.engine import FileContext, Finding, Rule
+
+ALLOWED_MODULE = "src/repro/clock.py"
+
+TIME_READS = frozenset({
+    "time", "perf_counter", "perf_counter_ns", "monotonic", "monotonic_ns",
+    "sleep", "process_time", "process_time_ns",
+})
+
+
+class ClockDisciplineRule(Rule):
+    name = "clock-discipline"
+    doc = ("time may only be read through an injected repro.clock.Clock; "
+           "repro/clock.py is the sole module that touches time.*")
+
+    def applies(self, rel: str) -> bool:
+        return super().applies(rel) and rel != ALLOWED_MODULE
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "time" or alias.name.startswith("time."):
+                        yield self.finding(
+                            ctx, node,
+                            "import time outside repro/clock.py: inject a "
+                            "Clock (repro.clock) instead so tests can drive "
+                            "time and measurements stay monotonic")
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "time":
+                    yield self.finding(
+                        ctx, node,
+                        "from time import ... outside repro/clock.py: "
+                        "inject a Clock (repro.clock) instead")
+            elif (isinstance(node, ast.Attribute)
+                  and isinstance(node.value, ast.Name)
+                  and node.value.id == "time"
+                  and node.attr in TIME_READS):
+                yield self.finding(
+                    ctx, node,
+                    f"time.{node.attr} outside repro/clock.py: route this "
+                    f"read through an injected Clock")

@@ -1,0 +1,122 @@
+"""crash-safety: committed artifacts publish atomically; journals fsync.
+
+The crash-recovery story (PR 6) has two halves this rule keeps honest:
+
+* **Atomic publish** — a reader (a concurrent serving process importing
+  a generated core, a restarted trainer opening a checkpoint) must see
+  the previous complete artifact or the new one, never a torn mix.  The
+  discipline is: write a tmp sibling, then ``os.replace`` (or
+  ``Path.rename``) it over the committed name.  ``repro.atomicio`` is
+  the shared helper.  This rule flags any direct write to a committed
+  path — ``open(..., "w"/"wb")``, ``.write_text(...)``,
+  ``np.save/savez(...)`` — unless the target is visibly a tmp file or
+  the enclosing scope performs the replace/rename publish itself.
+
+* **Journal durability** — ``FlushJournal``'s guarantee is that a
+  record exists on disk before the flush it describes is acted on, which
+  requires the append path to fsync.  In journal modules, any
+  ``<obj>.<fileattr>.write(...)`` must share its function with an
+  ``os.fsync`` call.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from repro.analysis.engine import FileContext, Finding, Rule
+
+_NP_WRITERS = frozenset({"save", "savez", "savez_compressed"})
+
+
+def _unparse(node: Optional[ast.AST]) -> str:
+    if node is None:
+        return ""
+    try:
+        return ast.unparse(node)
+    except (ValueError, RecursionError):   # pathological/deep tree
+        return ""
+
+
+def _scope(ctx: FileContext, node: ast.AST) -> ast.AST:
+    fn = ctx.enclosing_function(node)
+    return fn if fn is not None else ctx.tree
+
+
+def _publishes_atomically(scope: ast.AST) -> bool:
+    """Does this scope call os.replace(...) or <path>.rename(...)?"""
+    for n in ast.walk(scope):
+        if not isinstance(n, ast.Call):
+            continue
+        f = n.func
+        if isinstance(f, ast.Attribute) and f.attr in ("replace", "rename"):
+            root = _unparse(f.value)
+            if f.attr == "rename" or root == "os" or root.endswith(".os"):
+                return True
+    return False
+
+
+def _is_tmp(text: str) -> bool:
+    return "tmp" in text.lower()
+
+
+class CrashSafetyRule(Rule):
+    name = "crash-safety"
+    doc = ("committed artifacts must publish via tmp + os.replace; "
+           "journal appends must be fsync-backed")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = self._write_target(node)
+            if target is not None:
+                scope = _scope(ctx, node)
+                if not _is_tmp(target) and not _publishes_atomically(scope):
+                    yield self.finding(
+                        ctx, node,
+                        f"non-atomic write to {target!r}: a crash (or a "
+                        f"concurrent reader) sees a torn file; write a tmp "
+                        f"sibling + os.replace — use repro.atomicio")
+        if "journal" in ctx.rel.rsplit("/", 1)[-1]:
+            yield from self._check_journal_fsync(ctx)
+
+    def _write_target(self, node: ast.Call) -> Optional[str]:
+        """The unparsed committed-path expression, or None if not a write."""
+        f = node.func
+        if isinstance(f, ast.Name) and f.id == "open" and len(node.args) >= 2:
+            mode = node.args[1]
+            if (isinstance(mode, ast.Constant) and isinstance(mode.value, str)
+                    and any(c in mode.value for c in "wx")):
+                return _unparse(node.args[0])
+            return None
+        if isinstance(f, ast.Attribute):
+            if f.attr in ("write_text", "write_bytes"):
+                return _unparse(f.value)
+            if f.attr in _NP_WRITERS and node.args:
+                root = _unparse(f.value)
+                if root in ("np", "numpy") or root.endswith("numpy"):
+                    return _unparse(node.args[0])
+        return None
+
+    def _check_journal_fsync(self, ctx: FileContext):
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            writes = [n for n in ast.walk(fn)
+                      if isinstance(n, ast.Call)
+                      and isinstance(n.func, ast.Attribute)
+                      and n.func.attr == "write"
+                      and isinstance(n.func.value, ast.Attribute)]
+            if not writes:
+                continue
+            fsyncs = any(isinstance(n, ast.Call)
+                         and _unparse(n.func) == "os.fsync"
+                         for n in ast.walk(fn))
+            if not fsyncs:
+                for w in writes:
+                    yield self.finding(
+                        ctx, w,
+                        f"journal append in {fn.name}() without os.fsync: "
+                        f"the durability contract (record exists before "
+                        f"the flush is acted on) does not survive a crash "
+                        f"with the page cache unflushed")

@@ -1,0 +1,140 @@
+"""kernel-dtype: bit-pattern hygiene in the PRNG kernels.
+
+Two bug classes, both from this repo's history:
+
+* **astype-before-bitcast** — the PRNG folds the *low mantissa bits* of
+  the chaotic trajectory.  bf16 has 7 mantissa bits; upcasting to f32
+  before the bitcast zero-fills the low 16 bits of every word, so the
+  fold emits a zero-entropy counter hash.  Numerically nothing fails —
+  NIST just rejects the stream later.  The only legal shape is the
+  width-guarded one (``if x.dtype.itemsize == 2: bitcast at own width
+  else: bitcast f32``), so ``bitcast_convert_type(<x>.astype(...))`` is
+  flagged unless an ancestor ``if`` tests ``itemsize``/``nmant``.
+
+* **foreign ops inside Pallas kernel bodies** — a kernel body (a
+  function named ``*_kernel`` or taking ``*_ref`` params) executes as a
+  traced Mosaic program; ``np.*``, ``os.*``, ``print`` etc. either
+  fail at trace time under exotic configs or, worse, silently constant-
+  fold host-side values into the kernel.  Attribute calls must root in
+  an import alias of a ``jax*`` module; plain-name calls must be
+  module-local helpers or safe builtins.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, Set
+
+from repro.analysis.engine import FileContext, Finding, Rule
+
+_BAD_BUILTINS = frozenset({"print", "open", "input", "eval", "exec",
+                           "breakpoint", "compile"})
+_GUARD_TOKENS = ("itemsize", "nmant")
+
+
+def _import_map(tree: ast.AST) -> Dict[str, str]:
+    """alias -> fully qualified module name, for module-level imports."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def _module_defs(tree: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(node.name)
+    return names
+
+
+def _is_kernel(fn: ast.AST) -> bool:
+    if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return False
+    if fn.name.endswith("_kernel"):
+        return True
+    args = fn.args
+    every = (args.posonlyargs + args.args + args.kwonlyargs)
+    return any(a.arg.endswith("_ref") for a in every)
+
+
+def _root_name(node: ast.AST):
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+class KernelDtypeRule(Rule):
+    name = "kernel-dtype"
+    doc = ("no entropy-zeroing astype-before-bitcast; Pallas kernel "
+           "bodies call only jax-family ops")
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith("src/repro/kernels/")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        imports = _import_map(ctx.tree)
+        local_defs = _module_defs(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            yield from self._check_bitcast(ctx, node)
+            fn = ctx.enclosing_function(node)
+            if _is_kernel(fn):
+                yield from self._check_kernel_call(
+                    ctx, node, imports, local_defs)
+
+    def _check_bitcast(self, ctx, node: ast.Call):
+        try:
+            fname = ast.unparse(node.func)
+        except (ValueError, RecursionError):   # pathological/deep tree
+            return
+        if not fname.endswith("bitcast_convert_type") or not node.args:
+            return
+        arg = node.args[0]
+        if not (isinstance(arg, ast.Call)
+                and isinstance(arg.func, ast.Attribute)
+                and arg.func.attr == "astype"):
+            return
+        for anc in ctx.ancestors(node):
+            if isinstance(anc, ast.If):
+                try:
+                    test = ast.unparse(anc.test)
+                except (ValueError, RecursionError):
+                    test = ""
+                if any(tok in test for tok in _GUARD_TOKENS):
+                    return
+        yield self.finding(
+            ctx, node,
+            "astype() before bitcast_convert_type without a dtype-width "
+            "guard: upcasting a half-width float zero-fills the low "
+            "mantissa bits and the PRNG fold emits a zero-entropy "
+            "counter hash — bitcast at the input's own width (guard on "
+            "dtype.itemsize, see ops._fold_low16)")
+
+    def _check_kernel_call(self, ctx, node: ast.Call, imports, local_defs):
+        f = node.func
+        if isinstance(f, ast.Name):
+            if f.id in _BAD_BUILTINS:
+                yield self.finding(
+                    ctx, node,
+                    f"{f.id}() inside a Pallas kernel body: host-side "
+                    f"effects do not belong in a traced Mosaic program")
+            return
+        if not isinstance(f, ast.Attribute):
+            return
+        root = _root_name(f)
+        if root is None or root not in imports:
+            return          # method on a local value (x.astype, ref loads)
+        module = imports[root]
+        if not module.startswith("jax"):
+            yield self.finding(
+                ctx, node,
+                f"{ast.unparse(f)}() inside a Pallas kernel body roots in "
+                f"non-jax module {module!r}: host-side ops silently "
+                f"constant-fold or fail at trace time — use the jnp/lax/"
+                f"pl equivalent")

@@ -1,0 +1,153 @@
+"""lock-await-race: the single-flight lock's state is await-safe.
+
+Asyncio's concurrency unit is the await: a coroutine owns the world
+between awaits, and every ``await`` is a point where *other* coroutines
+run — including ones touching the same object.  The serving front-end's
+correctness proof (bit-identity under arbitrary interleaving) leans on
+two structural facts this rule re-checks on every PR:
+
+1. **Lock domination** — the flush pipeline's mutating phases
+   (``absorb``, ``_commit``, ``_resolve``) interleaved from two
+   coroutines corrupt farm word accounting.  Every call site inside an
+   ``async def`` must sit lexically under ``async with <...lock...>``.
+
+2. **Load-await-store races** — inside a lock body, reading shared
+   state, awaiting, then writing a value derived from the stale read is
+   the classic lost-update (the admission-gauge double-release bug
+   class): the await let another coroutine change the state the write
+   clobbers.  The detector linearizes each lock body in execution order
+   (assignment values before targets, an await event after its operand)
+   and flags any ``<base>.<attr>`` store preceded by a load of the same
+   attribute with an ``await`` in between.  ``x.n += 1`` (AugAssign)
+   re-reads at the write and is NOT flagged.
+
+Heuristic by design: it reasons per-function and lexically.  It proves
+nothing — it just makes the two known-fatal shapes impossible to commit
+silently.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Tuple
+
+from repro.analysis.engine import FileContext, Finding, Rule
+
+#: Calls that mutate farm/flush accounting and must hold the lock.
+LOCKED_CALLS = frozenset({"absorb", "_commit", "_resolve"})
+
+_Event = Tuple[str, object, ast.AST]   # (kind, key, node)
+
+
+def _attr_key(node: ast.Attribute):
+    if isinstance(node.value, ast.Name):
+        return (node.value.id, node.attr)
+    return None
+
+
+def _linearize(stmts, events: List[_Event]) -> None:
+    """Append load/store/await events in (approximate) execution order."""
+    for stmt in stmts:
+        _visit(stmt, events)
+
+
+def _visit(node: ast.AST, events: List[_Event]) -> None:
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        return        # deferred execution: not part of this block's timeline
+    if isinstance(node, ast.Await):
+        _visit(node.value, events)
+        events.append(("await", None, node))
+        return
+    if isinstance(node, (ast.Assign, ast.AnnAssign)):
+        # value executes before the target is stored
+        if getattr(node, "value", None) is not None:
+            _visit(node.value, events)
+        targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+        for t in targets:
+            _visit(t, events)
+        return
+    if isinstance(node, ast.AugAssign):
+        # x.n += v re-reads x.n at the write: atomic between awaits, safe.
+        _visit(node.value, events)
+        if isinstance(node.target, ast.Attribute):
+            key = _attr_key(node.target)
+            if key is not None:
+                events.append(("load", key, node.target))
+        return
+    if isinstance(node, ast.Attribute):
+        key = _attr_key(node)
+        if key is not None:
+            kind = "store" if isinstance(node.ctx, ast.Store) else "load"
+            events.append((kind, key, node))
+        _visit(node.value, events)
+        return
+    for child in ast.iter_child_nodes(node):
+        _visit(child, events)
+
+
+def _mentions_lock(expr: ast.AST) -> bool:
+    try:
+        return "lock" in ast.unparse(expr).lower()
+    except (ValueError, RecursionError):   # pathological/deep tree
+        return False
+
+
+class LockAwaitRaceRule(Rule):
+    name = "lock-await-race"
+    doc = ("flush-mutating calls must hold the single-flight lock; no "
+           "load-await-store on shared attributes inside lock bodies")
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith("src/repro/serve/")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                yield from self._check_domination(ctx, node)
+            elif isinstance(node, ast.AsyncWith):
+                yield from self._check_lock_body(ctx, node)
+
+    def _check_domination(self, ctx, call: ast.Call):
+        f = call.func
+        name = f.attr if isinstance(f, ast.Attribute) else (
+            f.id if isinstance(f, ast.Name) else "")
+        if name not in LOCKED_CALLS:
+            return
+        fn = ctx.enclosing_function(call)
+        if not isinstance(fn, ast.AsyncFunctionDef):
+            return
+        for anc in ctx.ancestors(call):
+            if isinstance(anc, ast.AsyncWith) and any(
+                    _mentions_lock(item.context_expr) for item in anc.items):
+                return
+        yield self.finding(
+            ctx, call,
+            f"{name}() mutates flush accounting but is not under `async "
+            f"with <single-flight lock>`: two coroutines can interleave "
+            f"absorb/commit/resolve against one farm")
+
+    def _check_lock_body(self, ctx, node: ast.AsyncWith):
+        if not any(_mentions_lock(item.context_expr) for item in node.items):
+            return
+        events: List[_Event] = []
+        _linearize(node.body, events)
+        loaded = {}          # key -> earliest load index pre-latest-await
+        last_await = -1
+        flagged = set()
+        for i, (kind, key, n) in enumerate(events):
+            if kind == "await":
+                last_await = i
+            elif kind == "load":
+                loaded.setdefault(key, i)
+            elif kind == "store":
+                first_load = loaded.get(key)
+                if (first_load is not None and first_load < last_await
+                        and key not in flagged):
+                    flagged.add(key)
+                    base, attr = key
+                    yield self.finding(
+                        ctx, n,
+                        f"{base}.{attr} stored after an await that follows "
+                        f"a load of the same attribute: the awaited-out "
+                        f"coroutine may have changed it (lost update); "
+                        f"re-read after the await or use an atomic "
+                        f"augmented assignment")

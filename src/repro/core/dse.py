@@ -367,7 +367,7 @@ class GangCostModel:
 
     @classmethod
     def fit(cls, c: Candidate, *, backend: str = "auto", n_cores: int = 3,
-            reps: int = 3) -> "GangCostModel":
+            reps: int = 3, clock=None) -> "GangCostModel":
         """Calibrate (launch_overhead_cycles, cell_overhead_cycles,
         stacked_step_scale, sec_per_cycle) from real launches of
         candidate ``c`` — the paper's estimate-then-validate loop applied
@@ -382,16 +382,19 @@ class GangCostModel:
         so  cell_sec = t3 - t1,  step_sec = (t2 - t3) / steps,
         launch_sec = t1 - cell_sec - steps * step_sec, t4 gives the
         stacked-sweep scale and t5 - t4 the per-row freeze cost.  Runs
-        5 + 5*reps kernel launches.
+        5 + 5*reps kernel launches.  ``clock`` injects the timer
+        (``repro.clock.Clock``); the default ``SystemClock`` measures
+        real wall time.
         """
         import dataclasses as _dc
-        import time
 
         import jax
         import jax.numpy as jnp
 
+        from repro.clock import SystemClock
         from repro.kernels import ops  # lazy: keep dse importable alone
 
+        clock = clock or SystemClock()
         base = cls()
         rng = np.random.default_rng(0)
         dtype = jnp.dtype(c.dtype_name)
@@ -408,12 +411,12 @@ class GangCostModel:
             fn()                                   # compile
             ts = []
             for _ in range(reps):
-                t0 = time.perf_counter()
+                t0 = clock.now()
                 out = fn()
                 jax.tree_util.tree_map(
                     lambda a: a.block_until_ready()
                     if hasattr(a, "block_until_ready") else a, out)
-                ts.append(time.perf_counter() - t0)
+                ts.append(clock.now() - t0)
             ts.sort()
             return ts[len(ts) // 2]
 

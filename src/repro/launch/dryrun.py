@@ -18,12 +18,13 @@ import dataclasses       # noqa: E402
 import json              # noqa: E402
 import pathlib           # noqa: E402
 import re                # noqa: E402
-import time              # noqa: E402
 import traceback         # noqa: E402
 
 import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro.atomicio import atomic_write_text  # noqa: E402
+from repro.clock import SystemClock  # noqa: E402
 from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shapes_for  # noqa: E402
 from repro.configs.registry import ALIASES, ARCH_IDS, get_config  # noqa: E402
 from repro.distributed.sharding import (MeshSpec, make_shard_fn, named,  # noqa: E402
@@ -169,12 +170,15 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
-             out_dir: str = "results/dryrun", **build_kw):
+             out_dir: str = "results/dryrun", clock=None, **build_kw):
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     n_dev = mesh.size
-    t0 = time.time()
+    # Durations, not timestamps: a wall clock (time.time) can step under
+    # NTP mid-compile; the injected Clock's now() is monotonic.
+    clock = clock or SystemClock()
+    t0 = clock.now()
     record = {
         "arch": cfg.name, "shape": shape_name, "mesh": mesh_kind,
         "devices": n_dev, "status": "error",
@@ -186,9 +190,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         with mesh:
             jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
             lowered = jitted.lower(*args)
-            t_lower = time.time()
+            t_lower = clock.now()
             compiled = lowered.compile()
-            t_compile = time.time()
+            t_compile = clock.now()
 
             try:
                 mem = compiled.memory_analysis()
@@ -198,7 +202,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                         "temp_size_in_bytes", "generated_code_size_in_bytes",
                         "alias_size_in_bytes")
                     if hasattr(mem, k)}
-            except Exception as e:  # CPU backend may not implement all fields
+            # repro: allow[broad-except] reason=XLA memory_analysis raises backend-specific types (CPU lacks fields); the error is recorded in the cell, not dropped
+            except Exception as e:
                 record["memory_analysis"] = {"error": str(e)}
 
             try:
@@ -210,6 +215,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                     if isinstance(v, (int, float)) and (
                         k in ("flops", "transcendentals", "bytes accessed")
                         or k.startswith("bytes accessed"))}
+            # repro: allow[broad-except] reason=XLA cost_analysis raises backend-specific types; the error is recorded in the cell, not dropped
             except Exception as e:
                 record["cost_analysis"] = {"error": str(e)}
 
@@ -227,17 +233,18 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         record["status"] = "ok"
         record["lower_s"] = round(t_lower - t0, 2)
         record["compile_s"] = round(t_compile - t_lower, 2)
+    # repro: allow[broad-except] reason=sweep isolation: any one cell failure (OOM, lowering bug) is recorded with its traceback and the remaining cells still run
     except Exception as e:
         record["error"] = f"{type(e).__name__}: {e}"
         record["traceback"] = traceback.format_exc()[-4000:]
-    record["total_s"] = round(time.time() - t0, 2)
+    record["total_s"] = round(clock.now() - t0, 2)
 
     out = pathlib.Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
     tag = "_".join([cfg.name, shape_name, mesh_kind] +
                    [f"{k}-{v}" for k, v in sorted(build_kw.items())
                     if v or v is False])
-    (out / f"{tag}.json").write_text(json.dumps(record, indent=2))
+    atomic_write_text(out / f"{tag}.json", json.dumps(record, indent=2))
     status = record["status"]
     err = ("" if status == "ok" else " :: " + record.get("error", ""))
     print(f"[dryrun] {tag}: {status} ({record['total_s']}s){err}", flush=True)

@@ -23,6 +23,8 @@ import json
 import pathlib
 from typing import Dict, List, Optional
 
+from repro.atomicio import atomic_write_text
+
 PEAK_FLOPS = 197e12        # bf16 per chip
 HBM_BW = 819e9             # bytes/s per chip
 LINK_BW = 50e9             # bytes/s per ICI link
@@ -125,7 +127,7 @@ def main():
     args = ap.parse_args()
     rows = load_all(args.dir)
     if args.json_out:
-        pathlib.Path(args.json_out).write_text(json.dumps(rows, indent=2))
+        atomic_write_text(args.json_out, json.dumps(rows, indent=2))
     print(to_markdown(rows, args.mesh))
     worst = [r for r in rows if r["mesh"] == args.mesh]
     worst.sort(key=lambda r: r["roofline_frac"])

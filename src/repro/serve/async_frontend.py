@@ -451,6 +451,7 @@ class AsyncOscillatorFarm:
         if self._queue:
             try:
                 await self._flush_cycle()
+            # repro: allow[broad-except] reason=record-and-reraise: any flush failure must land in flush_errors exactly like the background path before propagating to this caller
             except Exception as e:
                 self.flush_errors.append(e)
                 raise
@@ -645,6 +646,7 @@ class AsyncOscillatorFarm:
                     launch()
                 self._resolve(batch, owed, fifo)
                 if self.journal is not None:
+                    # repro: allow[async-blocking] reason=durability ordering: the fsync'd flush record must exist before the next commit can run; one bounded fsync per flush, serialized under the single-flight lock
                     self.journal.record_flush(self.farm)
             except asyncio.CancelledError:
                 # aclose() mid-launch: the executor finishes the launch
@@ -662,6 +664,7 @@ class AsyncOscillatorFarm:
                     else:
                         f.cancel()
                 raise
+            # repro: allow[broad-except] reason=futures must carry ANY launch/accounting failure (reraised after) or admitted tenants block forever
             except Exception as e:
                 # Fail loudly, never hang: every batched future still
                 # pending carries the error — including when the
@@ -682,6 +685,7 @@ class AsyncOscillatorFarm:
             if self._due():
                 try:
                     await self._flush_cycle()
+                # repro: allow[broad-except] reason=the flusher task must survive any flush failure (error kept in flush_errors and on the batch futures); only aclose() may end it
                 except Exception as e:     # noqa: BLE001 - kept, not lost
                     self.flush_errors.append(e)
                 continue

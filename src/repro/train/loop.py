@@ -15,12 +15,12 @@ from __future__ import annotations
 
 import dataclasses
 import signal
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
 
+from repro.clock import Clock, SystemClock
 from repro.train import checkpoint as ckpt
 
 PyTree = Any
@@ -47,7 +47,12 @@ class LoopResult:
 
 def run(state: PyTree, train_step: Callable, batch_at: Callable[[int], Dict],
         loop_cfg: LoopConfig, put_batch: Optional[Callable] = None,
-        log_fn: Callable[[str], None] = print) -> LoopResult:
+        log_fn: Callable[[str], None] = print,
+        clock: Optional[Clock] = None) -> LoopResult:
+    # The straggler watchdog compares step durations, so the timer must be
+    # monotonic; injecting a FakeClock makes watchdog behavior testable
+    # without real multi-second steps.
+    clock = clock or SystemClock()
     resumed_from = None
     if loop_cfg.ckpt_dir:
         latest = ckpt.latest_step(loop_cfg.ckpt_dir)
@@ -76,13 +81,13 @@ def run(state: PyTree, train_step: Callable, batch_at: Callable[[int], Dict],
 
     try:
         for step in range(start, loop_cfg.total_steps):
-            t0 = time.perf_counter()
+            t0 = clock.now()
             batch = batch_at(step)
             if put_batch is not None:
                 batch = put_batch(batch)
             state, metrics = train_step(state, batch)
             jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
+            dt = clock.now() - t0
 
             if step_times:
                 med = float(np.median(step_times[-20:]))

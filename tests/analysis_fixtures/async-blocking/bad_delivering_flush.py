@@ -1,0 +1,11 @@
+# lint-as: src/repro/serve/fixture.py
+"""BAD: delivering gang flush + sync draw on the loop thread."""
+
+
+class Frontend:
+    async def flush_cycle(self):
+        out = self.farm.flush()        # gang launch runs on the loop
+        return out
+
+    async def draw_words(self, core, client, n):
+        return self.farm.draw_sync(core, client, n)   # deadlock

@@ -1,0 +1,8 @@
+# lint-as: src/repro/serve/fixture.py
+"""BAD: front-end submit() from sync code — the foreign-thread queue
+race (PR 6 S4 bug class): asyncio futures and the request queue are
+loop-thread-only."""
+
+
+def feed(frontend, core, client, n):
+    return frontend.submit(core, client, n)

@@ -1,0 +1,12 @@
+# lint-as: src/repro/serve/fixture.py
+"""BAD: disk barrier + journal append on the event loop thread.
+
+The historical shape: the journal's fsync-backed append ran inline in
+the flush coroutine, stalling ingress/cancellation for the fsync."""
+import os
+
+
+class Flusher:
+    async def flush_cycle(self):
+        os.fsync(self.journal_fd)
+        self.journal.record_flush(self.farm)

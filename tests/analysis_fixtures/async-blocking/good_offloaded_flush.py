@@ -1,0 +1,13 @@
+# lint-as: src/repro/serve/fixture.py
+"""GOOD: launch offloaded to the executor; delivery pass is launch-free."""
+import functools
+
+
+class Frontend:
+    async def flush_cycle(self):
+        launch = functools.partial(self.farm.flush, deliver=False)
+        await self.loop.run_in_executor(self.executor, launch)
+        self.farm.flush(deliver=False)
+
+    def launch_later(self, fn):
+        return self.executor.submit(fn)     # executor submit is sync-safe

@@ -1,0 +1,16 @@
+# lint-as: src/repro/launch/fixture.py
+"""BAD: broad catches with no reason — AttributeError-level bugs vanish."""
+
+
+def load(path):
+    try:
+        return path.read_text()
+    except Exception:
+        return None
+
+
+def probe(fn):
+    try:
+        fn()
+    except:  # noqa: E722
+        pass

@@ -1,0 +1,19 @@
+# lint-as: src/repro/launch/fixture.py
+"""GOOD: narrowed to expected exceptions, or broad with a stated reason
+and a place the error is kept."""
+
+
+def load(path):
+    try:
+        return path.read_text()
+    except (OSError, UnicodeDecodeError):
+        return None
+
+
+def sweep(cells, errors):
+    for cell in cells:
+        try:
+            cell()
+        # repro: allow[broad-except] reason=sweep isolation: one cell failure is recorded in errors and the remaining cells still run
+        except Exception as e:
+            errors.append(e)

@@ -1,0 +1,16 @@
+# lint-as: src/repro/train/fixture.py
+"""BAD: raw time reads — the PR-3 training-loop timer bug class.
+
+Wall-clock timers dodge FakeClock injection (untestable deadlines) and
+time.time() can step under NTP mid-measurement."""
+import time
+
+
+def run_step(step_fn, batch):
+    t0 = time.perf_counter()
+    out = step_fn(batch)
+    return out, time.perf_counter() - t0
+
+
+def wall_stamp():
+    return time.time()

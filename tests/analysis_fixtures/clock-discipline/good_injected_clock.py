@@ -1,0 +1,10 @@
+# lint-as: src/repro/train/fixture.py
+"""GOOD: the same timer routed through an injected Clock."""
+from repro.clock import Clock, SystemClock
+
+
+def run_step(step_fn, batch, clock: Clock = None):
+    clock = clock or SystemClock()
+    t0 = clock.now()
+    out = step_fn(batch)
+    return out, clock.now() - t0

@@ -1,0 +1,14 @@
+# lint-as: results/generated_cores/fixture/__init__.py
+"""BAD: host-side fold instead of the fused launch — not bit-compatible
+with gang serving (and word_offset is accepted but never forwarded)."""
+import numpy as np
+
+
+def generate(x0, n_steps):
+    return np.zeros((n_steps, len(x0)))
+
+
+def generate_bits(x0, n_steps, word_offset=0, *, backend="auto"):
+    traj = generate(x0, n_steps)
+    words = np.asarray(traj, np.uint32)
+    return words, traj[-1]

@@ -1,0 +1,13 @@
+# lint-as: results/generated_cores/fixture/__init__.py
+"""BAD: generate_bits without word_offset — chunked serving cannot
+resume the word sequence; tenant streams diverge at the first flush
+boundary."""
+from repro.kernels import ops
+
+
+def params():
+    return {}
+
+
+def generate_bits(x0, n_steps, *, backend="auto"):
+    return ops.chaotic_bits(params(), x0, n_steps, 0, backend=backend)

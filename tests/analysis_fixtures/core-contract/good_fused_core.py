@@ -1,0 +1,18 @@
+# lint-as: results/generated_cores/fixture/__init__.py
+"""GOOD: the codegen template shape — fused ops.chaotic_bits with
+word_offset forwarded and (words, final_state) returned."""
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+DTYPE = jnp.float32
+
+
+def params():
+    return {}
+
+
+def generate_bits(x0, n_steps, word_offset=0, *, backend="auto"):
+    return ops.chaotic_bits(
+        params(), jnp.asarray(x0, DTYPE), n_steps, word_offset,
+        backend=backend)

@@ -1,0 +1,13 @@
+# lint-as: src/repro/core/fixture.py
+"""BAD: direct writes to committed artifact paths — a crash or a
+concurrent reader sees a torn file."""
+import json
+
+
+def publish_solution(out_dir, record):
+    with open(out_dir / "solution.json", "w") as f:
+        json.dump(record, f)
+
+
+def publish_manifest(path, text):
+    path.write_text(text)

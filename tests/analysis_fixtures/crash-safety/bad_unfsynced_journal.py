@@ -1,0 +1,11 @@
+# lint-as: src/repro/serve/fixture_journal.py
+"""BAD: journal append without fsync — the flush record may still be in
+the page cache when the process dies, breaking crash recovery's
+record-exists-before-acted-on ordering."""
+import json
+
+
+class Journal:
+    def append(self, rec):
+        self._f.write(json.dumps(rec) + "\n")
+        self._f.flush()

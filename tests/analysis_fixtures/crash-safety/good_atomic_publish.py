@@ -1,0 +1,12 @@
+# lint-as: src/repro/core/fixture.py
+"""GOOD: tmp sibling + os.replace — readers see old-complete or
+new-complete, never torn."""
+import json
+import os
+
+
+def publish_solution(out_dir, record):
+    tmp = out_dir / ".solution.tmp"
+    with open(tmp, "w") as f:
+        json.dump(record, f)
+    os.replace(tmp, out_dir / "solution.json")

@@ -1,0 +1,12 @@
+# lint-as: src/repro/kernels/fixture.py
+"""BAD: the bf16 zero-entropy bug class — upcast before bitcast.
+
+astype(f32) zero-fills the low 16 mantissa bits of a half-width float,
+so the low-bit fold emits a counter hash with zero entropy."""
+import jax
+import jax.numpy as jnp
+
+
+def fold_low16(x):
+    u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    return u & jnp.uint32(0xFFFF)

@@ -1,0 +1,10 @@
+# lint-as: src/repro/kernels/fixture.py
+"""BAD: host-side ops inside a Pallas kernel body — numpy calls
+constant-fold host values into the traced program; print is a trace-time
+effect."""
+import numpy as np
+
+
+def fold_kernel(x_ref, o_ref):
+    print("tracing")
+    o_ref[...] = np.tanh(x_ref[...])

@@ -1,0 +1,19 @@
+# lint-as: src/repro/kernels/fixture.py
+"""GOOD: width-guarded bitcast (ops._fold_low16 shape) and a kernel body
+that sticks to jax-family ops + module-local helpers."""
+import jax
+import jax.numpy as jnp
+
+
+def fold_low16(x):
+    if x.dtype.itemsize == 2:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.uint32)
+        return u & jnp.uint32((1 << jnp.finfo(x.dtype).nmant) - 1)
+    else:
+        u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+        return u & jnp.uint32(0xFFFF)
+
+
+def bits_kernel(x_ref, words_ref):
+    folded = fold_low16(x_ref[...])
+    words_ref[...] = jnp.asarray(folded, jnp.uint32)

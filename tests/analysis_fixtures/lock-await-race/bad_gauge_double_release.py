@@ -1,0 +1,13 @@
+# lint-as: src/repro/serve/fixture.py
+"""BAD: load-await-store under the lock — the gauge lost-update shape.
+
+Between the load of ``self.free`` and the store, the await lets another
+coroutine release rows too; the store clobbers its update."""
+
+
+class Gauge:
+    async def release_rows(self, n):
+        async with self._lock:
+            free = self.free
+            await self._notify_waiters()
+            self.free = free + n

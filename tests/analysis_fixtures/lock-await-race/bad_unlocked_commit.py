@@ -1,0 +1,15 @@
+# lint-as: src/repro/serve/fixture.py
+"""BAD: flush-mutating phases outside the single-flight lock.
+
+Two coroutines entering flush_cycle interleave commit/absorb/resolve
+against one farm and corrupt word accounting."""
+
+
+class Frontend:
+    async def flush_cycle(self):
+        batch = self._commit()
+        await self._launch()
+        self._resolve(batch)
+
+    async def absorb_words(self, group, words):
+        self.farm.absorb(group, words)

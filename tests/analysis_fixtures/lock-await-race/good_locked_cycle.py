@@ -1,0 +1,16 @@
+# lint-as: src/repro/serve/fixture.py
+"""GOOD: mutating phases under the lock; await-crossing updates either
+re-read after the await (fresh store) or use augmented assignment."""
+
+
+class Frontend:
+    async def flush_cycle(self):
+        async with self._flush_lock:
+            batch = self._commit()
+            self._inflight = True
+            try:
+                await self._launch()
+                self._resolve(batch)
+                self.flushes += 1
+            finally:
+                self._inflight = False

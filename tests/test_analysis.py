@@ -1,0 +1,175 @@
+"""Tests for the invariant linter (repro.analysis).
+
+Three layers:
+  * the fixtures corpus — one directory per rule, ``bad_*`` files
+    reintroducing historical bug classes (each must be caught by exactly
+    that rule) and ``good_*`` files with the blessed shape (must lint
+    totally clean);
+  * the suppression/baseline semantics (reason required, stale allows
+    reported, subset-only gate);
+  * the self-run — the repo's own tree lints clean under the committed
+    baseline, which is what the CI gate enforces.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import analyze_text, check_baseline, run_analysis
+from repro.analysis.engine import (BASELINE_NAME, baseline_from_report,
+                                   repo_root)
+
+FIXTURES = pathlib.Path(__file__).parent / "analysis_fixtures"
+
+
+def lint_fixture(path: pathlib.Path):
+    text = path.read_text()
+    first = text.splitlines()[0]
+    assert first.startswith("# lint-as: "), f"{path} missing lint-as header"
+    rel = first.split("# lint-as: ", 1)[1].strip()
+    return analyze_text(rel, text)
+
+
+def fixture_cases(kind):
+    for rule_dir in sorted(FIXTURES.iterdir()):
+        for f in sorted(rule_dir.glob(f"{kind}_*.py")):
+            yield pytest.param(rule_dir.name, f, id=f"{rule_dir.name}/{f.name}")
+
+
+@pytest.mark.parametrize("rule,path", fixture_cases("bad"))
+def test_bad_fixture_is_caught_by_its_rule(rule, path):
+    report = lint_fixture(path)
+    rules_hit = {f.rule for f in report.findings}
+    assert rule in rules_hit, (
+        f"{path.name} should trip [{rule}], got {sorted(rules_hit)}:\n"
+        + "\n".join(f"  {f.line}: [{f.rule}] {f.message}"
+                    for f in report.findings))
+
+
+@pytest.mark.parametrize("rule,path", fixture_cases("good"))
+def test_good_fixture_lints_clean(rule, path):
+    report = lint_fixture(path)
+    assert not report.findings, (
+        f"{path.name} should be clean:\n"
+        + "\n".join(f"  {f.line}: [{f.rule}] {f.message}"
+                    for f in report.findings))
+
+
+def test_every_rule_has_bad_and_good_fixtures():
+    from repro.analysis.rules import all_rules
+    for rule in all_rules():
+        d = FIXTURES / rule.name
+        assert list(d.glob("bad_*.py")), f"no bad fixture for {rule.name}"
+        assert list(d.glob("good_*.py")), f"no good fixture for {rule.name}"
+
+
+# -- suppression semantics ---------------------------------------------------
+
+BROAD = """\
+def f(x):
+    try:
+        return x()
+    {allow}
+    except Exception:
+        return None
+"""
+
+
+def test_suppression_with_reason_suppresses():
+    src = BROAD.format(
+        allow="# repro: allow[broad-except] reason=errors land in the cell")
+    rep = analyze_text("src/repro/launch/x.py", src)
+    assert not rep.findings
+    assert [f.rule for f in rep.suppressed] == ["broad-except"]
+    assert rep.suppressions[0].used
+
+
+def test_reasonless_allow_does_not_suppress():
+    src = BROAD.format(allow="# repro: allow[broad-except]")
+    rep = analyze_text("src/repro/launch/x.py", src)
+    rules = sorted(f.rule for f in rep.findings)
+    assert rules == ["broad-except", "suppression-hygiene"]
+    assert not rep.suppressed
+
+
+def test_unused_suppression_is_reported():
+    src = ("# repro: allow[broad-except] reason=nothing here needs it\n"
+           "X = 1\n")
+    rep = analyze_text("src/repro/launch/x.py", src)
+    assert [f.rule for f in rep.findings] == ["unused-suppression"]
+
+
+def test_allow_in_docstring_is_not_a_suppression():
+    src = ('"""Docs: write # repro: allow[broad-except] reason=... here."""\n'
+           "X = 1\n")
+    rep = analyze_text("src/repro/launch/x.py", src)
+    assert not rep.findings and not rep.suppressions
+
+
+def test_allow_covers_own_line_and_next_only():
+    src = ("# repro: allow[clock-discipline] reason=fixture exercises the gap\n"
+           "X = 1\n"
+           "import time\n")
+    rep = analyze_text("src/repro/train/x.py", src)
+    # two lines below the comment: NOT covered
+    assert {"clock-discipline", "unused-suppression"} <= {
+        f.rule for f in rep.findings}
+
+
+# -- baseline gate -----------------------------------------------------------
+
+def test_baseline_subset_gate():
+    dirty = analyze_text("src/repro/train/x.py", "import time\n")
+    base = baseline_from_report(dirty)
+    errors, warnings = check_baseline(dirty, base)
+    assert not errors and not warnings
+    # a second finding in the same file exceeds the baselined count
+    dirtier = analyze_text("src/repro/train/x.py",
+                           "import time\nt = time.time()\n")
+    errors, _ = check_baseline(dirtier, base)
+    assert errors and "clock-discipline" in errors[0]
+    # and against a clean tree the stale baseline entry is a warning
+    clean = analyze_text("src/repro/train/x.py", "X = 1\n")
+    errors, warnings = check_baseline(clean, base)
+    assert not errors and warnings
+
+
+def test_baseline_flags_new_suppressions():
+    clean = analyze_text("src/repro/train/x.py", "X = 1\n")
+    base = baseline_from_report(clean)
+    sup = analyze_text(
+        "src/repro/train/x.py",
+        "# repro: allow[clock-discipline] reason=testing the inventory\n"
+        "import time\n")
+    errors, _ = check_baseline(sup, base)
+    assert errors and "allow[clock-discipline]" in errors[0]
+
+
+# -- the repo itself ---------------------------------------------------------
+
+def test_repo_lints_clean():
+    report = run_analysis(repo_root())
+    assert not report.findings, "\n".join(
+        f"{f.path}:{f.line}: [{f.rule}] {f.message}"
+        for f in report.findings)
+    assert all(s.reason for s in report.suppressions)
+
+
+def test_repo_matches_committed_baseline():
+    root = repo_root()
+    baseline = json.loads((root / BASELINE_NAME).read_text())
+    errors, warnings = check_baseline(run_analysis(root), baseline)
+    assert not errors, errors
+    assert not warnings, warnings
+
+
+def test_cli_exits_zero_on_clean_tree():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--format=json"],
+        capture_output=True, text=True, cwd=repo_root(),
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(proc.stdout)
+    assert payload["ok"] and not payload["findings"]
