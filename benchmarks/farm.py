@@ -43,6 +43,12 @@ Sections:
   real launches first, so decisions reflect this machine's launch
   overhead.
 
+* ``sharded`` — device-sharded gang launches: the gang group's coalesced
+  operating point at every available forced host device count (the CI
+  sharded leg forces 4 via ``XLA_FLAGS``), gated on bit-identity to the
+  1-device gang path, launches/flush invariance as devices scale, and
+  words/s scaling where the host has the CPUs to show it.
+
 All timed flushes separate warmup/compile from steady state: the first
 flush (XLA compiles here) is reported as ``ms_first_flush``, steady-state
 ``words_per_s`` starts after one further warm flush.  Delivered words are
@@ -135,13 +141,13 @@ def _compatible_group(p, lm, cm):
     return members, cand
 
 
-def _build_farm(group, cand, n_clients, gang, **farm_kw):
+def _build_farm(group, cand, n_clients, gang, mesh=None, **farm_kw):
     farm = OscillatorFarm(gang=gang, **farm_kw)
     for name in group:
         farm.add_core(name, default_params(system=name), config=cand,
                       dtype=jnp.dtype(cand.dtype_name),
                       lanes_per_client=LANES_PER_CLIENT,
-                      backend="pallas_interpret")
+                      backend="pallas_interpret", mesh=mesh)
         for j in range(n_clients):
             farm.register(name, f"c{j}", seed=100 + j)
     return farm
@@ -573,6 +579,109 @@ def _async_offload_section(n_streams, p, lm, cm, smoke):
     return result
 
 
+def _sharded_section(n_streams, p, lm, cm, smoke):
+    """One logical gang launch across every forced host device.
+
+    Runs the gang group's coalesced operating point at every available
+    device count in {1, 2, 4, 8} (1 = the plain unsharded gang path; the
+    CI sharded leg forces 4 via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``).  Three
+    invariants are recorded for the gate:
+
+    * **bit-identity** — delivered words at every device count equal the
+      1-device gang path, stream for stream (the sharded kernels' whole
+      contract);
+    * **launches/flush invariance** — sharding must not fragment the
+      logical launch: the farm pays the same launches per flush at every
+      device count;
+    * **scaling** — words/s at 4 devices vs 1.  Forced host devices
+      time-slice the physical cores, so the >= 2x bar arms only when the
+      host actually has >= 4 CPUs (``speedup_gate_armed`` records the
+      decision; the CI leg runs on such a host).
+
+    The fitted cross-device launch overhead (``GangCostModel.fit`` with
+    the largest mesh) is surfaced so planner decisions on a mesh are
+    auditable.
+    """
+    import os
+
+    import jax
+    from jax.sharding import Mesh
+
+    group, cand = _compatible_group(p, lm, cm)
+    n_clients = max(1, n_streams // LANES_PER_CLIENT)
+    avail = jax.device_count()
+    counts = [n for n in (1, 2, 4, 8) if n <= avail]
+    rows = 16                                  # the coalesced point
+    words = {name: rows * LANES_PER_CLIENT for name in group}
+    words_per_flush = len(group) * n_clients * rows * LANES_PER_CLIENT
+    n_iters = 3 if smoke else 9
+    host_cpus = os.cpu_count() or 1
+
+    def build(n_dev):
+        mesh = (None if n_dev == 1
+                else Mesh(np.array(jax.devices()[:n_dev]), ("data",)))
+        return _build_farm(group, cand, n_clients, True, mesh=mesh)
+
+    # --- bit-identity gate: every device count vs the 1-device path -------
+    outs = {}
+    gate_farms = {n: build(n) for n in counts}
+    for n, farm in gate_farms.items():
+        outs[n] = _flush_once(farm, group, n_clients, words)
+    bit_identical = True
+    for n in counts[1:]:
+        try:
+            _assert_bit_identical(outs[n], outs[1])
+        except AssertionError:
+            bit_identical = False
+    ganged = all(f.gang_launches > 0 for f in gate_farms.values())
+
+    # --- timing: identical traffic, interleaved across device counts ------
+    farms = {f"dev{n}": build(n) for n in counts}
+    timings = _interleaved_flushes(farms, group, n_clients, words,
+                                   n_iters, cold=False)
+    per_count = {}
+    for n in counts:
+        t = timings[f"dev{n}"]
+        per_count[str(n)] = dict(
+            t, words_per_s=words_per_flush / (t["ms_per_flush"] / 1e3))
+    launch_counts = {v["launches_per_flush"] for v in per_count.values()}
+
+    speedup = (per_count["4"]["words_per_s"] / per_count["1"]["words_per_s"]
+               if "4" in per_count else None)
+    armed = 4 in counts and host_cpus >= 4
+    result = {
+        "group": group,
+        "device_counts": counts,
+        "host_cpus": host_cpus,
+        "rows_per_client_flush": rows,
+        "words_per_flush": words_per_flush,
+        "bit_identical": bit_identical,
+        "ganged_on_mesh": ganged,
+        "per_device_count": per_count,
+        "launches_per_flush_invariant": len(launch_counts) == 1,
+        "speedup_4dev_vs_1dev": speedup,
+        "speedup_gate_armed": armed,
+    }
+    if not armed and speedup is not None:
+        result["speedup_gate_skip_reason"] = (
+            f"host has {host_cpus} CPUs: forced devices time-slice, "
+            f"words/s cannot scale")
+    if counts[-1] > 1:
+        mesh = Mesh(np.array(jax.devices()[:counts[-1]]), ("data",))
+        model = GangCostModel.fit(cand, backend="pallas_interpret",
+                                  mesh=mesh)
+        result["fitted_cross_dev_overhead_cycles"] = (
+            model.cross_dev_overhead_cycles)
+    emit("farm/sharded",
+         per_count[str(counts[-1])]["ms_per_flush"] * 1e3,
+         f"devices={counts};bit_identical={bit_identical};"
+         f"launches_invariant={result['launches_per_flush_invariant']};"
+         f"speedup_4v1={'n/a' if speedup is None else f'{speedup:.2f}x'};"
+         f"gate_armed={armed}")
+    return result
+
+
 def _planner_section(n_streams, p, lm, cm, smoke, profile=False):
     """Demand-shaped planner vs the PR 3 padded group-max gang policy.
 
@@ -682,6 +791,7 @@ def run_farm(n_streams: int = 256, n_steps: int = 1024, p: int = 1,
     async_ = _async_section(n_streams, p, lm, cm, smoke)
     async_offload = _async_offload_section(n_streams, p, lm, cm, smoke)
     planner = _planner_section(n_streams, p, lm, cm, smoke, profile=profile)
+    sharded = _sharded_section(n_streams, p, lm, cm, smoke)
     res = {"config": {"n_streams": n_streams, "n_steps": n_steps,
                       "pareto_p": p, "backend": "pallas_interpret",
                       "smoke": smoke},
@@ -689,7 +799,8 @@ def run_farm(n_streams: int = 256, n_steps: int = 1024, p: int = 1,
            "gang": gang,
            "async": async_,
            "async_offload": async_offload,
-           "planner": planner}
+           "planner": planner,
+           "sharded": sharded}
     if out_json:
         pathlib.Path(out_json).write_text(json.dumps(res, indent=2))
     return res
@@ -766,6 +877,33 @@ def planner_gate(res: dict) -> list[str]:
     return errors
 
 
+def sharded_gate(res: dict) -> list[str]:
+    """CI perf-smoke acceptance for device-sharded gang launches: words
+    at every device count must be bit-identical to the 1-device gang
+    path, the farm must actually gang on the mesh, launches/flush must
+    not fragment as devices scale, and (on hosts with the CPUs to show
+    it) 4 forced devices must deliver >= 2x the 1-device words/s."""
+    errors = []
+    s = res["sharded"]
+    if not s.get("bit_identical"):
+        errors.append("sharded words NOT bit-identical to the 1-device "
+                      "gang path")
+    if not s.get("ganged_on_mesh"):
+        errors.append("mesh-sharded farm fell back to solo launches "
+                      "(gang_launches == 0 at some device count)")
+    if not s.get("launches_per_flush_invariant"):
+        errors.append(
+            f"launches/flush varies with device count: "
+            f"{ {n: v['launches_per_flush'] for n, v in s['per_device_count'].items()} }")
+    if s.get("speedup_gate_armed"):
+        if s["speedup_4dev_vs_1dev"] < 2.0:
+            errors.append(
+                f"sharded scaling below bar: 4-device words/s is "
+                f"{s['speedup_4dev_vs_1dev']:.2f}x the 1-device path "
+                f"(bar: >= 2x on a >= 4-CPU host)")
+    return errors
+
+
 if __name__ == "__main__":
     import sys
     res = run_farm(smoke="--smoke" in sys.argv,
@@ -773,6 +911,7 @@ if __name__ == "__main__":
     errors = [f"PLANNER GATE FAIL: {e}" for e in planner_gate(res)]
     errors += [f"ASYNC GATE FAIL: {e}" for e in async_gate(res)]
     errors += [f"OFFLOAD GATE FAIL: {e}" for e in async_offload_gate(res)]
+    errors += [f"SHARDED GATE FAIL: {e}" for e in sharded_gate(res)]
     if errors:
         for e in errors:
             print(e, file=sys.stderr)
@@ -791,3 +930,11 @@ if __name__ == "__main__":
           f"({o['offload_p99_frac_of_launch']:.1%}; on-loop baseline "
           f"{o['on_loop']['ingress_p99_ms']:.1f} ms), "
           f"{o['backpressure']['rejected']} typed rejects under overload")
+    sh = res["sharded"]
+    sp = sh["speedup_4dev_vs_1dev"]
+    gate_state = ("armed" if sh["speedup_gate_armed"] else
+                  "disarmed: " + sh.get("speedup_gate_skip_reason",
+                                        "1 device"))
+    print(f"sharded gate OK: devices={sh['device_counts']}, "
+          f"bit-identical, launches/flush invariant, 4v1 speedup "
+          f"{'n/a' if sp is None else f'{sp:.2f}x'} (gate {gate_state})")

@@ -14,7 +14,9 @@ kernel-dtype              no entropy-zeroing astype-before-bitcast; Pallas
                           kernel bodies call only jax-family ops
 broad-except              except Exception/bare except needs a reason
 core-contract             generated cores draw through fused ops.chaotic_bits
-                          with word_offset + final-state plumbing
+                          with word_offset + final-state plumbing; serve/
+                          never wraps its own shard_map around a launch
+                          (sharding is owned by the gang path)
 ========================  ==================================================
 """
 from typing import List

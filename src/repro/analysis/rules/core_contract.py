@@ -14,6 +14,17 @@ silently diverge from the solo path after the first flush boundary.
 Checked per ``__init__.py``: a ``generate_bits`` function exists, takes
 a ``word_offset`` parameter, and returns the ``ops.chaotic_bits(...)``
 call directly with ``word_offset`` forwarded into it.
+
+The rule guards the serving layer's side of the same contract too:
+``src/repro/serve/`` must not wrap its own ``shard_map``.  Device
+sharding is owned by the launch stack — ``ops.chaotic_bits_gang(...,
+mesh=)`` / the sharded gang kernels and
+``distributed.sharding.shard_stream_pool`` — which carry the proven
+bit-identity and scalar-prefetch-slicing contracts
+(tests/test_sharded_gang.py).  A serve-layer ``shard_map`` would bypass
+the gang scheduler entirely: words from such a launch are outside every
+equivalence suite, the planner cannot cost it, and the compat key /
+plan caches would not know its topology.
 """
 from __future__ import annotations
 
@@ -31,13 +42,18 @@ def _params(fn: ast.FunctionDef):
 class CoreContractRule(Rule):
     name = "core-contract"
     doc = ("every generated core exposes generate_bits(word_offset=...) "
-           "returning the fused ops.chaotic_bits launch")
+           "returning the fused ops.chaotic_bits launch; serve/ never "
+           "wraps its own shard_map around one")
 
     def applies(self, rel: str) -> bool:
-        return (rel.startswith("results/generated_cores/")
-                and rel.endswith("__init__.py"))
+        return ((rel.startswith("results/generated_cores/")
+                 and rel.endswith("__init__.py"))
+                or rel.startswith("src/repro/serve/"))
 
     def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if ctx.rel.startswith("src/repro/serve/"):
+            yield from self._check_serve(ctx)
+            return
         fn: Optional[ast.FunctionDef] = None
         for node in ctx.tree.body:
             if isinstance(node, ast.FunctionDef) and node.name == "generate_bits":
@@ -78,3 +94,27 @@ class CoreContractRule(Rule):
             if isinstance(n, ast.Name) and n.id == "word_offset":
                 return True
         return False
+
+    _SERVE_MSG = (
+        "serve/ must not wrap its own shard_map: sharded launches route "
+        "through the gang path (ops.chaotic_bits_gang(..., mesh=) / "
+        "shard_stream_pool), whose bit-identity to the 1-device and solo "
+        "paths is proven — a direct shard_map bypasses the gang "
+        "scheduler, the cost model, and the topology-keyed plan caches")
+
+    def _check_serve(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom):
+                if ((node.module and "shard_map" in node.module)
+                        or any(a.name == "shard_map" for a in node.names)):
+                    yield self.finding(ctx, node, self._SERVE_MSG)
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    if "shard_map" in a.name:
+                        yield self.finding(ctx, node, self._SERVE_MSG)
+            elif isinstance(node, ast.Call):
+                f = node.func
+                name = (f.id if isinstance(f, ast.Name)
+                        else f.attr if isinstance(f, ast.Attribute) else "")
+                if name == "shard_map":
+                    yield self.finding(ctx, node, self._SERVE_MSG)

@@ -284,6 +284,13 @@ class GangCostModel:
     # Per-row cost of the ragged-stacked freeze (one mask compare + select
     # over the stacked state per word row); analytic default ~2 vreg ops.
     freeze_row_cycles: float = 4.0
+    # Extra dispatch cost per device beyond the first when a launch is
+    # shard_map'd across a mesh (collective setup, per-device program
+    # dispatch).  The compute/cell terms are counted on the *busiest
+    # device's shard* (``n_dev`` in launch_cycles/gang_cost/solo_cost), so
+    # this is the only term that grows with the mesh — ``fit(mesh=...)``
+    # measures it from a real sharded launch.
+    cross_dev_overhead_cycles: float = 10_000.0
     sec_per_cycle: Optional[float] = None
 
     def step_cycles(self, c: Candidate, stack: int = 1) -> float:
@@ -296,7 +303,7 @@ class GangCostModel:
         return max(compute, memory) * scale + _overhead_share(c)
 
     def launch_cycles(self, c: Candidate, rows_by_block: Sequence[int],
-                      *, stack: int = 1) -> float:
+                      *, stack: int = 1, n_dev: int = 1) -> float:
         """One launch computing ``rows_by_block[i]`` word rows in lane
         block ``i`` (2 oscillator steps per word row).
 
@@ -304,12 +311,27 @@ class GangCostModel:
         (every block iterates the launch's full time axis), so an
         early-out cell still pays its dispatch/DMA share — cell overhead
         counts the whole max(rows)-deep grid for every block.
+
+        ``n_dev > 1`` models the shard_map'd launch: lane blocks split
+        into contiguous runs of ``ceil(blocks/n_dev)`` per device, so the
+        step and cell terms follow the *busiest device's shard* (SPMD
+        wall time) and each extra device adds
+        ``cross_dev_overhead_cycles`` of dispatch.
         """
-        steps = 2.0 * float(sum(rows_by_block))
+        n_dev = max(1, int(n_dev))
         rows_per_cell = max(1, c.t_block // 2)
         t_cells = max(1, -(-int(max(rows_by_block)) // rows_per_cell))
-        cells = len(rows_by_block) * t_cells
+        blocks_local = -(-len(rows_by_block) // n_dev)
+        if n_dev > 1:
+            rb = list(rows_by_block)
+            steps = 2.0 * float(max(
+                sum(rb[d * blocks_local:(d + 1) * blocks_local])
+                for d in range(n_dev)))
+        else:
+            steps = 2.0 * float(sum(rows_by_block))
+        cells = blocks_local * t_cells
         return (self.launch_overhead_cycles
+                + self.cross_dev_overhead_cycles * (n_dev - 1)
                 + self.cell_overhead_cycles * cells
                 + steps * self.step_cycles(c, stack))
 
@@ -319,8 +341,8 @@ class GangCostModel:
 
     def gang_cost(self, c: Candidate, demands: Sequence[int],
                   blocks: Sequence[int], lanes: Sequence[int], *,
-                  layout: str, rows_by_block: Optional[Sequence[int]] = None
-                  ) -> float:
+                  layout: str, rows_by_block: Optional[Sequence[int]] = None,
+                  n_dev: int = 1) -> float:
         """Cost of one gang launch serving members with ``demands`` word
         rows (``blocks``/``lanes`` = per-member lane-block and live-lane
         counts).
@@ -335,11 +357,13 @@ class GangCostModel:
         dmax = max(demands)
         if layout == "stacked":
             cost = self.launch_cycles(c, [dmax] * blocks[0],
-                                      stack=len(demands))
+                                      stack=len(demands), n_dev=n_dev)
             # ragged freeze absorbs exactly the demand -> no overdraw, but
-            # pays the per-row freeze mask over the whole launch
+            # pays the per-row freeze mask over the whole launch (split
+            # across devices along the lane axis)
             if rows_by_block is not None:
-                cost += self.freeze_row_cycles * dmax * blocks[0]
+                cost += (self.freeze_row_cycles * dmax * blocks[0]
+                         / max(1, n_dev))
                 over = 0
             else:
                 over = sum((dmax - d) * l for d, l in zip(demands, lanes))
@@ -354,20 +378,23 @@ class GangCostModel:
                 per_member = [rows_by_block[int(s)] for s in starts]
             over = sum((r - d) * l
                        for r, d, l in zip(per_member, demands, lanes))
-            cost = self.launch_cycles(c, rows_by_block)
+            cost = self.launch_cycles(c, rows_by_block, n_dev=n_dev)
         return cost + self.buffer_cycles(max(0, over))
 
-    def solo_cost(self, c: Candidate, rows: int, blocks: int) -> float:
+    def solo_cost(self, c: Candidate, rows: int, blocks: int, *,
+                  n_dev: int = 1) -> float:
         """One per-core launch of ``rows`` word rows over ``blocks`` lane
-        blocks."""
-        return self.launch_cycles(c, [rows] * blocks)
+        blocks (``n_dev``: the pool's own shard_map'd launch when its
+        service sits on a mesh)."""
+        return self.launch_cycles(c, [rows] * blocks, n_dev=n_dev)
 
     def seconds(self, cycles: float) -> Optional[float]:
         return None if self.sec_per_cycle is None else cycles * self.sec_per_cycle
 
     @classmethod
     def fit(cls, c: Candidate, *, backend: str = "auto", n_cores: int = 3,
-            reps: int = 3, clock=None) -> "GangCostModel":
+            reps: int = 3, clock=None, mesh=None,
+            mesh_axis: str = "data") -> "GangCostModel":
         """Calibrate (launch_overhead_cycles, cell_overhead_cycles,
         stacked_step_scale, sec_per_cycle) from real launches of
         candidate ``c`` — the paper's estimate-then-validate loop applied
@@ -385,6 +412,16 @@ class GangCostModel:
         5 + 5*reps kernel launches.  ``clock`` injects the timer
         (``repro.clock.Clock``); the default ``SystemClock`` measures
         real wall time.
+
+        With a ``mesh`` (>1 device on ``mesh_axis``), one extra
+        measurement t6 — a lane-concat gang of one block per device,
+        shard_map'd across the mesh — calibrates
+        ``cross_dev_overhead_cycles``: each device does exactly t1's
+        per-shard work, so the residual over t1 split across the extra
+        devices is the per-device dispatch fee.  (On a host with fewer
+        physical CPUs than forced devices this honestly measures the
+        serialization penalty, steering the planner away from
+        over-sharding.)
         """
         import dataclasses as _dc
 
@@ -460,9 +497,23 @@ class GangCostModel:
                 backend=backend))
             freeze = float(np.clip((t5 - t4) / rows / spc,
                                    cls.freeze_row_cycles, 5e7))
+        cross = cls.cross_dev_overhead_cycles
+        if mesh is not None and int(mesh.shape[mesh_axis]) > 1:
+            n_dev = int(mesh.shape[mesh_axis])
+            plist = [mk_params() for _ in range(n_dev)]
+            gparams = {k: jnp.stack([p[k] for p in plist])
+                       for k in ("w1", "b1", "w2", "b2")}
+            xg = jnp.asarray(
+                rng.normal(0, .3, (n_dev * c.s_block, c.i_dim)), dtype)
+            cmap = np.arange(n_dev, dtype=np.int32)
+            t6 = timed(lambda: ops.chaotic_bits_gang(
+                gparams, xg, steps, core_map=cmap, config=c,
+                backend=backend, mesh=mesh, mesh_axis=mesh_axis))
+            cross = float(np.clip((t6 - t1) / (n_dev - 1) / spc, 0.0, 5e8))
         return cls(launch_overhead_cycles=overhead,
                    cell_overhead_cycles=cell_overhead,
                    stacked_step_scale=scale, freeze_row_cycles=freeze,
+                   cross_dev_overhead_cycles=cross,
                    sec_per_cycle=spc)
 
 

@@ -814,3 +814,182 @@ def chaotic_ann_gang_stacked_pallas(w1, b1, w2, b2, x0, word_offset=0,
     state = state.reshape(n_cores, i_pad, s_pad)[
         :, :i_dim, :s_total].transpose(0, 2, 1)
     return words, state
+
+
+# ---------------------------------------------------------------------------
+# Device-sharded gang launches: the same gang kernels, with the pooled
+# stream axis (and the per-block scalar-prefetch maps) partitioned across a
+# named mesh axis.  Weight slabs are replicated — the maxtext-style choice:
+# shard the batch-like axis, keep the (tiny) params everywhere.
+# ---------------------------------------------------------------------------
+
+
+def gang_partition_maps(core_map, row_map, *, n_dev: int, n_rows: int):
+    """Partition the per-block gang maps across ``n_dev`` devices.
+
+    Pads the block axis with DEAD blocks (core 0, zero row demand) until it
+    divides the device count, so every device owns the same number of
+    ``s_block``-lane blocks and scalar-prefetches its own contiguous slice
+    of the core-id and row maps.  Padding forces the launch ragged — dead
+    blocks must compute zero rows — and a ``row_map`` of ``n_rows`` per
+    real block reproduces the padded group-max launch exactly, so the
+    rounding is free.
+
+    Returns ``(core_map, row_map, pad_blocks)`` as numpy arrays.  Device
+    ``d`` consumes ``core_map[d * B:(d + 1) * B]`` with ``B = len(core_map)
+    // n_dev`` — exactly the contiguous slice the shard_map inside the
+    sharded kernels hands it.
+    """
+    cmap = np.asarray(core_map, np.int32)
+    n_blocks = cmap.shape[0]
+    pad = (-n_blocks) % n_dev
+    rmap = None if row_map is None else np.asarray(row_map, np.int32)
+    if pad == 0:
+        return cmap, rmap, 0
+    if rmap is None:
+        rmap = np.full(n_blocks, n_rows, np.int32)
+    return (np.concatenate([cmap, np.zeros(pad, np.int32)]),
+            np.concatenate([rmap, np.zeros(pad, np.int32)]), pad)
+
+
+def chaotic_ann_gang_bits_sharded(w1, b1, w2, b2, x0, core_map,
+                                  word_offset=0, row_map=None, *, mesh,
+                                  mesh_axis: str = "data", n_steps: int,
+                                  s_block: int = 256, t_block: int = 128,
+                                  unroll: int = 1, activation: str = "relu",
+                                  compute_unit: str = "vpu",
+                                  interpret: bool = False):
+    """Lane-concat gang launch partitioned across ``mesh[mesh_axis]``.
+
+    Weight slabs are replicated (passed through with ``P()`` specs — NOT
+    closed over, which would bake them into the trace as constants and
+    defeat the jit cache, recompiling every flush); the pooled stream
+    axis and BOTH scalar-prefetch maps shard on the named axis, so each
+    device runs the single-device gang kernel on its own contiguous run
+    of lane blocks with its *own slice* of the core-id/row maps.  Lanes
+    evolve independently and word whitening is indexed by absolute
+    per-lane row offsets, so the result is bit-identical to the
+    unsharded gang launch (and hence to per-core launches) at any device
+    count.  The shard_map'd callable is cached per (mesh, static config)
+    and jitted, so steady-state flushes reuse one compiled program per
+    launch shape.
+
+    The block axis must divide the device count — pad the maps (and the
+    pool) with ``gang_partition_maps`` dead blocks first.
+    """
+    n_dev = int(mesh.shape[mesh_axis])
+    cmap = jnp.asarray(core_map, jnp.int32)
+    n_blocks = int(cmap.shape[0])
+    if n_blocks % n_dev:
+        raise ValueError(
+            f"{n_blocks} lane blocks do not divide {n_dev} devices on mesh "
+            f"axis {mesh_axis!r}; pad the maps with gang_partition_maps")
+    s_total = x0.shape[0]
+    off = jnp.broadcast_to(jnp.asarray(word_offset, jnp.uint32), (s_total,))
+
+    args = [w1, b1, w2, b2, x0, off, cmap]
+    if row_map is not None:
+        args.append(jnp.asarray(row_map, jnp.int32))
+    fn = _sharded_gang_bits_fn(
+        mesh, mesh_axis, row_map is not None, n_steps, s_block, t_block,
+        unroll, activation, compute_unit, interpret)
+    return fn(*args)
+
+
+@functools.lru_cache(maxsize=128)
+def _sharded_gang_bits_fn(mesh, mesh_axis, has_rmap, n_steps, s_block,
+                          t_block, unroll, activation, compute_unit,
+                          interpret):
+    """Jitted shard_map'd lane-concat gang launch, cached per (mesh,
+    static kernel config).  Weights/pool/maps are traced arguments, so
+    jit retraces only when a launch SHAPE is new — per-flush weight or
+    demand values hit the compiled program."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    kw = dict(n_steps=n_steps, s_block=s_block, t_block=t_block,
+              unroll=unroll, activation=activation,
+              compute_unit=compute_unit, interpret=interpret)
+    in_specs = [P(), P(), P(), P(),
+                P(mesh_axis, None), P(mesh_axis), P(mesh_axis)]
+    if has_rmap:
+        in_specs.append(P(mesh_axis))
+
+        def local(w1, b1, w2, b2, x_l, off_l, cmap_l, rmap_l):
+            return chaotic_ann_gang_bits_pallas(
+                w1, b1, w2, b2, x_l, cmap_l, off_l, rmap_l, **kw)
+    else:
+        def local(w1, b1, w2, b2, x_l, off_l, cmap_l):
+            return chaotic_ann_gang_bits_pallas(
+                w1, b1, w2, b2, x_l, cmap_l, off_l, None, **kw)
+    return jax.jit(shard_map(
+        local, mesh=mesh, in_specs=tuple(in_specs),
+        out_specs=(P(None, mesh_axis), P(mesh_axis, None)),
+        check_rep=False))
+
+
+def chaotic_ann_gang_stacked_sharded(w1, b1, w2, b2, x0, word_offset=0,
+                                     row_map=None, *, mesh,
+                                     mesh_axis: str = "data", n_steps: int,
+                                     s_block: int = 256, t_block: int = 128,
+                                     unroll: int = 1,
+                                     activation: str = "relu",
+                                     compute_unit: str = "vpu",
+                                     interpret: bool = False):
+    """Sublane-stacked gang launch partitioned across ``mesh[mesh_axis]``.
+
+    The group's equal-size pools shard on the STREAM axis (every device
+    keeps all C cores stacked on sublanes, with 1/n_dev of each pool's
+    lanes); the (C,) row map is replicated since a core's freeze row is
+    lane-independent.  Weight tables are replicated as traced arguments
+    (``P()`` specs), and the shard_map'd callable is cached per (mesh,
+    static config) + jitted — same no-recompile-per-flush discipline as
+    the lane-concat variant.  The pool size must divide the device
+    count; ragged pool sizes take the lane-concat sharded path instead.
+    """
+    n_dev = int(mesh.shape[mesh_axis])
+    n_cores, s_total = x0.shape[0], x0.shape[1]
+    if s_total % n_dev:
+        raise ValueError(
+            f"stacked pool of {s_total} lanes does not divide {n_dev} "
+            f"devices on mesh axis {mesh_axis!r}")
+    off = jnp.broadcast_to(jnp.asarray(word_offset, jnp.uint32),
+                           (n_cores, s_total))
+
+    args = [w1, b1, w2, b2, x0, off]
+    if row_map is not None:
+        args.append(jnp.asarray(row_map, jnp.int32))
+    fn = _sharded_gang_stacked_fn(
+        mesh, mesh_axis, row_map is not None, n_steps, s_block, t_block,
+        unroll, activation, compute_unit, interpret)
+    return fn(*args)
+
+
+@functools.lru_cache(maxsize=128)
+def _sharded_gang_stacked_fn(mesh, mesh_axis, has_rmap, n_steps, s_block,
+                             t_block, unroll, activation, compute_unit,
+                             interpret):
+    """Jitted shard_map'd sublane-stacked gang launch, cached per (mesh,
+    static kernel config) — see ``_sharded_gang_bits_fn``."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    kw = dict(n_steps=n_steps, s_block=s_block, t_block=t_block,
+              unroll=unroll, activation=activation,
+              compute_unit=compute_unit, interpret=interpret)
+    in_specs = [P(), P(), P(), P(),
+                P(None, mesh_axis, None), P(None, mesh_axis)]
+    if has_rmap:
+        in_specs.append(P())            # (C,) freeze rows: lane-independent
+
+        def local(w1, b1, w2, b2, x_l, off_l, rmap_l):
+            return chaotic_ann_gang_stacked_pallas(
+                w1, b1, w2, b2, x_l, off_l, rmap_l, **kw)
+    else:
+        def local(w1, b1, w2, b2, x_l, off_l):
+            return chaotic_ann_gang_stacked_pallas(
+                w1, b1, w2, b2, x_l, off_l, None, **kw)
+    return jax.jit(shard_map(
+        local, mesh=mesh, in_specs=tuple(in_specs),
+        out_specs=(P(None, None, mesh_axis), P(None, mesh_axis, None)),
+        check_rep=False))

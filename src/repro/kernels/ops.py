@@ -15,9 +15,12 @@ import numpy as np
 from repro.kernels import ref
 from repro.kernels.chaotic_ann import (chaotic_ann_bits_pallas,
                                        chaotic_ann_gang_bits_pallas,
+                                       chaotic_ann_gang_bits_sharded,
                                        chaotic_ann_gang_stacked_pallas,
+                                       chaotic_ann_gang_stacked_sharded,
                                        chaotic_ann_pallas,
-                                       gang_effective_rows)
+                                       gang_effective_rows,
+                                       gang_partition_maps)
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 
@@ -87,6 +90,8 @@ def chaotic_bits_gang(params: Dict[str, jax.Array], x0: jax.Array,
                       activation: str = "relu", backend: str = "auto",
                       s_block: int = 256, t_block: int = 128,
                       unroll: int = 1, compute_unit: str = "vpu",
+                      mesh=None, mesh_axis: str = "data",
+                      partitioner=None,
                       config=None) -> Tuple[jax.Array, jax.Array]:
     """Gang-scheduled fused PRNG draw: C stacked networks, ONE launch.
 
@@ -109,6 +114,15 @@ def chaotic_bits_gang(params: Dict[str, jax.Array], x0: jax.Array,
     trajectory + ``pack_words`` with its own weights (C tiny launches),
     keeping the usual co-simulation contract — including the effective-row
     rounding of a ragged launch (garbage rows are zero-filled there).
+
+    ``mesh``/``mesh_axis`` (pallas backends only) shard the launch across
+    the named device axis: the pool and both scalar-prefetch maps
+    partition on the lane/block axis while the weight slabs replicate, so
+    one *logical* gang launch spans every device bit-identically.
+    ``partitioner`` overrides the per-device map partitioner (default
+    ``gang_partition_maps``, which pads the block axis with dead zero-row
+    blocks until it divides the device count).  The 'ref' oracle ignores
+    the mesh — sharding must never change the words.
     """
     kw = dict(s_block=s_block, t_block=t_block, unroll=unroll,
               compute_unit=compute_unit)
@@ -145,6 +159,28 @@ def chaotic_bits_gang(params: Dict[str, jax.Array], x0: jax.Array,
                 jnp.concatenate(state_parts, axis=0))
     interpret = (backend == "pallas_interpret") or (backend == "auto" and not _ON_TPU)
     rmap = None if row_map is None else jnp.asarray(row_map, jnp.int32)
+    if mesh is not None and int(mesh.shape[mesh_axis]) > 1:
+        n_dev = int(mesh.shape[mesh_axis])
+        part = partitioner if partitioner is not None else gang_partition_maps
+        cmap_p, rmap_p, pad = part(core_map, rmap, n_dev=n_dev,
+                                   n_rows=n_steps // 2)
+        s_total = x0.shape[0]
+        xp, offp = x0, jnp.broadcast_to(
+            jnp.asarray(word_offset, jnp.uint32), (s_total,))
+        if pad:
+            s_blk = kw["s_block"]
+            xp = jnp.concatenate(
+                [x0, jnp.zeros((pad * s_blk, x0.shape[1]), x0.dtype)])
+            offp = jnp.concatenate(
+                [offp, jnp.zeros(pad * s_blk, jnp.uint32)])
+        words, state = chaotic_ann_gang_bits_sharded(
+            params["w1"], params["b1"], params["w2"], params["b2"], xp,
+            cmap_p, offp, rmap_p, mesh=mesh, mesh_axis=mesh_axis,
+            n_steps=n_steps, activation=activation, interpret=interpret,
+            **kw)
+        if pad:
+            words, state = words[:, :s_total], state[:s_total]
+        return words, state
     return chaotic_ann_gang_bits_pallas(
         params["w1"], params["b1"], params["w2"], params["b2"], x0,
         core_map, word_offset, rmap, n_steps=n_steps, activation=activation,
@@ -158,6 +194,7 @@ def chaotic_bits_gang_stacked(params: Dict[str, jax.Array], x0: jax.Array,
                               backend: str = "auto", s_block: int = 256,
                               t_block: int = 128, unroll: int = 1,
                               compute_unit: str = "vpu",
+                              mesh=None, mesh_axis: str = "data",
                               config=None) -> Tuple[jax.Array, jax.Array]:
     """Sublane-stacked gang draw for C EQUAL-shape pools: one grid cell
     advances the whole group.
@@ -174,6 +211,13 @@ def chaotic_bits_gang_stacked(params: Dict[str, jax.Array], x0: jax.Array,
     per-core launch of that many rows, so a demand-shaped absorb never
     buffers overdraw).  Word rows past a core's demand are garbage.
     Returns words (n_steps // 2, C, S) and final state (C, S, I).
+
+    ``mesh``/``mesh_axis`` (pallas backends only) shard the equal-size
+    pools on the STREAM axis across the named device axis — every device
+    keeps the full sublane stack with 1/n_dev of each pool's lanes; the
+    pool size must divide the device count (the gang scheduler checks
+    this before choosing the stacked layout on a mesh).  The 'ref' oracle
+    ignores the mesh.
     """
     kw = dict(s_block=s_block, t_block=t_block, unroll=unroll,
               compute_unit=compute_unit)
@@ -208,6 +252,12 @@ def chaotic_bits_gang_stacked(params: Dict[str, jax.Array], x0: jax.Array,
                 jnp.stack(state_parts, axis=0))
     interpret = (backend == "pallas_interpret") or (backend == "auto" and not _ON_TPU)
     rmap = None if row_map is None else jnp.asarray(row_map, jnp.int32)
+    if mesh is not None and int(mesh.shape[mesh_axis]) > 1:
+        return chaotic_ann_gang_stacked_sharded(
+            params["w1"], params["b1"], params["w2"], params["b2"], x0,
+            word_offset, rmap, mesh=mesh, mesh_axis=mesh_axis,
+            n_steps=n_steps, activation=activation, interpret=interpret,
+            **kw)
     return chaotic_ann_gang_stacked_pallas(
         params["w1"], params["b1"], params["w2"], params["b2"], x0,
         word_offset, rmap, n_steps=n_steps, activation=activation,

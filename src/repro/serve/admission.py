@@ -32,11 +32,105 @@ ingress.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 from typing import Dict, Optional, Tuple
 
 from repro.serve.clock import Clock, SystemClock
+
+
+class AdaptiveCeiling:
+    """Derives the farm-wide queued-rows ceiling from serving throughput
+    instead of a hand-set constant.
+
+    The ceiling answers "how many launch rows may queue before new work
+    cannot meet any deadline?" — which is throughput times tolerable
+    delay:
+
+        ceiling = rows_per_second * target_delay_ms / 1e3
+
+    clamped to [min_rows, max_rows].  ``rows_per_second`` comes from two
+    sources, best first:
+
+    * **observed** — a rolling window of the last ``window`` flushes'
+      (stage seconds, rows) deltas, fed by ``update_from(farm, rows)``
+      reading the farm's ``profile_stats`` stage timers (plan + stack +
+      launch + absorb; the farm must be built with ``profile=True``);
+    * **modeled** — a cold-start prior from a fitted ``GangCostModel``
+      (``cost_model`` + ``candidate``): the modeled seconds of one
+      nominal t_block/2-row launch.
+
+    With neither signal the ceiling is ``max_rows`` (no information, so
+    do not reject).  Attach via
+    ``AdmissionController(adaptive=AdaptiveCeiling(...))`` — rejections
+    keep the typed ``Overloaded(retry_after_ms)`` contract, with the
+    retry hint upgraded to the modeled time for the backlog to drain.
+    """
+
+    _STAGES = ("plan", "stack", "launch", "absorb")
+
+    def __init__(self, *, target_delay_ms: float = 50.0, window: int = 32,
+                 min_rows: int = 64, max_rows: int = 1 << 20,
+                 cost_model=None, candidate=None):
+        if target_delay_ms <= 0:
+            raise ValueError(
+                f"target_delay_ms must be > 0, got {target_delay_ms}")
+        self.target_delay_ms = float(target_delay_ms)
+        self.window = int(window)
+        self.min_rows = int(min_rows)
+        self.max_rows = int(max_rows)
+        self.cost_model = cost_model
+        self.candidate = candidate
+        self._obs: collections.deque = collections.deque(maxlen=self.window)
+        self._last_stage_s: Optional[float] = None
+        self.updates = 0
+
+    def prior_rows_per_s(self) -> Optional[float]:
+        """Cold-start throughput prior from the fitted cost model (None
+        without a model fitted to wall time, i.e. ``sec_per_cycle``)."""
+        m, c = self.cost_model, self.candidate
+        if m is None or c is None or getattr(m, "sec_per_cycle", None) is None:
+            return None
+        q = max(1, c.t_block // 2)
+        sec = m.seconds(m.launch_cycles(c, [q]))
+        return q / sec if sec and sec > 0 else None
+
+    def observe(self, seconds: float, rows: int) -> None:
+        """Record one flush: ``rows`` launch rows served in ``seconds``
+        of flush stage time."""
+        if seconds > 0 and rows > 0:
+            self._obs.append((float(seconds), int(rows)))
+            self.updates += 1
+
+    def update_from(self, farm, rows_flushed: int) -> None:
+        """Feed one completed flush from the farm's ``profile_stats``
+        stage timers (no-op on farms built without ``profile=True``)."""
+        stats = farm.profile_stats
+        if stats is None:
+            return
+        total = sum(stats.get(k, 0.0) for k in self._STAGES)
+        if self._last_stage_s is not None:
+            self.observe(total - self._last_stage_s, rows_flushed)
+        self._last_stage_s = total
+
+    def rows_per_s(self) -> Optional[float]:
+        """Observed rolling-window throughput, else the model prior."""
+        if self._obs:
+            sec = sum(s for s, _ in self._obs)
+            rows = sum(r for _, r in self._obs)
+            if sec > 0:
+                return rows / sec
+        return self.prior_rows_per_s()
+
+    def ceiling(self) -> int:
+        """The current queued-rows ceiling."""
+        rps = self.rows_per_s()
+        if rps is None:
+            return self.max_rows
+        return int(min(self.max_rows,
+                       max(self.min_rows,
+                           rps * self.target_delay_ms / 1e3)))
 
 
 class Overloaded(RuntimeError):
@@ -101,8 +195,15 @@ class AdmissionController:
         deliberately conservative: a request coverable from a client's
         buffer still counts, because admission runs before the farm is
         consulted.
+    adaptive
+        An :class:`AdaptiveCeiling`; when set it supersedes
+        ``max_queued_rows`` — the ceiling tracks measured flush
+        throughput (feed it from the front-end via ``update_from``) with
+        a fitted-``GangCostModel`` prior before any measurement exists.
     ceiling_retry_ms
-        The ``retry_after_ms`` hint attached to farm-ceiling rejections.
+        The minimum ``retry_after_ms`` hint attached to farm-ceiling
+        rejections (an adaptive ceiling raises it to the modeled
+        backlog-drain time).
     per_tenant
         ``{(core, client): (rate_words_per_s, burst_words)}`` overrides
         for specific tenants (e.g. a paid tier).
@@ -111,6 +212,7 @@ class AdmissionController:
     def __init__(self, *, rate_words_per_s: Optional[float] = None,
                  burst_words: Optional[float] = None,
                  max_queued_rows: Optional[int] = None,
+                 adaptive: Optional[AdaptiveCeiling] = None,
                  ceiling_retry_ms: float = 5.0,
                  per_tenant: Optional[Dict[Tuple[str, str],
                                            Tuple[float, float]]] = None,
@@ -121,6 +223,7 @@ class AdmissionController:
         self.rate_words_per_s = rate_words_per_s
         self.burst_words = burst_words
         self.max_queued_rows = max_queued_rows
+        self.adaptive = adaptive
         self.ceiling_retry_ms = float(ceiling_retry_ms)
         self.clock: Clock = clock or SystemClock()
         self._overrides = dict(per_tenant or {})
@@ -138,6 +241,14 @@ class AdmissionController:
         """Launch rows currently admitted into (and not yet released from)
         the front-end queue."""
         return self._queued_rows
+
+    @property
+    def current_ceiling(self) -> Optional[int]:
+        """The queued-rows ceiling in force right now: the adaptive
+        ceiling when attached, else the static ``max_queued_rows``."""
+        if self.adaptive is not None:
+            return self.adaptive.ceiling()
+        return self.max_queued_rows
 
     def release(self, rows: int) -> None:
         """Return ``rows`` to the ceiling gauge (request left the queue:
@@ -172,14 +283,23 @@ class AdmissionController:
         request leaves the queue."""
         now = self.clock.now()
         with self._lock:
-            if (self.max_queued_rows is not None
-                    and self._queued_rows + rows_est > self.max_queued_rows):
+            ceiling = self.current_ceiling
+            if (ceiling is not None
+                    and self._queued_rows + rows_est > ceiling):
                 self.rejected_farm += 1
+                retry_ms = self.ceiling_retry_ms
+                if self.adaptive is not None:
+                    # upgrade the hint to the modeled time for the excess
+                    # backlog to drain at the observed flush rate
+                    rps = self.adaptive.rows_per_s()
+                    if rps is not None and rps > 0:
+                        excess = self._queued_rows + rows_est - ceiling
+                        retry_ms = max(retry_ms, excess / rps * 1e3)
                 raise Overloaded(
                     f"farm over queued-rows ceiling: "
                     f"{self._queued_rows} + {rows_est} > "
-                    f"{self.max_queued_rows} rows queued",
-                    retry_after_ms=self.ceiling_retry_ms, scope="farm",
+                    f"{ceiling} rows queued",
+                    retry_after_ms=retry_ms, scope="farm",
                     core=core, client=client)
             b = self._bucket(core, client, now)
             if b is not None:
@@ -196,8 +316,11 @@ class AdmissionController:
 
     def stats(self) -> Dict[str, float]:
         """Admission counters: admitted / rejected by scope + the live
-        queued-rows gauge."""
+        queued-rows gauge and the ceiling currently in force (-1 when
+        uncapped)."""
+        ceiling = self.current_ceiling
         return {"admitted": float(self.admitted),
                 "rejected_tenant": float(self.rejected_tenant),
                 "rejected_farm": float(self.rejected_farm),
-                "queued_rows": float(self._queued_rows)}
+                "queued_rows": float(self._queued_rows),
+                "ceiling": -1.0 if ceiling is None else float(ceiling)}

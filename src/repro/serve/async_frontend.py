@@ -648,6 +648,13 @@ class AsyncOscillatorFarm:
                 if self.journal is not None:
                     # repro: allow[async-blocking] reason=durability ordering: the fsync'd flush record must exist before the next commit can run; one bounded fsync per flush, serialized under the single-flight lock
                     self.journal.record_flush(self.farm)
+                if (self.admission is not None
+                        and self.admission.adaptive is not None):
+                    # feed the adaptive ceiling one (stage seconds, rows)
+                    # observation so the queued-rows cap tracks measured
+                    # flush throughput (no-op without farm profile=True)
+                    self.admission.adaptive.update_from(
+                        self.farm, sum(r.rows_est for r in batch))
             except asyncio.CancelledError:
                 # aclose() mid-launch: the executor finishes the launch
                 # (aclose waits), and its words are parked in the service

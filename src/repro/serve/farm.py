@@ -18,8 +18,11 @@ and final states back to each ``PRNGService`` via its
 ``prepare_rows()/absorb()`` halves.  Lanes evolve independently and word
 emission is defined in absolute word-row space, so per-client words are
 bit-identical to the per-core path (gang overdraw is buffered exactly like
-batching overdraw).  Incompatible cores (and mesh-sharded pools) fall back
-to their own per-core launch.
+batching overdraw).  Incompatible cores fall back to their own per-core
+launch.  Mesh-sharded pools gang too: cores on the SAME mesh share one
+shard_map'd gang launch whose stream axis (and scalar-prefetch maps) are
+partitioned across the named device axis — see
+``kernels.chaotic_ann.chaotic_ann_gang_bits_sharded``.
 
 Cores come from two places:
 
@@ -45,21 +48,46 @@ from repro.serve.clock import Clock, SystemClock
 from repro.serve.prng_service import PRNGService
 
 
+def _topology(svc: PRNGService) -> Optional[Tuple]:
+    """Hashable device-axis signature of a service's mesh.
+
+    ``None`` for an unsharded (single-device) pool; otherwise the named
+    axis, its device count, and the flat device ids — the full identity a
+    sharded launch depends on.  Part of every gang compat key, plan /
+    decision / dispatch cache key, and farm snapshot, so nothing planned
+    on one device count can silently serve another.
+    """
+    if svc.mesh is None:
+        return None
+    n_dev = int(svc.mesh.shape[svc.mesh_axis])
+    devs = tuple(int(d.id) for d in np.asarray(svc.mesh.devices).reshape(-1))
+    return (svc.mesh_axis, n_dev, devs)
+
+
+def _as_topo(t) -> Optional[Tuple]:
+    """Canonicalize a topology signature (JSON round-trips turn the tuples
+    into lists; journal checkpoints compare through this)."""
+    if t is None:
+        return None
+    return (str(t[0]), int(t[1]), tuple(int(x) for x in t[2]))
+
+
 def _compat_key(svc: PRNGService) -> Optional[Tuple]:
     """Gang-compatibility signature of one core's service.
 
     Two cores may share a stacked-weight launch iff every static property
     of the kernel instantiation matches: network shape (i_dim, h_dim),
-    compute dtype, activation, backend, and the full DSE kernel config
-    (s_block, t_block, unroll, compute_unit).  Mesh-sharded pools return
-    None (never ganged — their launch wraps a shard_map).
+    compute dtype, activation, backend, the full DSE kernel config
+    (s_block, t_block, unroll, compute_unit), and the device topology.
+    Mesh-sharded pools gang with pools on the SAME mesh (axis name, device
+    count, device ids): the group launches as one shard_map'd gang across
+    that mesh — the single-device-only limit recorded by PR 4 is gone.
     """
-    if svc.mesh is not None:
-        return None
     c = svc.config
     return (svc.dim, int(svc.params["w1"].shape[1]), str(svc.dtype),
             svc.activation, svc.backend,
-            c.s_block, c.t_block, c.unroll, c.compute_unit)
+            c.s_block, c.t_block, c.unroll, c.compute_unit,
+            _topology(svc))
 
 
 class GangScheduler:
@@ -199,14 +227,20 @@ class GangScheduler:
         c = svc0.config
         sizes = [int(svc.pool_x.shape[0]) for _, svc, _, _ in members]
         blocks = [-(-s // c.s_block) for s in sizes]
-        stacked_ok = (len(set(sizes)) == 1 and c.compute_unit == "vpu")
+        topo = _topology(svc0)
+        n_dev = 1 if topo is None else topo[1]
+        # the stacked kernel shards its LANE axis: each device needs an
+        # equal lane slice, so stacked is only eligible when the (equal)
+        # pool size divides the device count
+        stacked_ok = (len(set(sizes)) == 1 and c.compute_unit == "vpu"
+                      and sizes[0] % n_dev == 0)
         model = self.cost_model
         all_idx = tuple(range(len(members)))
         dmax = max(demands)
         base_layout = "stacked" if stacked_ok else "concat"
         options = [("padded",
                     model.gang_cost(c, demands, blocks, sizes,
-                                    layout=base_layout),
+                                    layout=base_layout, n_dev=n_dev),
                     [{"members": all_idx, "kind": "gang",
                       "layout": base_layout, "ragged": False}])]
         if self.planner and len(set(demands)) > 1:
@@ -216,12 +250,14 @@ class GangScheduler:
                 c.t_block, c.unroll)
             r_cost = model.gang_cost(c, demands, blocks, sizes,
                                      layout="concat",
-                                     rows_by_block=[int(r) for r in eff])
+                                     rows_by_block=[int(r) for r in eff],
+                                     n_dev=n_dev)
             r_layout = "concat"
             if stacked_ok:
                 s_cost = model.gang_cost(c, demands, blocks, sizes,
                                          layout="stacked",
-                                         rows_by_block=list(demands))
+                                         rows_by_block=list(demands),
+                                         n_dev=n_dev)
                 # the freeze layout saves buffering only (no FMA skipped);
                 # require a clear modeled margin over the purpose-built
                 # early-out concat path before trusting a noisy fit
@@ -239,16 +275,17 @@ class GangScheduler:
                 idxs = by_demand[d]
                 if len(idxs) == 1:
                     i = idxs[0]
-                    cost += model.solo_cost(c, d, blocks[i])
+                    cost += model.solo_cost(c, d, blocks[i], n_dev=n_dev)
                     parts.append({"members": (i,), "kind": "solo"})
                 else:
                     sub_sizes = [sizes[i] for i in idxs]
                     sub_stacked = (len(set(sub_sizes)) == 1
-                                   and c.compute_unit == "vpu")
+                                   and c.compute_unit == "vpu"
+                                   and sub_sizes[0] % n_dev == 0)
                     lay = "stacked" if sub_stacked else "concat"
                     cost += model.gang_cost(
                         c, [d] * len(idxs), [blocks[i] for i in idxs],
-                        sub_sizes, layout=lay)
+                        sub_sizes, layout=lay, n_dev=n_dev)
                     parts.append({"members": tuple(idxs), "kind": "gang",
                                   "layout": lay, "ragged": False})
             options.append(("split", cost, parts))
@@ -315,7 +352,8 @@ class GangScheduler:
             words, state = ops.chaotic_bits_gang_stacked(
                 plan["params"], x0, n_steps, jnp.asarray(offs),
                 row_map=row_map, activation=svc0.activation,
-                backend=svc0.backend, config=cfg)
+                backend=svc0.backend, mesh=svc0.mesh,
+                mesh_axis=svc0.mesh_axis, config=cfg)
             words = np.asarray(words)
             handed = [state[ci] for ci in range(len(members))]
             member_out = [(words[:member_rows[ci], ci, :], handed[ci])
@@ -345,7 +383,8 @@ class GangScheduler:
                 plan["params"], x0, n_steps,
                 jnp.asarray(offs), core_map=plan["core_map"],
                 row_map=row_map, activation=svc0.activation,
-                backend=svc0.backend, config=cfg)
+                backend=svc0.backend, mesh=svc0.mesh,
+                mesh_axis=svc0.mesh_axis, config=cfg)
             words = np.asarray(words)
             handed = [state[start:start + live]
                       for (start, live, _) in plan["spans"]]
@@ -703,20 +742,38 @@ class OscillatorFarm:
 
         Includes the deadline-deferral set, so a snapshot taken mid-gang
         (between request() and flush(), possibly after a deferring flush)
-        replays identically.
+        replays identically — and each core's device topology, so a
+        restore onto a different device count is caught (see restore()).
         """
         return {"cores": {core: svc.snapshot()
                           for core, svc in self.services.items()},
                 "gang_launches": self._sched.launches,
-                "deferred": sorted(self._deferred)}
+                "deferred": sorted(self._deferred),
+                "topology": {core: _topology(svc)
+                             for core, svc in self.services.items()}}
 
-    def restore(self, snap: Dict[str, object]) -> None:
+    def restore(self, snap: Dict[str, object], *,
+                on_topology_mismatch: str = "refuse") -> None:
         """Restore a snapshot() onto a farm with the SAME cores attached.
 
         The core sets must match exactly: restoring onto a farm with extra
         cores would leave those pools in their post-snapshot state (clients,
         pending, outbox) — a silently mixed restore point.
+
+        If the snapshot was taken on a different device topology (mesh
+        axis / device count / device ids differ for any core), the restore
+        must not silently proceed over plans shaped for the old topology:
+        ``on_topology_mismatch="refuse"`` (default) raises;
+        ``"replan"`` drops every cached gang plan and planner decision and
+        restores anyway — stream words are device-count-invariant (lanes
+        evolve independently, word rows are absolute), so a sharded
+        snapshot restores bit-exactly onto an unsharded farm and vice
+        versa once the planner re-plans on the new topology.
         """
+        if on_topology_mismatch not in ("refuse", "replan"):
+            raise ValueError(
+                f"on_topology_mismatch must be 'refuse' or 'replan', "
+                f"got {on_topology_mismatch!r}")
         cores = snap["cores"]
         missing = set(cores) - set(self.services)
         extra = set(self.services) - set(cores)
@@ -724,6 +781,21 @@ class OscillatorFarm:
             raise ValueError(
                 f"snapshot/farm core mismatch: snapshot-only {sorted(missing)}, "
                 f"farm-only {sorted(extra)}")
+        snap_topo = snap.get("topology")
+        if snap_topo is not None:
+            changed = sorted(
+                core for core, svc in self.services.items()
+                if core in snap_topo
+                and _as_topo(snap_topo[core]) != _topology(svc))
+            if changed:
+                if on_topology_mismatch == "refuse":
+                    raise ValueError(
+                        f"snapshot device topology differs from this farm's "
+                        f"on cores {changed}; restore(snap, "
+                        f"on_topology_mismatch='replan') to drop cached "
+                        f"plans and re-plan on the current topology")
+                self._sched._plans.clear()
+                self._sched._decisions.clear()
         for core, sub in cores.items():
             self.services[core].restore(sub)
         self._sched.launches = int(snap.get("gang_launches", 0))

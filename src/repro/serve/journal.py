@@ -34,17 +34,75 @@ Durability contract (tests/test_journal.py proves the kill window):
   a deadline timeout gives);
 * a torn final line (crash mid-append) is detected and ignored on
   replay.
+
+**Compaction/rotation** (``rotate_every=N``): replaying positions alone
+recomputes every stream from row 0, so replay cost grows with absolute
+position forever.  After every N journaled flushes the journal rotates:
+the live JSONL is renamed aside (``<path>.<seq>``, an immutable audit
+segment) and a fresh segment opens with a **checkpoint** record — the
+full ``farm.snapshot()`` (pool states, client counters, buffers,
+outboxes, device topology), ndarray-encoded.  Recovery then restores the
+checkpoint directly and replays only the <= N flush deltas after it, so
+``replay_journal`` cost is bounded by the rotation window no matter how
+long the process ran.  The rotation itself is crash-safe: the new
+segment (checkpoint included) is written and fsync'd to a temp file
+before any rename, and both renames are atomic — a crash at any point
+leaves either the old segment or the checkpointed new one discoverable.
+
+Every flush record (and checkpoint) also carries the farm's device
+topology, so replaying onto a different device count is an *explicit*
+decision (``on_topology_mismatch``), never a silent reuse — positions
+are device-count-invariant, but the operator must say so.
 """
 from __future__ import annotations
 
+import base64
 import json
 import os
 import pathlib
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.serve.clock import Clock, SystemClock
 
 _VERSION = 1
+
+
+def _farm_topology(farm) -> Dict[str, object]:
+    from repro.serve.farm import _topology
+    return {core: _topology(svc) for core, svc in farm.services.items()}
+
+
+def _encode(obj):
+    """JSON-encode a snapshot tree: ndarrays become base64 blobs (exact
+    bytes — bf16 pools and uint32 buffers round-trip bit-identically)."""
+    if isinstance(obj, np.ndarray):
+        return {"__nd__": str(obj.dtype), "shape": list(obj.shape),
+                "b64": base64.b64encode(
+                    np.ascontiguousarray(obj).tobytes()).decode("ascii")}
+    if isinstance(obj, dict):
+        return {k: _encode(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple, set)):
+        return [_encode(v) for v in sorted(obj)] if isinstance(obj, set) \
+            else [_encode(v) for v in obj]
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    return obj
+
+
+def _decode(obj):
+    if isinstance(obj, dict):
+        if "__nd__" in obj:
+            a = np.frombuffer(base64.b64decode(obj["b64"]),
+                              dtype=np.dtype(obj["__nd__"]))
+            return a.reshape(obj["shape"]).copy()
+        return {k: _decode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_decode(v) for v in obj]
+    return obj
 
 
 def farm_positions(farm) -> Dict[str, Dict[str, List[int]]]:
@@ -69,27 +127,51 @@ class FlushJournal:
     returns — the crash-recovery guarantee costs one fsync per flush, not
     per request.  An existing file is appended to (seq continues), so a
     recovered process can keep journaling into the same file.
+
+    ``rotate_every=N`` bounds replay cost: after N flush records the
+    live file is rotated aside and the new segment opens with a full
+    ``farm.snapshot()`` checkpoint (see the module docstring).  The
+    rotated segments (``<path>.<seq>``) are never read by recovery —
+    they are the audit trail; delete them on whatever retention schedule
+    suits.
     """
 
     def __init__(self, path: str | os.PathLike, *, fsync: bool = True,
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None,
+                 rotate_every: Optional[int] = None):
         self.path = pathlib.Path(path)
         self.fsync = bool(fsync)
         self.clock: Clock = clock or SystemClock()
+        if rotate_every is not None and int(rotate_every) < 1:
+            raise ValueError(f"rotate_every must be >= 1, got {rotate_every}")
+        self.rotate_every = None if rotate_every is None else int(rotate_every)
+        self.rotations = 0
         self.seq = 0
+        self._segment_flushes = 0
+        tmp = self._tmp_path()
+        if not self.path.exists() and tmp.exists():
+            # a crash landed between the two rotation renames: the fsync'd
+            # checkpointed segment is complete — finish the rotation
+            os.replace(tmp, self.path)
         if self.path.exists():
-            _, last_seq, _, _ = read_journal(self.path)
+            _, last_seq, _, _, ckpt = read_journal(self.path)
             self.seq = last_seq
+            self._segment_flushes = last_seq - (
+                int(ckpt["seq"]) if ckpt is not None else 0)
         self._f = open(self.path, "a", encoding="utf-8")
         if self.seq == 0 and self._f.tell() == 0:
             self._append({"type": "open", "v": _VERSION})
 
-    def _append(self, rec: Dict) -> None:
+    def _tmp_path(self) -> pathlib.Path:
+        return self.path.with_name(self.path.name + ".rotate-tmp")
+
+    def _append(self, rec: Dict, f=None) -> None:
+        f = f if f is not None else self._f
         rec["ts"] = self.clock.time()
-        self._f.write(json.dumps(rec, separators=(",", ":")) + "\n")
-        self._f.flush()
+        f.write(json.dumps(rec, separators=(",", ":")) + "\n")
+        f.flush()
         if self.fsync:
-            os.fsync(self._f.fileno())
+            os.fsync(f.fileno())
 
     def record_register(self, core: str, client: str, seed: int) -> None:
         """Journal one client registration (the seed actually used, so
@@ -99,10 +181,38 @@ class FlushJournal:
 
     def record_flush(self, farm) -> None:
         """Journal the post-flush position of every client (call only
-        after the flush fully absorbed + delivered)."""
+        after the flush fully absorbed + delivered).  Triggers a rotation
+        once ``rotate_every`` flushes accumulated in this segment."""
         self.seq += 1
         self._append({"type": "flush", "seq": self.seq,
-                      "cores": farm_positions(farm)})
+                      "cores": farm_positions(farm),
+                      "topology": _farm_topology(farm)})
+        self._segment_flushes += 1
+        if (self.rotate_every is not None
+                and self._segment_flushes >= self.rotate_every):
+            self._rotate(farm)
+
+    def _rotate(self, farm) -> None:
+        """Seal the live segment and start a new one from a checkpoint.
+
+        Crash-safe ordering: the checkpoint is durably on disk in the temp
+        segment BEFORE the live file is renamed aside, and both renames
+        are atomic — at every instant either ``path`` or
+        ``path.rotate-tmp`` holds a replayable journal (``__init__`` and
+        ``replay_journal`` both pick up the temp file).
+        """
+        tmp = self._tmp_path()
+        with open(tmp, "w", encoding="utf-8") as f:
+            self._append({"type": "checkpoint", "seq": self.seq,
+                          "v": _VERSION,
+                          "snapshot": _encode(farm.snapshot())}, f=f)
+        self._f.close()
+        os.replace(self.path, self.path.with_name(
+            f"{self.path.name}.{self.seq:08d}"))
+        os.replace(tmp, self.path)
+        self._f = open(self.path, "a", encoding="utf-8")
+        self._segment_flushes = 0
+        self.rotations += 1
 
     def close(self) -> None:
         if not self._f.closed:
@@ -117,16 +227,21 @@ class FlushJournal:
 
 def read_journal(path: str | os.PathLike) -> Tuple[
         List[Tuple[str, str, int]], int,
-        Optional[Dict[str, Dict[str, List[int]]]], bool]:
-    """Parse a journal: (registrations in order, last flush seq, last
-    flush positions or None, torn_tail).
+        Optional[Dict[str, Dict[str, List[int]]]], bool, Optional[Dict]]:
+    """Parse one journal segment: (registrations in order, last flush
+    seq, last flush positions or None, torn_tail, checkpoint or None).
+
+    A rotated segment opens with a checkpoint record; its decoded farm
+    snapshot and seq come back as ``checkpoint``, and the registrations
+    list then covers only clients registered *after* it (earlier clients
+    live inside the snapshot, restored wholesale).
 
     A truncated final line (the crash landed mid-append) is ignored and
     reported via ``torn_tail`` — every complete record before it is
     still recovered.
     """
     registrations: List[Tuple[str, str, int]] = []
-    last_seq, last_pos, torn = 0, None, False
+    last_seq, last_pos, torn, ckpt = 0, None, False, None
     data = pathlib.Path(path).read_bytes().decode("utf-8", errors="replace")
     lines = data.split("\n")
     # a well-formed journal ends with "\n": the final split element is ""
@@ -150,11 +265,17 @@ def read_journal(path: str | os.PathLike) -> Tuple[
         elif t == "flush":
             last_seq = int(rec["seq"])
             last_pos = rec["cores"]
-    return registrations, last_seq, last_pos, torn
+        elif t == "checkpoint":
+            ckpt = {"seq": int(rec["seq"]),
+                    "snapshot": _decode(rec["snapshot"])}
+            last_seq = max(last_seq, ckpt["seq"])
+    return registrations, last_seq, last_pos, torn, ckpt
 
 
 def replay_journal(farm, path: str | os.PathLike,
-                   chunk_rows: int = 4096) -> Dict[str, object]:
+                   chunk_rows: int = 4096, *,
+                   on_topology_mismatch: str = "refuse"
+                   ) -> Dict[str, object]:
     """Rebuild a crashed serving process's stream positions onto ``farm``.
 
     ``farm`` must have the same cores attached (same weights/configs —
@@ -166,15 +287,31 @@ def replay_journal(farm, path: str | os.PathLike,
     off, including words that were generated but still undelivered
     (service buffer + outbox).
 
+    A rotated journal opens with a checkpoint: the farm snapshot is
+    restored directly (``on_topology_mismatch`` passes through to
+    ``OscillatorFarm.restore`` — a checkpoint taken on a different
+    device count refuses unless you say ``"replan"``) and only the flush
+    deltas after it are recomputed, so replay cost is bounded by the
+    rotation window, not absolute stream position.
+
     Returns a summary: flushes recovered, clients replayed, word rows
-    recomputed, and whether a torn tail record was discarded.
+    recomputed (post-checkpoint deltas only), the checkpoint seq (0 when
+    the segment has none), and whether a torn tail record was discarded.
     """
-    registrations, last_seq, positions, torn = read_journal(path)
+    path = pathlib.Path(path)
+    tmp = path.with_name(path.name + ".rotate-tmp")
+    if not path.exists() and tmp.exists():
+        path = tmp       # crash between the rotation renames: use the
+        #                  fsync'd checkpointed segment
+    registrations, last_seq, positions, torn, ckpt = read_journal(path)
     unknown = {core for core, _, _ in registrations} - set(farm.services)
     if unknown:
         raise ValueError(
             f"journal references cores not attached to this farm: "
             f"{sorted(unknown)} (attach the same core set before replay)")
+    if ckpt is not None:
+        farm.restore(ckpt["snapshot"],
+                     on_topology_mismatch=on_topology_mismatch)
     for core, client, seed in registrations:
         farm.register(core, client, seed=seed)
     rows_replayed = 0
@@ -186,10 +323,13 @@ def replay_journal(farm, path: str | os.PathLike,
                     raise ValueError(
                         f"journal flush record names unregistered client "
                         f"{core}/{client} (journal corrupt?)")
+                before = int(svc.clients[client].row)
                 svc.replay_client(client, row=int(row), pending=int(pending),
                                   buf_words=int(buf),
                                   outbox_words=int(outbox),
                                   chunk_rows=chunk_rows)
-                rows_replayed += int(row)
-    return {"flushes": last_seq, "clients": len(registrations),
-            "rows_replayed": rows_replayed, "torn_tail": torn}
+                rows_replayed += int(row) - before
+    clients = sum(len(svc.clients) for svc in farm.services.values())
+    return {"flushes": last_seq, "clients": clients,
+            "rows_replayed": rows_replayed, "torn_tail": torn,
+            "checkpoint_seq": 0 if ckpt is None else int(ckpt["seq"])}

@@ -303,37 +303,49 @@ class PRNGService:
     def replay_client(self, name: str, *, row: int, pending: int = 0,
                       buf_words: int = 0, outbox_words: int = 0,
                       chunk_rows: int = 4096) -> None:
-        """Advance a freshly-registered client to an absolute stream
-        position (crash recovery, ``repro.serve.journal``).
+        """Advance a client to an absolute stream position (crash
+        recovery, ``repro.serve.journal``).
 
-        Recomputes the client's lanes forward by ``row`` word rows with
-        the same fused kernel the crashed process used.  Chunk-invariant
-        absolute-row indexing makes the replay bit-identical to however
-        many launches originally produced the stream, so the final
-        ``buf_words + outbox_words`` regenerated words rebuild the
-        undelivered tail exactly: the stream order is always
-        [delivered][outbox][buffer] (outbox words were served from the
-        buffer head before the buffer's current contents accumulated).
+        Recomputes the client's lanes forward from their *current* row —
+        0 for a freshly-registered client (full replay), or a
+        checkpoint-restored position (delta replay bounded by the journal
+        rotation window) — with the same fused kernel the crashed process
+        used.  Chunk-invariant absolute-row indexing makes the replay
+        bit-identical to however many launches originally produced the
+        stream, so the final ``buf_words + outbox_words`` regenerated
+        words rebuild the undelivered tail exactly: the stream order is
+        always [delivered][outbox][buffer] (outbox words were served from
+        the buffer head before the buffer's current contents
+        accumulated), and a tail that reaches back before the checkpoint
+        row is covered by the checkpoint's own undelivered words.
         ``chunk_rows`` bounds replay memory — only the owed tail is kept.
         """
         c = self.clients[name]
-        if c.row != 0 or len(c.buf) or c.pending or self.outbox_words(name):
-            raise ValueError(
-                f"replay_client({name!r}) requires a freshly registered "
-                f"client (row={c.row}, buf={len(c.buf)}, "
-                f"pending={c.pending})")
         row, buf_words, outbox_words = int(row), int(buf_words), int(outbox_words)
+        if row < c.row:
+            raise ValueError(
+                f"replay_client({name!r}) cannot rewind: client is at row "
+                f"{c.row}, journal says {row}")
         L = self.lanes_per_client
         if row * L < buf_words + outbox_words:
             raise ValueError(
                 f"inconsistent position for {name!r}: {row} rows emit "
                 f"{row * L} words < buf {buf_words} + outbox {outbox_words}")
-        if row > 0:
+        tail_need = buf_words + outbox_words
+        # undelivered words at the starting position seed the tail: a
+        # final tail reaching behind the start row must come from them
+        held = np.concatenate([self._outbox.pop(name, np.empty(0, np.uint32)),
+                               c.buf])
+        if tail_need > held.size + (row - c.row) * L:
+            raise ValueError(
+                f"inconsistent position for {name!r}: owed tail "
+                f"{tail_need} exceeds held {held.size} + "
+                f"{(row - c.row) * L} replayable words")
+        tail = held[-tail_need:] if tail_need else np.empty(0, np.uint32)
+        if row > c.row:
             lanes = slice(c.slot * L, (c.slot + 1) * L)
             x = self.pool_x[lanes]
-            tail_need = buf_words + outbox_words
-            tail = np.empty(0, np.uint32)
-            done = 0
+            done = c.row
             while done < row:
                 n = min(int(chunk_rows), row - done)
                 words, x = ops.chaotic_bits(
@@ -346,9 +358,9 @@ class PRNGService:
                 done += n
             self.pool_x = self.pool_x.at[lanes].set(x)
             c.row = row
-            if outbox_words:
-                self._park(name, tail[:outbox_words])
-            c.buf = tail[outbox_words:]
+        if outbox_words:
+            self._park(name, tail[:outbox_words])
+        c.buf = tail[outbox_words:]
         c.pending = int(pending)
 
     def snapshot(self) -> Dict[str, object]:

@@ -1,0 +1,12 @@
+# lint-as: src/repro/serve/custom_launcher.py
+"""GOOD: serve-layer sharding routes through the gang path — the mesh is
+handed to ``ops.chaotic_bits_gang``, which owns the shard_map and its
+bit-identity contract; mentioning it in prose (shard_map) is fine.
+"""
+from repro.kernels import ops
+
+
+def launch_sharded(params, x0, n_steps, core_map, mesh):
+    return ops.chaotic_bits_gang(params, x0, n_steps, 0,
+                                 core_map=core_map, mesh=mesh,
+                                 mesh_axis="data")

@@ -182,3 +182,101 @@ def test_draw_sync_rejected_by_admission_raises_in_caller_thread():
         assert ac.queued_rows == 0            # rejected submit queued nothing
     finally:
         af.close()
+
+
+# ---------------------------------------------------------------------------
+# Adaptive ceiling: max_queued_rows from throughput, not a constant
+# ---------------------------------------------------------------------------
+
+def test_adaptive_ceiling_prior_from_fitted_cost_model():
+    """Cold start: with zero observations the ceiling comes from the
+    fitted GangCostModel (modeled rows/s x target delay); with neither
+    model nor observations it stays wide open (max_rows)."""
+    from repro.core.dse import GangCostModel
+    from repro.serve.admission import AdaptiveCeiling
+    from test_async_frontend import CAND as c
+
+    blind = AdaptiveCeiling(max_rows=12345)
+    assert blind.rows_per_s() is None
+    assert blind.ceiling() == 12345
+
+    # an unfitted model (sec_per_cycle=None) gives no prior either
+    assert AdaptiveCeiling(cost_model=GangCostModel(), candidate=c,
+                           max_rows=12345).ceiling() == 12345
+
+    fitted = GangCostModel(sec_per_cycle=1e-9)
+    ad = AdaptiveCeiling(cost_model=fitted, candidate=c,
+                         target_delay_ms=50.0, min_rows=1, max_rows=1 << 30)
+    rps = ad.prior_rows_per_s()
+    assert rps is not None and rps > 0
+    assert ad.ceiling() == int(rps * 0.050)
+
+
+def test_adaptive_ceiling_tracks_observed_flush_rate():
+    """Observations supersede the prior, over a rolling window: the
+    ceiling follows measured rows/s * target delay, clamped."""
+    from repro.serve.admission import AdaptiveCeiling
+
+    ad = AdaptiveCeiling(target_delay_ms=100.0, window=4,
+                         min_rows=8, max_rows=10_000)
+    for _ in range(4):
+        ad.observe(0.010, 50)           # 5000 rows/s
+    assert ad.rows_per_s() == pytest.approx(5000.0)
+    assert ad.ceiling() == 500          # 5000 * 0.1 s
+    # the farm slows 10x; the window forgets the fast past
+    for _ in range(4):
+        ad.observe(0.100, 50)
+    assert ad.ceiling() == 50
+    # clamps hold at the extremes
+    for _ in range(4):
+        ad.observe(10.0, 1)             # glacial
+    assert ad.ceiling() == 8
+    for _ in range(4):
+        ad.observe(1e-6, 1000)          # implausibly fast
+    assert ad.ceiling() == 10_000
+
+
+def test_adaptive_ceiling_gates_admission_with_drain_hint():
+    """AdmissionController(adaptive=...) keeps the typed Overloaded
+    contract; the farm-scope retry hint covers the modeled drain time."""
+    from repro.serve.admission import AdaptiveCeiling
+
+    ad = AdaptiveCeiling(target_delay_ms=10.0, min_rows=1)
+    for _ in range(3):
+        ad.observe(1.0, 100)            # 100 rows/s -> ceiling 1 row
+    ac = AdmissionController(adaptive=ad, ceiling_retry_ms=2.0,
+                             clock=FakeClock())
+    assert ac.current_ceiling == 1
+    ac.admit("core0", "t", 64, 1)
+    with pytest.raises(Overloaded) as ei:
+        ac.admit("core0", "t", 640, 10)
+    assert ei.value.scope == "farm"
+    # 10 excess rows at 100 rows/s = 100 ms, far above the 2 ms floor
+    assert ei.value.retry_after_ms == pytest.approx(100.0)
+    assert ac.stats()["ceiling"] == 1.0
+    ac.release(1)
+    ac.admit("core0", "t", 64, 1)       # drained: admitted again
+
+
+def test_adaptive_ceiling_fed_by_frontend_profile_stats():
+    """End to end: a profiled farm + adaptive admission — each flush
+    feeds one (stage seconds, rows) observation, and the ceiling leaves
+    max_rows once real throughput is measured.  Real clock: the profile
+    stage timers read the farm's injected clock, so a FakeClock would
+    yield zero-second deltas and no observations."""
+    from repro.serve.admission import AdaptiveCeiling
+
+    async def go():
+        farm = _farm(n_cores=1, profile=True)
+        ad = AdaptiveCeiling(target_delay_ms=50.0, min_rows=16,
+                             max_rows=1 << 20)
+        ac = AdmissionController(adaptive=ad)
+        async with AsyncOscillatorFarm(farm, admission=ac) as af:
+            for _ in range(3):
+                await af.draw("core0", "t", 200, deadline_ms=0)
+        # flush 1 primes the stage-timer baseline; flushes 2+ observe
+        assert ad.updates >= 1
+        assert ad.rows_per_s() is not None
+        assert 16 <= ad.ceiling() < 1 << 20    # left max_rows: measured
+
+    _run(go())

@@ -127,7 +127,7 @@ def test_recovered_process_keeps_journaling_same_file(tmp_path):
     first = _collect(phase(True, 90))
     assert read_journal(jpath)[1] == 1             # one flush journaled
     second = _collect(phase(False, 70))
-    _, last_seq, positions, torn = read_journal(jpath)
+    _, last_seq, positions, torn, _ = read_journal(jpath)
     assert last_seq == 2 and not torn
     # second recovery sees the concatenated stream position
     farm3 = _bare_farm(n_cores=1)
@@ -137,6 +137,56 @@ def test_recovered_process_keeps_journaling_same_file(tmp_path):
     np.testing.assert_array_equal(second, solo.draw("core0", "t", 70))
     np.testing.assert_array_equal(farm3.draw("core0", "t", 55),
                                   solo.draw("core0", "t", 55))
+
+
+def test_rotation_bounds_replay_and_survives_kill(tmp_path):
+    """Journal rotation: after ``rotate_every`` flushes the live JSONL is
+    rotated aside and the new segment opens with a full farm-snapshot
+    checkpoint.  A kill AFTER the rotation boundary replays from the
+    checkpoint — only the post-checkpoint flush deltas recompute (replay
+    cost bounded by the window, not absolute position) — and every
+    stream continues bit-identically to an uncrashed reference."""
+    jpath = tmp_path / "farm.journal"
+    delivered = {}
+    boxes = []
+
+    async def serve():
+        fc = FakeClock()
+        farm = _bare_farm(n_cores=1, clock=fc)
+        j = FlushJournal(jpath, clock=fc, rotate_every=2)
+        boxes.append(j)
+        async with AsyncOscillatorFarm(farm, clock=fc, journal=j) as af:
+            af.register("core0", "t", seed=40)
+            # flush 1 + flush 2; the 2nd record triggers the rotation
+            delivered["d1"] = await af.draw("core0", "t", 200, deadline_ms=0)
+            delivered["d2"] = await af.draw("core0", "t", 100, deadline_ms=0)
+            # flush 3 lands in the NEW segment, after the checkpoint —
+            # 400 words outruns the buffered overdraw, forcing a launch
+            delivered["d3"] = await af.draw("core0", "t", 400, deadline_ms=0)
+
+    _run(serve())
+    j = boxes[0]
+    j.close()
+    assert j.rotations == 1
+    # the sealed segment is kept as an audit trail
+    assert list(tmp_path.glob("farm.journal.0*"))
+
+    farm2 = _bare_farm(n_cores=1)
+    info = replay_journal(farm2, jpath)
+    assert info["checkpoint_seq"] == 2
+    assert info["flushes"] == 3
+    row_at_kill = farm2.services["core0"].clients["t"].row
+    # bounded replay: only the post-checkpoint delta recomputed
+    assert 0 < info["rows_replayed"] < row_at_kill
+
+    solo = _farm(gang=False, n_cores=1)
+    for k, n in (("d1", 200), ("d2", 100), ("d3", 400)):
+        np.testing.assert_array_equal(delivered[k],
+                                      solo.draw("core0", "t", n))
+    # undelivered tail across the checkpoint survives, and the stream
+    # continues bit-exactly past the kill point
+    np.testing.assert_array_equal(farm2.draw("core0", "t", 120),
+                                  solo.draw("core0", "t", 120))
 
 
 # ---------------------------------------------------------------------------
@@ -158,7 +208,7 @@ def test_torn_tail_record_is_discarded(tmp_path):
     # the crash lands mid-append: a torn, non-JSON final line
     with open(jpath, "a", encoding="utf-8") as f:
         f.write('{"type":"flush","seq":2,"cor')
-    regs, last_seq, positions, torn = read_journal(jpath)
+    regs, last_seq, positions, torn, _ = read_journal(jpath)
     assert torn is True and last_seq == 1
     farm2 = _bare_farm(n_cores=1)
     info = replay_journal(farm2, jpath)
@@ -177,15 +227,15 @@ def test_replay_refuses_mismatched_farm(tmp_path):
         replay_journal(_bare_farm(n_cores=1), jpath)
 
 
-def test_replay_refuses_advanced_client():
-    """replay_client is a from-zero rebuild: replaying onto a client that
-    already served words would corrupt stream positions, so it refuses
-    (and a farm with pre-registered clients fails the re-register)."""
+def test_replay_refuses_rewind():
+    """replay_client advances forward only (from row 0 or a checkpoint):
+    replaying a position BEHIND a client that already served words would
+    corrupt stream state, so it refuses."""
     farm = _bare_farm(n_cores=1)
     farm.register("core0", "t", seed=40)
     farm.draw("core0", "t", 10)
-    with pytest.raises(ValueError, match="replay"):
-        farm.services["core0"].replay_client("t", row=5)
+    with pytest.raises(ValueError, match="rewind"):
+        farm.services["core0"].replay_client("t", row=0)
 
 
 def test_journal_timestamps_come_from_the_clock(tmp_path):

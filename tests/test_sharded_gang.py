@@ -1,0 +1,228 @@
+"""Device-sharded gang launches: one logical farm across every chip.
+
+The sharded gang contract is the single-device gang contract, lifted:
+partitioning a gang launch's lane blocks across a mesh axis must change
+NOTHING about the words — per lane, the sharded launch is bit-identical
+to the single-device gang kernel AND to a solo per-core launch, at every
+device count, in both layouts (ragged lane-block gang and sublane
+stack), at both widths (f32 and bf16), under ragged demand.  Streams are
+therefore device-count-invariant: a snapshot taken sharded restores onto
+an unsharded farm (and vice versa) and continues bit-exactly — but only
+through the explicit ``on_topology_mismatch="replan"`` path, because
+cached plans are NOT topology-invariant.
+
+Multi-device tests force host devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI sharded
+leg); on a plain 1-device run they skip and the always-on tests below
+still cover the mesh-of-one and topology-mismatch seams.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.kernels import ops
+from repro.serve.farm import OscillatorFarm, _compat_key, _topology
+
+from test_gang import CAND, _params, _stacked
+from test_kernels import _mk
+
+N_DEV = jax.device_count()
+DEVICE_COUNTS = (2, 4, 8)
+
+
+def _mesh(n_dev):
+    if N_DEV < n_dev:
+        pytest.skip(
+            f"needs {n_dev} host devices, have {N_DEV} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_dev}")
+    return Mesh(np.array(jax.devices()[:n_dev]), ("data",))
+
+
+# ---------------------------------------------------------------------------
+# Kernel level: ops routing with a mesh == ops routing without one
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_dev", DEVICE_COUNTS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sharded_gang_bits_matches_unsharded(n_dev, dtype):
+    """Ragged lane-block gang across a mesh: words and final state are
+    bit-identical to the 1-device gang kernel, including when the block
+    count does not divide the device count (dead-block padding) and
+    under a demand-shaped row_map."""
+    mesh = _mesh(n_dev)
+    s_block, n_steps = 128, 64
+    plist = [_params(key=k) for k in range(3)]
+    # 6 blocks: divides 2, not 4, not 8 — exercises gang_partition_maps
+    core_map = np.asarray([0, 2, 1, 2, 0, 1], np.int32)
+    s_total = len(core_map) * s_block
+    _, _, _, _, x0 = _mk(3, 8, s_total, key=9)
+    x0 = x0.astype(dtype)
+    rng = np.random.default_rng(3)
+    offs = jnp.asarray(rng.integers(0, 10_000, size=s_total), np.uint32)
+    row_map = np.asarray([32, 7, 0, 32, 13, 21], np.int32)
+
+    kw = dict(backend="pallas_interpret", s_block=s_block, t_block=32,
+              unroll=2)
+    for rmap in (None, row_map):
+        ref_w, ref_s = ops.chaotic_bits_gang(
+            _stacked(plist), x0, n_steps, offs, core_map=core_map,
+            row_map=rmap, **kw)
+        got_w, got_s = ops.chaotic_bits_gang(
+            _stacked(plist), x0, n_steps, offs, core_map=core_map,
+            row_map=rmap, mesh=mesh, **kw)
+        eff = (ops.gang_effective_rows(rmap, n_steps, 32, 2)
+               if rmap is not None
+               else np.full(len(core_map), n_steps // 2, np.int32))
+        for g in range(len(core_map)):
+            sl = slice(g * s_block, (g + 1) * s_block)
+            r = int(eff[g])     # rows past a block's demand are garbage
+            np.testing.assert_array_equal(np.asarray(got_w)[:r, sl],
+                                          np.asarray(ref_w)[:r, sl])
+            np.testing.assert_array_equal(
+                np.asarray(jnp.asarray(got_s[sl], jnp.float32)),
+                np.asarray(jnp.asarray(ref_s[sl], jnp.float32)))
+
+
+@pytest.mark.parametrize("n_dev", DEVICE_COUNTS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sharded_stacked_matches_unsharded_and_per_core(n_dev, dtype):
+    """Sublane-stacked gang sharded on the STREAM axis: bit-identical to
+    the 1-device stacked kernel and to solo per-core launches, under a
+    ragged per-core row_map."""
+    mesh = _mesh(n_dev)
+    C, S, n_steps = 3, 1024, 64       # S divides every forced n_dev
+    plist = [_params(key=k) for k in range(C)]
+    _, _, _, _, x0 = _mk(3, 8, C * S, key=6)
+    x0 = x0.reshape(C, S, 3).astype(dtype)
+    rng = np.random.default_rng(8)
+    offs = jnp.asarray(rng.integers(0, 10_000, size=(C, S)), np.uint32)
+    row_map = np.asarray([32, 11, 0], np.int32)
+
+    kw = dict(backend="pallas_interpret", s_block=128, t_block=32, unroll=2)
+    ref_w, ref_s = ops.chaotic_bits_gang_stacked(
+        _stacked(plist), x0, n_steps, offs, row_map=row_map, **kw)
+    got_w, got_s = ops.chaotic_bits_gang_stacked(
+        _stacked(plist), x0, n_steps, offs, row_map=row_map, mesh=mesh,
+        **kw)
+    for c in range(C):
+        r = int(row_map[c])
+        np.testing.assert_array_equal(np.asarray(got_w)[:r, c],
+                                      np.asarray(ref_w)[:r, c])
+        np.testing.assert_array_equal(
+            np.asarray(jnp.asarray(got_s[c], jnp.float32)),
+            np.asarray(jnp.asarray(ref_s[c], jnp.float32)))
+        if r:   # per-core solo identity on the demanded prefix
+            w, _ = ops.chaotic_bits(plist[c], x0[c], 2 * r, offs[c], **kw)
+            np.testing.assert_array_equal(np.asarray(got_w)[:r, c],
+                                          np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# Farm level: sharded flushes == unsharded flushes == solo streams
+# ---------------------------------------------------------------------------
+
+def _mk_farm(mesh, *, gang=True, n_cores=3, dtype=None, seed_base=11):
+    farm = OscillatorFarm(gang=gang, planner=gang)
+    for i in range(n_cores):
+        farm.add_core(f"c{i}", _params(key=30 + i), config=CAND,
+                      dtype=dtype, lanes_per_client=128,
+                      backend="pallas_interpret", mesh=mesh)
+        farm.register(f"c{i}", "t", seed=seed_base + i)
+    return farm
+
+
+@pytest.mark.parametrize("n_dev", DEVICE_COUNTS)
+@pytest.mark.parametrize("dtype", [None, jnp.bfloat16])
+def test_farm_flush_bit_identical_across_topologies(n_dev, dtype):
+    """The whole serving path on a mesh: skewed demand (ragged/split
+    planner choices) then equal demand (stacked-eligible) both deliver
+    words bit-identical to an unsharded gang farm AND to a gang-less
+    solo farm, and the meshed cores share one compat group."""
+    mesh = _mesh(n_dev)
+    farms = [_mk_farm(None, gang=False, dtype=dtype),
+             _mk_farm(None, dtype=dtype),
+             _mk_farm(mesh, dtype=dtype)]
+    meshed = farms[2]
+    assert len({_compat_key(s) for s in meshed.services.values()}) == 1
+
+    for demand in ({"c0": 4096, "c1": 512, "c2": 512},       # skewed
+                   {"c0": 1024, "c1": 1024, "c2": 1024}):    # equal
+        outs = []
+        for f in farms:
+            for core, n in demand.items():
+                f.request(core, "t", n)
+            outs.append(f.flush())
+        for core in demand:
+            np.testing.assert_array_equal(outs[2][core]["t"],
+                                          outs[1][core]["t"])
+            np.testing.assert_array_equal(outs[2][core]["t"],
+                                          outs[0][core]["t"])
+    # it actually ganged on the mesh (no silent solo fallback)
+    assert meshed.gang_launches > 0
+
+
+@pytest.mark.parametrize("n_dev", DEVICE_COUNTS)
+def test_snapshot_round_trips_across_topologies(n_dev):
+    """Snapshot sharded -> restore unsharded and vice versa: default
+    refuses (stale plans are topology-bound); ``replan`` continues every
+    stream bit-exactly because words are device-count-invariant."""
+    mesh = _mesh(n_dev)
+    sharded, flat = _mk_farm(mesh), _mk_farm(None)
+    for f in (sharded, flat):
+        f.request("c0", "t", 700)
+        f.request("c1", "t", 300)
+        f.flush()
+
+    for snap_src, dst_mesh in ((sharded, None), (flat, mesh)):
+        snap = snap_src.snapshot()
+        dst = _mk_farm(dst_mesh)
+        with pytest.raises(ValueError, match="topology"):
+            dst.restore(snap)
+        dst.restore(snap, on_topology_mismatch="replan")
+        for f in (snap_src, dst):
+            f.request("c0", "t", 777)
+            f.request("c2", "t", 130)
+        a, b = snap_src.flush(), dst.flush()
+        np.testing.assert_array_equal(a["c0"]["t"], b["c0"]["t"])
+        np.testing.assert_array_equal(a["c2"]["t"], b["c2"]["t"])
+
+
+# ---------------------------------------------------------------------------
+# Always-on seams (no forced devices needed)
+# ---------------------------------------------------------------------------
+
+def test_mesh_of_one_routes_to_unsharded_kernels():
+    """A 1-device mesh is a real topology for the compat key but must
+    route to the plain gang kernels (no shard_map overhead) — words
+    bit-identical to mesh=None."""
+    mesh1 = Mesh(np.array(jax.devices()[:1]), ("data",))
+    flat, meshed = _mk_farm(None), _mk_farm(mesh1)
+    assert _topology(meshed.services["c0"]) == ("data", 1, (0,))
+    assert _topology(flat.services["c0"]) is None
+    for f in (flat, meshed):
+        f.request("c0", "t", 500)
+        f.request("c1", "t", 200)
+    a, b = flat.flush(), meshed.flush()
+    np.testing.assert_array_equal(a["c0"]["t"], b["c0"]["t"])
+    np.testing.assert_array_equal(a["c1"]["t"], b["c1"]["t"])
+
+
+def test_mesh_of_one_topology_mismatch_still_refused():
+    """Even a 1-device mesh differs from no mesh in the compat key and
+    snapshot topology: restore across that boundary refuses by default
+    and names the changed cores."""
+    mesh1 = Mesh(np.array(jax.devices()[:1]), ("data",))
+    meshed, flat = _mk_farm(mesh1), _mk_farm(None)
+    meshed.request("c0", "t", 300)
+    meshed.flush()
+    snap = meshed.snapshot()
+    with pytest.raises(ValueError) as ei:
+        flat.restore(snap)
+    assert "topology" in str(ei.value) and "c0" in str(ei.value)
+    flat.restore(snap, on_topology_mismatch="replan")
+    for f in (meshed, flat):
+        f.request("c0", "t", 256)
+    np.testing.assert_array_equal(meshed.flush()["c0"]["t"],
+                                  flat.flush()["c0"]["t"])
