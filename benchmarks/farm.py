@@ -49,6 +49,14 @@ Sections:
   1-device gang path, launches/flush invariance as devices scale, and
   words/s scaling where the host has the CPUs to show it.
 
+* ``resilience`` — the self-healing layer under a seeded fault storm:
+  words/s and p99 round latency before / during / after a 10%-transient
+  launch-failure storm with one poisoned core (its monitor samples
+  bit-masked so the online NIST gate condemns it).  Gated on the PR 9
+  acceptance bars: quarantine + standby rotation within 3 flushes,
+  degraded throughput >= 0.5x clean, and every delivered word
+  bit-identical to fault-free solo runs (rotation split included).
+
 All timed flushes separate warmup/compile from steady state: the first
 flush (XLA compiles here) is reported as ``ms_first_flush``, steady-state
 ``words_per_s`` starts after one further warm flush.  Delivered words are
@@ -778,6 +786,157 @@ def _planner_section(n_streams, p, lm, cm, smoke, profile=False):
     return result
 
 
+TRANSIENT_RATE = 0.10             # the resilience storm's launch-fault coin
+FAULT_SEED = 2                    # chosen so the coin lands in a short run
+
+
+def _resilience_section(n_streams, p, lm, cm, smoke):
+    """Self-healing under a seeded fault storm: words/s + p99 round
+    latency before / during / after a 10%-transient-launch-failure storm
+    with one poisoned core.
+
+    The storm phase arms a ``FaultPlan``: every launch flips a seeded 10%
+    coin (a transient failure the supervision layer must retry with
+    FakeClock-disciplined backoff — real time here, but the same code
+    path the FakeClock suite drives), and the first group core's monitor
+    samples are bit-masked so the online NIST gate condemns it.  The
+    farm must quarantine the poisoned core and rotate its standby in
+    within 3 flushes, keep degraded throughput at >= 0.5x the clean
+    phase, and deliver every word bit-identical to fault-free solo runs
+    (the poisoned core: original-core words up to the rotation flush,
+    standby-from-row-0 words after).
+    """
+    from repro.serve.async_frontend import (AsyncOscillatorFarm,
+                                            percentile)
+    from repro.serve.faults import FaultPlan
+    from repro.serve.health import HealthMonitor
+
+    group, cand = _compatible_group(p, lm, cm)
+    n_clients = max(1, n_streams // LANES_PER_CLIENT)
+    tenants = [(name, f"c{j}") for name in group for j in range(n_clients)]
+    words_per_draw = ASYNC_ROWS * LANES_PER_CLIENT
+    words_per_round = len(tenants) * words_per_draw
+    round_rows = len(group) * ASYNC_ROWS
+    poisoned = group[0]
+    # one round delivers n_clients * words_per_draw words per core: size
+    # the quality window to fill (and be judged) every round
+    window = max(256, n_clients * words_per_draw)
+    rounds = {"before": 3, "during": 5, "after": 3} if smoke else \
+             {"before": 5, "during": 8, "after": 5}
+
+    faults = FaultPlan(seed=FAULT_SEED, transient_rate=TRANSIENT_RATE,
+                       poison={poisoned})
+    faults.disarm()                        # armed only for the storm phase
+    health = HealthMonitor(window_words=window, breaker_threshold=5,
+                           backoff_base_ms=1.0, backoff_cap_ms=20.0)
+    farm = _build_farm(group, cand, n_clients, True, faults=faults)
+    farm.add_standby(poisoned, default_params(system=poisoned),
+                     config=cand, dtype=jnp.dtype(cand.dtype_name),
+                     lanes_per_client=LANES_PER_CLIENT,
+                     backend="pallas_interpret")
+
+    delivered = {}
+    phase_times = {}
+    rotated_after = [None]                 # storm flushes until rotation
+
+    async def _round(af):
+        futs = [af.submit(core, cl, words_per_draw,
+                          deadline_ms=ASYNC_DEADLINE_MS)
+                for core, cl in tenants]
+        out = list(await asyncio.gather(*futs))
+        for (core, cl), w in zip(tenants, out):
+            delivered.setdefault((core, cl), []).append(np.asarray(w))
+
+    async def _bench():
+        async with AsyncOscillatorFarm(farm, offload=False, health=health,
+                                       auto_flush_rows=round_rows) as af:
+            await _round(af)               # compile + warm (untimed)
+            for phase in ("before", "during", "after"):
+                if phase == "during":
+                    faults.arm()
+                elif phase == "after":
+                    faults.disarm()
+                times = []
+                for i in range(rounds[phase]):
+                    t0 = time.perf_counter()
+                    await _round(af)
+                    times.append((time.perf_counter() - t0) * 1e3)
+                    if (phase == "during" and rotated_after[0] is None
+                            and farm.rotations.get(poisoned) == 1):
+                        rotated_after[0] = i + 1
+                phase_times[phase] = times
+
+    asyncio.run(_bench())
+
+    # --- bit-identity: every tenant vs fault-free solo runs ---------------
+    n_rounds_total = 1 + sum(rounds.values())          # incl. warm round
+    solo = _build_farm(group, cand, n_clients, False)
+    standby_solo = OscillatorFarm(gang=False)
+    standby_solo.add_core(poisoned, default_params(system=poisoned),
+                          config=cand, dtype=jnp.dtype(cand.dtype_name),
+                          lanes_per_client=LANES_PER_CLIENT,
+                          backend="pallas_interpret")
+    for j in range(n_clients):
+        standby_solo.register(poisoned, f"c{j}", seed=100 + j)
+    bit_identical = True
+    for (core, cl), chunks in delivered.items():
+        if core == poisoned:
+            continue
+        mine = np.concatenate(chunks)
+        bit_identical &= bool(
+            np.array_equal(mine, solo.draw(core, cl, mine.size)))
+    total = n_rounds_total * words_per_draw
+    ref_orig = {f"c{j}": solo.draw(poisoned, f"c{j}", total)
+                for j in range(n_clients)}
+    ref_stand = {f"c{j}": standby_solo.draw(poisoned, f"c{j}", total)
+                 for j in range(n_clients)}
+    split_found = None
+    for k in range(n_rounds_total + 1):    # k = rounds before the rotation
+        cut = k * words_per_draw
+        if all(np.array_equal(
+                np.concatenate(delivered[(poisoned, cl)]),
+                np.concatenate([ref_orig[cl][:cut],
+                                ref_stand[cl][:total - cut]]))
+               for _, cl in tenants if _ == poisoned):
+            split_found = k
+            break
+    bit_identical &= split_found is not None
+
+    stats = {}
+    for phase, times in phase_times.items():
+        ts = sorted(times)
+        stats[phase] = {
+            "ms_per_round": ts[len(ts) // 2],
+            "p99_round_ms": percentile(times, 0.99),
+            "words_per_s": words_per_round / (ts[len(ts) // 2] / 1e3),
+        }
+    frac = stats["during"]["words_per_s"] / stats["before"]["words_per_s"]
+    result = {
+        "group": group, "poisoned_core": poisoned,
+        "n_tenants": len(tenants),
+        "transient_rate": TRANSIENT_RATE, "fault_seed": FAULT_SEED,
+        "window_words": window,
+        "rounds": rounds,
+        "phases": stats,
+        "injected": dict(faults.injected),
+        "retries": health.stats["retries"],
+        "breaker_trips": health.stats["breaker_trips"],
+        "quality_quarantines": health.stats["quality_quarantines"],
+        "quarantined_within_flushes": rotated_after[0],
+        "rotation_split_round": split_found,
+        "rotations": dict(farm.rotations),
+        "degraded_words_per_s_frac": frac,
+        "bit_identical": bool(bit_identical),
+    }
+    emit("farm/resilience", stats["during"]["ms_per_round"] * 1e3,
+         f"degraded_frac={frac:.2f};"
+         f"rotated_within={rotated_after[0]};"
+         f"transients={faults.injected['transient']};"
+         f"retries={health.stats['retries']};"
+         f"during_words_per_s={stats['during']['words_per_s']:.3e}")
+    return result
+
+
 def run_farm(n_streams: int = 256, n_steps: int = 1024, p: int = 1,
              out_json: str | None = "BENCH_farm.json",
              smoke: bool = False, nist_words: int = 20_000,
@@ -792,6 +951,7 @@ def run_farm(n_streams: int = 256, n_steps: int = 1024, p: int = 1,
     async_offload = _async_offload_section(n_streams, p, lm, cm, smoke)
     planner = _planner_section(n_streams, p, lm, cm, smoke, profile=profile)
     sharded = _sharded_section(n_streams, p, lm, cm, smoke)
+    resilience = _resilience_section(n_streams, p, lm, cm, smoke)
     res = {"config": {"n_streams": n_streams, "n_steps": n_steps,
                       "pareto_p": p, "backend": "pallas_interpret",
                       "smoke": smoke},
@@ -800,7 +960,8 @@ def run_farm(n_streams: int = 256, n_steps: int = 1024, p: int = 1,
            "async": async_,
            "async_offload": async_offload,
            "planner": planner,
-           "sharded": sharded}
+           "sharded": sharded,
+           "resilience": resilience}
     if out_json:
         pathlib.Path(out_json).write_text(json.dumps(res, indent=2))
     return res
@@ -904,6 +1065,37 @@ def sharded_gate(res: dict) -> list[str]:
     return errors
 
 
+def resilience_gate(res: dict) -> list[str]:
+    """CI perf-smoke acceptance for the self-healing layer: under the
+    seeded 10%-transient + one-poisoned-core storm, the poisoned core
+    must quarantine and rotate within 3 flushes, the storm must actually
+    have injected faults, degraded throughput must hold >= 0.5x the
+    clean phase, and every delivered word (rotation included) must be
+    bit-identical to fault-free solo runs."""
+    errors = []
+    r = res["resilience"]
+    if not r.get("bit_identical"):
+        errors.append("storm-delivered words NOT bit-identical to "
+                      "fault-free solo runs (no rotation split matches)")
+    if r["quarantined_within_flushes"] is None or \
+            r["quarantined_within_flushes"] > 3:
+        errors.append(
+            f"poisoned core not quarantined+rotated within 3 flushes "
+            f"(took {r['quarantined_within_flushes']})")
+    if r["injected"]["transient"] < 1:
+        errors.append("the seeded storm injected no transient launch "
+                      "failures — the retry path went unexercised")
+    if r["retries"] < 1:
+        errors.append("transient failures were injected but never "
+                      "retried")
+    if r["degraded_words_per_s_frac"] < 0.5:
+        errors.append(
+            f"degraded throughput below bar: storm words/s is "
+            f"{r['degraded_words_per_s_frac']:.2f}x the clean phase "
+            f"(bar: >= 0.5x)")
+    return errors
+
+
 if __name__ == "__main__":
     import sys
     res = run_farm(smoke="--smoke" in sys.argv,
@@ -912,6 +1104,7 @@ if __name__ == "__main__":
     errors += [f"ASYNC GATE FAIL: {e}" for e in async_gate(res)]
     errors += [f"OFFLOAD GATE FAIL: {e}" for e in async_offload_gate(res)]
     errors += [f"SHARDED GATE FAIL: {e}" for e in sharded_gate(res)]
+    errors += [f"RESILIENCE GATE FAIL: {e}" for e in resilience_gate(res)]
     if errors:
         for e in errors:
             print(e, file=sys.stderr)
@@ -938,3 +1131,10 @@ if __name__ == "__main__":
     print(f"sharded gate OK: devices={sh['device_counts']}, "
           f"bit-identical, launches/flush invariant, 4v1 speedup "
           f"{'n/a' if sp is None else f'{sp:.2f}x'} (gate {gate_state})")
+    r = res["resilience"]
+    print(f"resilience gate OK: poisoned core rotated within "
+          f"{r['quarantined_within_flushes']} flush(es), "
+          f"{r['injected']['transient']} transients / {r['retries']} "
+          f"retries, degraded throughput "
+          f"{r['degraded_words_per_s_frac']:.2f}x clean, bit-identical "
+          f"through the storm")

@@ -17,12 +17,16 @@ core-contract             generated cores draw through fused ops.chaotic_bits
                           with word_offset + final-state plumbing; serve/
                           never wraps its own shard_map around a launch
                           (sharding is owned by the gang path)
+backoff-discipline        serve/ retry/backoff delays route through the
+                          injected Clock (clock.wait), never asyncio.sleep —
+                          FakeClock must drive the whole resilience suite
 ========================  ==================================================
 """
 from typing import List
 
 from repro.analysis.engine import Rule
 from repro.analysis.rules.async_blocking import AsyncBlockingRule
+from repro.analysis.rules.backoff_discipline import BackoffDisciplineRule
 from repro.analysis.rules.broad_except import BroadExceptRule
 from repro.analysis.rules.clock_discipline import ClockDisciplineRule
 from repro.analysis.rules.core_contract import CoreContractRule
@@ -40,4 +44,5 @@ def all_rules() -> List[Rule]:
         KernelDtypeRule(),
         BroadExceptRule(),
         CoreContractRule(),
+        BackoffDisciplineRule(),
     ]

@@ -1,0 +1,44 @@
+"""backoff-discipline: serve/ retry delays go through the injected Clock.
+
+The supervision layer (PR 9) retries failed launches with exponential
+backoff *under the single-flight lock*.  If that delay is an
+``asyncio.sleep``, the whole resilience suite needs real wall time — a
+3-retry storm at 200 ms cap is seconds of sleeping per test, and a
+``FakeClock`` cannot drive it at all (fake time advancing does not wake
+a real sleep).  Every delay in ``serve/`` must route through the
+injectable ``Clock`` seam instead — ``await clock.wait(event, timeout)``
+— which a ``FakeClock.advance()`` wakes deterministically with zero real
+sleeps.  (Blocking ``time.sleep`` on the loop thread is the
+``async-blocking`` rule's beat; this rule covers the *async* sleep that
+looks innocent but breaks fake-time drivability.)
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.engine import FileContext, Finding, Rule
+
+
+class BackoffDisciplineRule(Rule):
+    name = "backoff-discipline"
+    doc = "serve/ delays route through the injected Clock, not asyncio.sleep"
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith("src/repro/serve/")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if (isinstance(f, ast.Attribute) and f.attr == "sleep"
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id == "asyncio"):
+                yield self.finding(
+                    ctx, node,
+                    "asyncio.sleep() is invisible to FakeClock — retry/"
+                    "backoff delays in serve/ must `await clock.wait("
+                    "asyncio.Event(), delay_s)` through the injected "
+                    "Clock so fake-time tests drive them with zero real "
+                    "sleeps")

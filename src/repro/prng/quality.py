@@ -10,18 +10,37 @@ entry may train fine yet emit biased words after the bf16 mantissa fold.
 Used from tests (tier-1 gate: every f32 system must pass) and from
 ``benchmarks/farm.py`` (quarantined systems are marked in
 BENCH_farm.json so a serving rollout can exclude them).
+
+Two gates live here:
+
+* :func:`nist_gate` / :func:`sweep_registry` — the OFFLINE sweep: the
+  full 7-test subset over ``GATE_WORDS`` freshly generated words per
+  (system, dtype), run from CI;
+* :func:`online_gate` — the ONLINE monitor: a cheap 3-test subset
+  (monobit, block frequency, runs) over a rolling window of words a
+  farm core actually *served*, cheap enough to run per flush on the
+  serving executor.  ``repro.serve.health.HealthMonitor`` feeds it and
+  turns verdicts into quarantine + core rotation.
 """
 from __future__ import annotations
 
 from typing import Dict, Iterable, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.prng.nist import run_nist_subset
+from repro.prng.nist import (_to_bits, block_frequency, monobit, runs,
+                             run_nist_subset)
 from repro.prng.stream import ChaoticPRNG, default_params
 
 GATE_WORDS = 30_000          # ~0.96 Mbit per gated stream
 GATE_ALPHA = 0.01
+
+# Online monitoring: one rolling window of served words per core.  4096
+# words = 128 Kbit — enough that a poisoned stream hard-fails monobit in
+# ONE window while a healthy stream's per-window soft-failure odds stay
+# at the single-test alpha.
+ONLINE_WINDOW_WORDS = 4096
 
 # A single NIST test at alpha=0.01 has a ~1% false-positive rate; gating a
 # whole registry on "zero failures anywhere" would flake.  A (system,
@@ -60,6 +79,34 @@ def nist_gate(system: str, dtype: str = "float32", *,
         "passed": not failed,
         "quarantined": quarantine,
     }
+
+
+def online_gate(words: np.ndarray, *,
+                alpha: float = GATE_ALPHA) -> Dict[str, object]:
+    """Gate ONE rolling window of served words (the online monitor).
+
+    Runs the cheap third of the NIST subset — monobit, block frequency,
+    runs — over exactly the words given (no generation; the caller
+    sampled them off a live core).  Returns the same verdict shape as
+    :func:`nist_gate`: ``failed_tests`` are tests under ``alpha``
+    (chance-plausible for a single window — the caller should demand
+    consecutive failing windows before acting), ``hard_failed_tests``
+    are tests under ``ALPHA_HARD`` (far outside false-positive
+    territory: act immediately).
+    """
+    words = np.asarray(words, np.uint32).reshape(-1)
+    if words.size == 0:
+        raise ValueError("online_gate needs a non-empty word window")
+    bits = _to_bits(words)
+    p_values = {"monobit": monobit(bits),
+                "block_frequency": block_frequency(bits),
+                "runs": runs(bits)}
+    failed = sorted(k for k, v in p_values.items() if v < alpha)
+    hard_failed = sorted(k for k, v in p_values.items()
+                         if v < ALPHA_HARD)
+    return {"n_words": int(words.size), "p_values": p_values,
+            "failed_tests": failed, "hard_failed_tests": hard_failed,
+            "passed": not failed}
 
 
 def sweep_registry(systems: Optional[Iterable[str]] = None,

@@ -34,10 +34,20 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import threading
 from typing import Dict, Optional, Tuple
 
 from repro.serve.clock import Clock, SystemClock
+
+# Clamp on every Overloaded.retry_after_ms hint.  The floor kills two
+# stampede bugs: a sub-millisecond drain time rounds to a 0 ms hint
+# (every rejected client retries immediately, in lockstep), and the
+# never-admissible path used to leak float("inf") — a client honoring
+# the hint literally would back off forever instead of resizing the
+# request.  The cap keeps the hint a *retry* hint, not a farewell.
+RETRY_FLOOR_MS = 1.0
+RETRY_CAP_MS = 60_000.0
 
 
 class AdaptiveCeiling:
@@ -140,13 +150,20 @@ class Overloaded(RuntimeError):
     rejection it is the time until the token bucket covers the request;
     for a farm-ceiling rejection it is the controller's configured hint
     (the queue drains on flushes, whose timing the controller cannot
-    know).  ``scope`` is ``"tenant"`` or ``"farm"``.
+    know).  ``scope`` is ``"tenant"`` or ``"farm"``.  The hint is always
+    a positive finite number in ``[RETRY_FLOOR_MS, RETRY_CAP_MS]``: a
+    0 ms hint synchronizes every rejected client into a retry stampede,
+    and an infinite one (the never-admissible oversized path) tells a
+    literal-minded client to wait forever — both clamp.
     """
 
     def __init__(self, message: str, *, retry_after_ms: float, scope: str,
                  core: Optional[str] = None, client: Optional[str] = None):
         super().__init__(message)
-        self.retry_after_ms = float(retry_after_ms)
+        retry = float(retry_after_ms)
+        if not math.isfinite(retry):
+            retry = RETRY_CAP_MS
+        self.retry_after_ms = min(RETRY_CAP_MS, max(RETRY_FLOOR_MS, retry))
         self.scope = scope
         self.core = core
         self.client = client
@@ -230,6 +247,10 @@ class AdmissionController:
         self._buckets: Dict[Tuple[str, str], _Bucket] = {}
         self._lock = threading.Lock()
         self._queued_rows = 0
+        # Degraded-mode accounting: the supervision layer sets this to
+        # (healthy cores / total cores) on quarantine/rotation, shrinking
+        # the queued-rows ceiling with the lost capacity.
+        self._capacity_factor = 1.0
         self.admitted = 0
         self.rejected_tenant = 0
         self.rejected_farm = 0
@@ -243,12 +264,32 @@ class AdmissionController:
         return self._queued_rows
 
     @property
+    def capacity_factor(self) -> float:
+        """Serving capacity still healthy, in [0, 1] (1.0 = full farm)."""
+        return self._capacity_factor
+
+    def set_capacity_factor(self, factor: float) -> None:
+        """Scale the queued-rows ceiling by the healthy-capacity fraction
+        (the supervision layer calls this on quarantine and rotation —
+        a quarantined core's launch throughput is gone, so the backlog
+        the farm can drain in bounded delay shrinks with it)."""
+        with self._lock:
+            self._capacity_factor = min(1.0, max(0.0, float(factor)))
+
+    @property
     def current_ceiling(self) -> Optional[int]:
         """The queued-rows ceiling in force right now: the adaptive
-        ceiling when attached, else the static ``max_queued_rows``."""
-        if self.adaptive is not None:
-            return self.adaptive.ceiling()
-        return self.max_queued_rows
+        ceiling when attached, else the static ``max_queued_rows`` —
+        either one scaled by the degraded-capacity factor.
+
+        Lock-free on purpose: ``admit`` reads it while holding the
+        controller lock, and ``set_capacity_factor`` publishes a single
+        float (atomic under the GIL)."""
+        base = (self.adaptive.ceiling() if self.adaptive is not None
+                else self.max_queued_rows)
+        if base is None:
+            return None
+        return int(base * self._capacity_factor)
 
     def release(self, rows: int) -> None:
         """Return ``rows`` to the ceiling gauge (request left the queue:
@@ -323,4 +364,5 @@ class AdmissionController:
                 "rejected_tenant": float(self.rejected_tenant),
                 "rejected_farm": float(self.rejected_farm),
                 "queued_rows": float(self._queued_rows),
-                "ceiling": -1.0 if ceiling is None else float(ceiling)}
+                "ceiling": -1.0 if ceiling is None else float(ceiling),
+                "capacity_factor": float(self._capacity_factor)}

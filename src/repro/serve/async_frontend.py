@@ -95,6 +95,7 @@ import numpy as np
 from repro.serve.admission import AdmissionController
 from repro.serve.clock import Clock, SystemClock
 from repro.serve.farm import OscillatorFarm
+from repro.serve.health import CoreQuarantined, HealthMonitor
 from repro.serve.journal import FlushJournal
 
 _Future = Union["asyncio.Future", "concurrent.futures.Future"]
@@ -148,6 +149,18 @@ class AsyncOscillatorFarm:
     ``stats_window`` / ``error_window`` bound ``deadline_stats()`` and
     ``flush_errors`` to the most recent N samples/errors (ring buffers) —
     a long-running front-end holds constant memory.
+
+    ``health=HealthMonitor(...)`` arms the supervision layer
+    (``repro.serve.health``): transient launch failures are retried with
+    capped exponential backoff under the single-flight lock (the batch's
+    demand stays parked at the same absolute stream rows, so retried
+    words are bit-identical to a never-failed flush); consecutive
+    failures trip a per-core circuit breaker; and an online NIST gate
+    over words each core actually served quarantines a degraded core —
+    rotating its standby into the routing slot when the farm has one,
+    failing its tenants with a typed ``CoreQuarantined`` otherwise.
+    Quarantines/rotations are journaled (when a journal is attached) and
+    shrink the admission ceiling by the lost capacity fraction.
     """
 
     def __init__(self, farm: OscillatorFarm, *,
@@ -158,9 +171,13 @@ class AsyncOscillatorFarm:
                  executor: Optional[concurrent.futures.Executor] = None,
                  admission: Optional[AdmissionController] = None,
                  journal: Union[FlushJournal, str, os.PathLike, None] = None,
+                 health: Optional[HealthMonitor] = None,
                  stats_window: int = 4096,
                  error_window: int = 64):
         self.farm = farm
+        self.health = health
+        if health is not None:
+            farm.attach_monitor(health)
         self.auto_flush_rows = auto_flush_rows
         self.default_deadline_ms = default_deadline_ms
         self.clock: Clock = clock or farm.clock or SystemClock()
@@ -302,6 +319,7 @@ class AsyncOscillatorFarm:
         if svc is None:
             raise KeyError(f"unknown core {core!r}; "
                            f"have {sorted(self.farm.services)}")
+        self.farm._check_serving(core)   # fail fast: CoreQuarantined
         if client not in svc.clients:
             raise KeyError(f"client {client!r} not registered on {core!r}")
         if n_words < 0:
@@ -551,6 +569,7 @@ class AsyncOscillatorFarm:
         requests arriving mid-launch stay queued for the next cycle.
         """
         batch: List[_Request] = []
+        quarantined = self.farm.quarantined
         for r in self._queue:
             self._release(r)
             f = r.future
@@ -558,6 +577,13 @@ class AsyncOscillatorFarm:
                 if not f.set_running_or_notify_cancel():
                     continue               # cancelled: demand rolled back
             elif f.cancelled():
+                continue
+            if r.core in quarantined:
+                # quarantined with no standby after this request queued:
+                # its demand never enters the farm
+                f.set_exception(CoreQuarantined(
+                    f"core {r.core!r} quarantined while request was "
+                    f"queued", core=r.core, reason="quarantined"))
                 continue
             batch.append(r)
         self._queue = []
@@ -622,6 +648,149 @@ class AsyncOscillatorFarm:
                 f"flush served no words for queued requests: "
                 f"{sorted(fifo)}")
 
+    async def _launch(self, slo_by_core: Dict[str, str]) -> None:
+        """The launch phase of one flush (executor when ``offload``)."""
+        launch = functools.partial(self.farm.flush, deliver=False,
+                                   slo_by_core=slo_by_core)
+        if self._offload:
+            # The loop stays live here: submits, cancellations,
+            # draw_sync ingress, and deadline tracking all proceed
+            # while the launch runs on the worker thread.
+            await self._loop.run_in_executor(self._executor, launch)
+        else:
+            launch()
+
+    async def _launch_with_retries(self, batch: List[_Request],
+                                   fifo: Dict[Tuple[str, str],
+                                              List[_Request]],
+                                   slo_by_core: Dict[str, str]) -> None:
+        """Launch the committed batch, supervised (``health=``).
+
+        A failed launch never reached ``absorb()`` for the failed group:
+        its demand is still parked at the same absolute stream rows, so a
+        retry (after capped exponential backoff through the injected
+        clock — FakeClock-drivable, zero real sleeps) serves words
+        bit-identical to a never-failed flush.  Groups that absorbed
+        before the failure have zero remaining demand and are skipped by
+        the retry's ``prepare_rows`` — never launched twice.  A core
+        whose consecutive failures trip the breaker is quarantined
+        mid-cycle: its batch requests fail with ``CoreQuarantined``, the
+        gang re-plans without it, and the remaining batch retries with a
+        fresh budget.  Without ``health=`` the first failure propagates
+        (the pre-supervision behavior).
+        """
+        health = self.health
+        attempt = 0
+        while True:
+            try:
+                await self._launch(slo_by_core)
+            # repro: allow[broad-except] reason=supervision seam: ANY launch failure is retried/attributed here; without health= it reraises unchanged
+            except Exception as e:
+                if health is None:
+                    raise
+                failed = sorted(set(getattr(e, "cores", ()))
+                                or {r.core for r in batch})
+                tripped = health.note_launch_failure(failed)
+                if tripped:
+                    for core in tripped:
+                        self._quarantine(
+                            core,
+                            reason=(f"circuit breaker: "
+                                    f"{health.breaker_threshold} consecutive "
+                                    f"launch failures ({e})"),
+                            batch=batch, fifo=fifo)
+                    if not batch:
+                        return
+                    attempt = 0   # topology changed: fresh retry budget
+                    continue      # relaunch now — the group re-plans
+                attempt += 1
+                if attempt > health.max_retries_per_flush:
+                    raise
+                health.stats["retries"] += 1
+                # private event: only the timeout (fake or real time
+                # advancing past the backoff) wakes this, never _wake
+                await self.clock.wait(asyncio.Event(),
+                                      health.backoff_ms(attempt) / 1e3)
+            else:
+                if health is not None and batch:
+                    health.note_launch_success({r.core for r in batch})
+                return
+
+    def _quarantine(self, core: str, *, reason: str,
+                    batch: Optional[List[_Request]] = None,
+                    fifo: Optional[Dict[Tuple[str, str],
+                                        List[_Request]]] = None) -> None:
+        """Quarantine ``core`` (journaled), rotate its standby in when one
+        exists, fail affected tenants with ``CoreQuarantined``, and shrink
+        the admission ceiling by the lost capacity.
+
+        Synchronous and loop-thread only (called under the single-flight
+        lock): farm mutation never interleaves with a launch.
+        """
+        changed = self.farm.quarantine(core, reason=reason)
+        if changed and self.journal is not None:
+            self.journal.record_quarantine(core, reason=reason)
+        rotated = False
+        if self.farm.has_standby(core):
+            self.farm.rotate(core)
+            rotated = True
+            if self.journal is not None:
+                self.journal.record_rotation(core)
+        err = CoreQuarantined(
+            f"core {core!r} quarantined: {reason}"
+            + (" — standby rotated into the slot; resubmit" if rotated
+               else " — no standby; resubmit on another core"),
+            core=core, reason=reason, rotated=rotated)
+        if batch is not None:
+            keep = []
+            for r in batch:
+                if r.core == core:
+                    if not r.future.done():
+                        r.future.set_exception(err)
+                else:
+                    keep.append(r)
+            batch[:] = keep
+        if fifo is not None:
+            for k in [k for k in fifo if k[0] == core]:
+                del fifo[k]
+        if not rotated:
+            # no standby: queued-but-uncommitted requests on this core can
+            # never be served either — fail them now instead of hanging
+            self._ingest()
+            keep = []
+            for r in self._queue:
+                if r.core != core:
+                    keep.append(r)
+                    continue
+                self._release(r)
+                f = r.future
+                if isinstance(f, concurrent.futures.Future):
+                    if f.set_running_or_notify_cancel():
+                        f.set_exception(err)
+                elif not f.done():
+                    f.set_exception(err)
+            self._queue = keep
+        if self.admission is not None:
+            total = len(self.farm.services)
+            healthy = total - len(self.farm.quarantined)
+            self.admission.set_capacity_factor(
+                healthy / total if total else 1.0)
+
+    async def _evaluate_quality(self) -> None:
+        """Run the online NIST gate over full sample windows (on the
+        executor under ``offload`` — the p-value math never blocks the
+        loop) and quarantine any core the monitor condemns."""
+        if self.health is None:
+            return
+        if self._offload:
+            verdicts = await self._loop.run_in_executor(
+                self._executor, self.health.evaluate)
+        else:
+            verdicts = self.health.evaluate()
+        for core, v in verdicts.items():
+            if core not in self.farm.quarantined:
+                self._quarantine(core, reason=str(v["reason"]))
+
     async def _flush_cycle(self) -> None:
         """ONE coalesced flush: commit (on-loop) -> launch (executor when
         ``offload``) -> deliver + resolve (on-loop), under the
@@ -635,19 +804,12 @@ class AsyncOscillatorFarm:
             batch, owed, fifo, slo_by_core = committed
             self._inflight = True
             try:
-                launch = functools.partial(self.farm.flush, deliver=False,
-                                           slo_by_core=slo_by_core)
-                if self._offload:
-                    # The loop stays live here: submits, cancellations,
-                    # draw_sync ingress, and deadline tracking all proceed
-                    # while the launch runs on the worker thread.
-                    await self._loop.run_in_executor(self._executor, launch)
-                else:
-                    launch()
-                self._resolve(batch, owed, fifo)
-                if self.journal is not None:
-                    # repro: allow[async-blocking] reason=durability ordering: the fsync'd flush record must exist before the next commit can run; one bounded fsync per flush, serialized under the single-flight lock
-                    self.journal.record_flush(self.farm)
+                await self._launch_with_retries(batch, fifo, slo_by_core)
+                if batch:
+                    self._resolve(batch, owed, fifo)
+                    if self.journal is not None:
+                        # repro: allow[async-blocking] reason=durability ordering: the fsync'd flush record must exist before the next commit can run; one bounded fsync per flush, serialized under the single-flight lock
+                        self.journal.record_flush(self.farm)
                 if (self.admission is not None
                         and self.admission.adaptive is not None):
                     # feed the adaptive ceiling one (stage seconds, rows)
@@ -655,6 +817,7 @@ class AsyncOscillatorFarm:
                     # flush throughput (no-op without farm profile=True)
                     self.admission.adaptive.update_from(
                         self.farm, sum(r.rows_est for r in batch))
+                await self._evaluate_quality()
             except asyncio.CancelledError:
                 # aclose() mid-launch: the executor finishes the launch
                 # (aclose waits), and its words are parked in the service

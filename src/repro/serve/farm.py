@@ -45,6 +45,7 @@ import numpy as np
 from repro.core.dse import GangCostModel
 from repro.prng.stream import _round_rows
 from repro.serve.clock import Clock, SystemClock
+from repro.serve.health import CoreQuarantined
 from repro.serve.prng_service import PRNGService
 
 
@@ -115,8 +116,10 @@ class GangScheduler:
     """
 
     def __init__(self, cost_model: Optional[GangCostModel] = None,
-                 planner: bool = True, clock: Optional[Clock] = None):
+                 planner: bool = True, clock: Optional[Clock] = None,
+                 faults=None):
         self.clock: Clock = clock or SystemClock()
+        self.faults = faults          # FaultPlan (chaos harness) or None
         self._plans: Dict[Tuple, Dict] = {}
         self._decisions: Dict[Tuple, Dict] = {}
         self._dispatch_keys = set()   # (plan key, n_rows) ever launched
@@ -333,6 +336,11 @@ class GangScheduler:
         """One gang launch (padded or ragged) for ``members``."""
         from repro.kernels import ops
         from repro.kernels.chaotic_ann import gang_effective_rows
+        if self.faults is not None:
+            # the injection seam sits BEFORE any kernel work or absorb
+            # bookkeeping: a failed launch leaves every member's demand
+            # parked at the same absolute rows, so a retry is bit-exact
+            self.faults.on_launch([name for name, _, _, _ in members])
         t0 = self.clock.now()
         svc0 = members[0][1]
         cfg = svc0.config
@@ -410,6 +418,8 @@ class GangScheduler:
                      deliver: bool) -> Dict[str, Dict[str, np.ndarray]]:
         """A planner-split singleton: a plain per-core launch."""
         name, svc, _, offsets = member
+        if self.faults is not None:
+            self.faults.on_launch([name])
         t0 = self.clock.now()
         words, new_x = svc._launch(n_rows, jnp.asarray(offsets))
         t0 = self._tick("launch", t0)
@@ -478,18 +488,28 @@ class OscillatorFarm:
     def __init__(self, *, gang: bool = True, planner: bool = True,
                  gang_cost_model: Optional[GangCostModel] = None,
                  auto_flush_rows: Optional[int] = None,
-                 profile: bool = False, clock: Optional[Clock] = None):
+                 profile: bool = False, clock: Optional[Clock] = None,
+                 faults=None):
         self.services: Dict[str, PRNGService] = {}
         self.gang = bool(gang)
         self.auto_flush_rows = auto_flush_rows
         self.clock: Clock = clock or SystemClock()
+        self.faults = faults          # FaultPlan (chaos harness) or None
         self._sched = GangScheduler(cost_model=gang_cost_model,
-                                    planner=planner, clock=self.clock)
+                                    planner=planner, clock=self.clock,
+                                    faults=faults)
         if profile:
             self._sched.profile = {"plan": 0.0, "stack": 0.0,
                                    "launch": 0.0, "absorb": 0.0,
                                    "flushes": 0.0}
         self._deferred: set = set()   # cores deferred by the last flush
+        # Self-healing state (see quarantine()/rotate()): quarantined
+        # cores are skipped by every flush; standbys are cold spare
+        # services rotated into a quarantined core's routing slot.
+        self._quarantined: set = set()
+        self._standbys: Dict[str, PRNGService] = {}
+        self._rotations: Dict[str, int] = {}
+        self.monitor = None           # HealthMonitor via attach_monitor()
 
     # -- core management ----------------------------------------------------
 
@@ -505,6 +525,8 @@ class OscillatorFarm:
                           backend=backend, config=config, dtype=dtype,
                           mesh=mesh, mesh_axis=mesh_axis)
         self.services[core] = svc
+        if self.monitor is not None:
+            self._install_hook(core)
         return svc
 
     @classmethod
@@ -565,11 +587,134 @@ class OscillatorFarm:
         except KeyError:
             raise KeyError(f"unknown core {core!r}; have {sorted(self.services)}")
 
+    # -- self-healing: quarantine, standbys, rotation ------------------------
+
+    @property
+    def quarantined(self) -> frozenset:
+        """Cores currently quarantined (skipped by every flush)."""
+        return frozenset(self._quarantined)
+
+    @property
+    def rotations(self) -> Dict[str, int]:
+        """Standby rotations performed so far, per logical core."""
+        return dict(self._rotations)
+
+    def add_standby(self, core: str, params, *, config=None, dtype=None,
+                    activation: str = "relu", lanes_per_client: int = 128,
+                    burn_in: int = 16, backend: str = "auto",
+                    mesh=None, mesh_axis: str = "data") -> PRNGService:
+        """Attach a cold standby service for logical core ``core``.
+
+        The standby (typically a retrained sibling from the weight
+        registry) serves no traffic until :meth:`rotate` installs it in
+        the core's routing slot.  Its streams are its own: a client
+        re-registered on the standby restarts at row 0 of the standby's
+        deterministic stream (same seed => same burn-in => bit-identical
+        to serving that client on the standby solo from the start).
+        """
+        if core not in self.services:
+            raise KeyError(f"unknown core {core!r}; attach it before a "
+                           f"standby")
+        if core in self._standbys:
+            raise ValueError(f"core {core!r} already has a standby")
+        svc = PRNGService(params, lanes_per_client=lanes_per_client,
+                          burn_in=burn_in, activation=activation,
+                          backend=backend, config=config, dtype=dtype,
+                          mesh=mesh, mesh_axis=mesh_axis)
+        self._standbys[core] = svc
+        return svc
+
+    def has_standby(self, core: str) -> bool:
+        return core in self._standbys
+
+    def quarantine(self, core: str, reason: str = "") -> bool:
+        """Take ``core`` out of service: every flush skips it, cached
+        gang plans and planner decisions drop (its groups re-plan
+        without it), and its undeliverable pending demand is cleared
+        (the caller already failed the owning futures with
+        ``CoreQuarantined``).  Idempotent: returns False when the core
+        was already quarantined.  Already-served words parked in its
+        outbox stay (they are valid) — they surface if the core is ever
+        un-quarantined by a rotation.
+        """
+        svc = self._svc(core)
+        if core in self._quarantined:
+            return False
+        self._quarantined.add(core)
+        for c in svc.clients.values():
+            c.pending = 0
+        self._deferred.discard(core)
+        self._sched._plans.clear()
+        self._sched._decisions.clear()
+        if self.monitor is not None:
+            self.monitor.reset(core)
+        return True
+
+    def rotate(self, core: str) -> PRNGService:
+        """Install ``core``'s standby in its routing slot and lift the
+        quarantine.  Every client of the old service is re-registered on
+        the standby with its original seed — their streams restart at
+        row 0 of the standby's own deterministic stream (bit-identical
+        to a solo farm that served them on the standby all along).
+        Returns the replaced (bad) service for post-mortem.
+        """
+        standby = self._standbys.pop(core, None)
+        if standby is None:
+            raise ValueError(
+                f"core {core!r} has no standby attached; add_standby() "
+                f"a registry sibling before rotating")
+        old = self._svc(core)
+        for c in sorted(old.clients.values(), key=lambda c: c.slot):
+            standby.register(c.name, seed=c.seed)
+        self.services[core] = standby
+        self._quarantined.discard(core)
+        self._rotations[core] = self._rotations.get(core, 0) + 1
+        self._sched._plans.clear()
+        self._sched._decisions.clear()
+        if self.monitor is not None:
+            self.monitor.reset(core)
+            self._install_hook(core)
+        return old
+
+    def attach_monitor(self, monitor) -> None:
+        """Wire a ``HealthMonitor``: every core's service gets a
+        sampling hook that feeds each launch's word slab (bounded, and
+        run through the fault plan's sample corruption when a chaos
+        harness is attached) into ``monitor.ingest`` — off the delivery
+        path.  Under an offloaded front-end the hook runs on the launch
+        executor thread; ``ingest`` is thread-safe by contract."""
+        self.monitor = monitor
+        for core in self.services:
+            self._install_hook(core)
+
+    def _install_hook(self, core: str) -> None:
+        svc = self.services[core]
+        monitor, faults = self.monitor, self.faults
+        cap = int(monitor.window_words)
+        if faults is not None:
+            faults.bind(core, svc)
+
+        def hook(slab, _core=core, _svc=svc):
+            w = slab.reshape(-1)[:cap]
+            if faults is not None:
+                w = faults.corrupt_sample(_core, _svc, w)
+            monitor.ingest(_core, w)
+
+        svc.sample_hook = hook
+
+    def _check_serving(self, core: str) -> None:
+        if core in self._quarantined:
+            raise CoreQuarantined(
+                f"core {core!r} is quarantined (no standby rotated in); "
+                f"resubmit on another core or after rotation",
+                core=core, reason="quarantined")
+
     # -- client API (per-core routing) --------------------------------------
 
     def register(self, core: str, client: str,
                  seed: Optional[int] = None) -> None:
         """Register a named client stream on one core's pool."""
+        self._check_serving(core)
         self._svc(core).register(client, seed=seed)
 
     def request(self, core: str, client: str, n_words: int,
@@ -583,6 +728,7 @@ class OscillatorFarm:
         auto-flush are parked in the per-service outboxes and returned by
         the tenant's next flush()/draw() — never dropped.
         """
+        self._check_serving(core)
         self._svc(core).request(client, n_words)
         if auto_flush:
             if (self.auto_flush_rows is None
@@ -630,8 +776,11 @@ class OscillatorFarm:
         Returns {core: {client: words}} for every client that received
         words (pending requests and previously parked outbox words alike).
         """
+        if self.faults is not None:
+            self.faults.on_flush()
         plans = {core: svc.prepare_rows()
-                 for core, svc in self.services.items()}
+                 for core, svc in self.services.items()
+                 if core not in self._quarantined}
         # Group cores that need a launch by compatibility signature.
         groups: Dict[object, List[str]] = {}
         for core, (n_need, _) in plans.items():
@@ -664,6 +813,8 @@ class OscillatorFarm:
                 prof = self._sched.profile
                 for c in cores:
                     svc = self.services[c]
+                    if self.faults is not None:
+                        self.faults.on_launch([c])
                     t0 = self._sched.clock.now()
                     n_rows = _round_rows(plans[c][0], svc.config.t_block)
                     words, new_x = svc._launch(n_rows,
@@ -698,6 +849,7 @@ class OscillatorFarm:
         Only that core's pool launches; other cores are untouched (their
         pending requests keep waiting for the next farm-wide flush()).
         """
+        self._check_serving(core)
         return self._svc(core).draw(client, n_words)
 
     @property
@@ -749,6 +901,8 @@ class OscillatorFarm:
                           for core, svc in self.services.items()},
                 "gang_launches": self._sched.launches,
                 "deferred": sorted(self._deferred),
+                "quarantined": sorted(self._quarantined),
+                "rotations": dict(self._rotations),
                 "topology": {core: _topology(svc)
                              for core, svc in self.services.items()}}
 
@@ -796,6 +950,21 @@ class OscillatorFarm:
                         f"plans and re-plan on the current topology")
                 self._sched._plans.clear()
                 self._sched._decisions.clear()
+        # Degraded-topology state replays BEFORE the per-core restores:
+        # rotations re-point routing slots at standbys (the snapshot's
+        # pool states belong to the post-rotation services), and the
+        # per-core restore then overwrites the rotation's re-registered
+        # clients wholesale with the snapshot's exact pool state.
+        want = {c: int(n) for c, n in dict(snap.get("rotations", {})).items()}
+        for core in sorted(set(want) | set(self._rotations)):
+            n, have = want.get(core, 0), self._rotations.get(core, 0)
+            if have > n:
+                raise ValueError(
+                    f"farm already rotated core {core!r} {have}x but the "
+                    f"snapshot recorded {n}; cannot un-rotate")
+            while self._rotations.get(core, 0) < n:
+                self.rotate(core)
+        self._quarantined = set(snap.get("quarantined", ()))
         for core, sub in cores.items():
             self.services[core].restore(sub)
         self._sched.launches = int(snap.get("gang_launches", 0))

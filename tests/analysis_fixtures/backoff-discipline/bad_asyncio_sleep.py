@@ -1,0 +1,13 @@
+# lint-as: src/repro/serve/fixture.py
+"""BAD: retry backoff sleeps real time — FakeClock cannot drive it, and
+the resilience suite would need seconds of wall sleeping per storm."""
+import asyncio
+
+
+class Flusher:
+    async def launch_with_retries(self, batch):
+        for attempt in range(1, 5):
+            try:
+                return self.launch(batch)
+            except RuntimeError:
+                await asyncio.sleep(0.005 * 2 ** attempt)

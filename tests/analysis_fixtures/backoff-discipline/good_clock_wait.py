@@ -1,0 +1,15 @@
+# lint-as: src/repro/serve/fixture.py
+"""GOOD: backoff routes through the injected Clock — a private event
+that only the timeout (fake or real time advancing) wakes, so a
+FakeClock drives the whole retry schedule with zero real sleeps."""
+import asyncio
+
+
+class Flusher:
+    async def launch_with_retries(self, batch):
+        for attempt in range(1, 5):
+            try:
+                return self.launch(batch)
+            except RuntimeError:
+                await self.clock.wait(asyncio.Event(),
+                                      self.health.backoff_ms(attempt) / 1e3)

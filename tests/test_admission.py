@@ -12,7 +12,8 @@ import asyncio
 import numpy as np
 import pytest
 
-from repro.serve.admission import AdmissionController, Overloaded
+from repro.serve.admission import (AdmissionController, Overloaded,
+                                   RETRY_CAP_MS, RETRY_FLOOR_MS)
 from repro.serve.async_frontend import AsyncOscillatorFarm
 from repro.serve.clock import FakeClock
 
@@ -59,7 +60,42 @@ def test_oversized_request_never_admissible():
                              clock=FakeClock())
     with pytest.raises(Overloaded) as ei:
         ac.admit("c", "t", 51, rows_est=1)
-    assert ei.value.retry_after_ms == float("inf")
+    # an oversized request can NEVER be admitted, but the hint must stay
+    # finite: an inf would leak straight into client sleep arithmetic
+    assert ei.value.retry_after_ms == RETRY_CAP_MS
+
+
+def test_retry_hint_clamped_to_positive_floor():
+    # a near-instant refill used to round to a 0 ms hint — every rejected
+    # client retried in the same scheduler tick (a synchronized stampede)
+    fc = FakeClock()
+    ac = AdmissionController(rate_words_per_s=1e6, burst_words=100.0,
+                             clock=fc)
+    ac.admit("c", "t", 100, rows_est=1)
+    with pytest.raises(Overloaded) as ei:
+        ac.admit("c", "t", 50, rows_est=1)     # refills in 0.05 ms
+    assert ei.value.retry_after_ms == RETRY_FLOOR_MS
+    assert Overloaded("x", scope="farm",
+                      retry_after_ms=float("nan")).retry_after_ms == \
+        RETRY_CAP_MS
+    assert Overloaded("x", scope="farm",
+                      retry_after_ms=-5.0).retry_after_ms == RETRY_FLOOR_MS
+
+
+def test_capacity_factor_scales_row_ceiling():
+    ac = AdmissionController(max_queued_rows=100, clock=FakeClock())
+    assert ac.current_ceiling == 100
+    ac.set_capacity_factor(0.5)                # 1 of 2 cores quarantined
+    assert ac.current_ceiling == 50
+    ac.admit("c", "t", 1, rows_est=50)
+    with pytest.raises(Overloaded) as ei:
+        ac.admit("c", "u", 1, rows_est=1)
+    assert ei.value.scope == "farm"
+    assert ac.stats()["capacity_factor"] == 0.5
+    ac.set_capacity_factor(9.9)                # clamped into [0, 1]
+    assert ac.current_ceiling == 100
+    ac.set_capacity_factor(-1.0)
+    assert ac.current_ceiling == 0
 
 
 def test_per_tenant_override_and_isolation():

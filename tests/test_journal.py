@@ -246,3 +246,128 @@ def test_journal_timestamps_come_from_the_clock(tmp_path):
     recs = [json.loads(line)
             for line in jpath.read_text().splitlines()]
     assert all(r["ts"] == 777.0 for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# Single-writer lock (flock + pid/host sentinel)
+# ---------------------------------------------------------------------------
+
+def test_second_writer_fails_fast_with_holder(tmp_path):
+    from repro.serve.journal import JournalLocked
+    jpath = tmp_path / "farm.journal"
+    j1 = FlushJournal(jpath, clock=FakeClock())
+    try:
+        with pytest.raises(JournalLocked) as ei:
+            FlushJournal(jpath, clock=FakeClock())
+        # the sentinel names the live holder: pid@host
+        assert f"{__import__('os').getpid()}@" in str(ei.value.holder)
+    finally:
+        j1.close()
+    # close releases the flock: a new writer acquires cleanly
+    FlushJournal(jpath, clock=FakeClock()).close()
+
+
+def test_lock_released_even_when_open_fails(tmp_path, monkeypatch):
+    """If __init__ dies after taking the flock (e.g. corrupt file scan),
+    the lock must not leak — the next writer can still open."""
+    from repro.serve.journal import JournalCorrupt, JournalLocked
+    jpath = tmp_path / "farm.journal"
+    with FlushJournal(jpath, clock=FakeClock()) as j:
+        j.record_register("core0", "t", seed=1)
+        j.record_register("core0", "u", seed=2)
+    lines = jpath.read_text().splitlines()
+    lines[0] = lines[0][:-5] + 'XXX"}'          # corrupt record 1 of 2
+    jpath.write_text("\n".join(lines) + "\n")
+    with pytest.raises(JournalCorrupt):
+        FlushJournal(jpath, clock=FakeClock())
+    # the failed open did not leak its flock
+    with pytest.raises(JournalCorrupt):
+        FlushJournal(jpath, clock=FakeClock())
+
+
+# ---------------------------------------------------------------------------
+# Per-record CRC: corruption pinpointed, --repair truncates to last good
+# ---------------------------------------------------------------------------
+
+def _journal_with_flushes(jpath, n_draws=3):
+    async def serve():
+        fc = FakeClock()
+        farm = _bare_farm(n_cores=1, clock=fc)
+        async with AsyncOscillatorFarm(farm, clock=fc, journal=jpath) as af:
+            af.register("core0", "t", seed=40)
+            out = []
+            for _ in range(n_draws):
+                out.append(await af.draw("core0", "t", 100, deadline_ms=0))
+            return out
+    return _collect(serve())
+
+
+def test_midfile_corruption_raises_at_exact_record(tmp_path):
+    from repro.serve.journal import JournalCorrupt
+    jpath = tmp_path / "farm.journal"
+    _journal_with_flushes(jpath)
+    lines = jpath.read_text().splitlines()
+    # flip one byte INSIDE a value of the 3rd record: still valid JSON,
+    # caught only by the CRC
+    bad = lines[2].replace('"core0"', '"core!"', 1)
+    assert bad != lines[2]
+    lines[2] = bad
+    jpath.write_text("\n".join(lines) + "\n")
+    with pytest.raises(JournalCorrupt) as ei:
+        read_journal(jpath)
+    assert ei.value.line_no == 3
+    assert "--repair" in str(ei.value)
+    with pytest.raises(JournalCorrupt):
+        replay_journal(_bare_farm(n_cores=1), jpath)
+
+
+def test_repair_truncates_to_last_good_record(tmp_path):
+    from repro.serve.journal import JournalCorrupt, repair_journal
+    jpath = tmp_path / "farm.journal"
+    _journal_with_flushes(jpath, n_draws=3)
+    lines = jpath.read_text().splitlines()
+    n_total = len(lines)
+    # corrupt the SECOND flush: open header, register and flush 1 survive
+    lines[3] = lines[3].replace('"seq"', '"sXq"', 1)
+    jpath.write_text("\n".join(lines) + "\n")
+    info = repair_journal(jpath)
+    assert info == {"kept": 3, "dropped": n_total - 3}
+    # the repaired prefix replays: register + first flush survive
+    farm2 = _bare_farm(n_cores=1)
+    summary = replay_journal(farm2, jpath)
+    assert summary["flushes"] == 1
+    solo = _farm(gang=False, n_cores=1)
+    solo.draw("core0", "t", 100)                 # skip the surviving flush
+    np.testing.assert_array_equal(farm2.draw("core0", "t", 64),
+                                  solo.draw("core0", "t", 64))
+    # repairing an intact journal is a byte-identical no-op
+    before = jpath.read_bytes()
+    assert repair_journal(jpath)["dropped"] == 0
+    assert jpath.read_bytes() == before
+
+
+def test_repair_cli_exit_codes(tmp_path):
+    from repro.serve.journal import main
+    jpath = tmp_path / "farm.journal"
+    _journal_with_flushes(jpath)
+    assert main([str(jpath)]) == 0               # summary on a clean file
+    lines = jpath.read_text().splitlines()
+    lines[1] = lines[1].replace('"ts"', '"tz"', 1)
+    jpath.write_text("\n".join(lines) + "\n")
+    assert main([str(jpath)]) == 2               # corrupt: diagnostic exit
+    assert main([str(jpath), "--repair"]) == 0
+    assert main([str(jpath)]) == 0               # clean again
+
+
+def test_torn_tail_still_tolerated_with_crc(tmp_path):
+    """CRC must not turn the torn-tail contract into corruption: a valid
+    prefix + a damaged FINAL line is a crash mid-append, not a corrupt
+    journal."""
+    jpath = tmp_path / "farm.journal"
+    _journal_with_flushes(jpath, n_draws=1)
+    with open(jpath, "a", encoding="utf-8") as f:
+        f.write('{"type":"flush","seq":9,"cor')
+    _, last_seq, _, torn, _ = read_journal(jpath)
+    assert torn is True
+    summary = replay_journal(_bare_farm(n_cores=1), jpath)
+    assert summary["torn_tail"] is True
