@@ -49,6 +49,16 @@ Sections:
   1-device gang path, launches/flush invariance as devices scale, and
   words/s scaling where the host has the CPUs to show it.
 
+* ``lattice`` — block-coupled oscillator lattices (the MXU arm of the
+  design space): a 32-node ring of Chen cores (I=96, H=256) drawn through
+  the fused path with each compute unit's DSE-selected solution, reporting
+  vpu-vs-mxu words/s next to the cycle-model prediction (``select_config``
+  must pick mxu on this shape for the gate to pass), a >= 24-member
+  stacked-gang bit-identity check against solo lattice draws, and the
+  stacked-layout VMEM cliff: the core count where one
+  ``chaotic_ann_gang_stacked_pallas`` launch exceeds the VMEM budget and
+  the planner must fall back to the lane-concat layout.
+
 * ``resilience`` — the self-healing layer under a seeded fault storm:
   words/s and p99 round latency before / during / after a 10%-transient
   launch-failure storm with one poisoned core (its monitor samples
@@ -786,6 +796,157 @@ def _planner_section(n_streams, p, lm, cm, smoke, profile=False):
     return result
 
 
+LATTICE_SPEC = "chen@ring32"      # 32-node ring of Chen cores: I=96, H=256
+LATTICE_LANES = 128               # streams per lattice draw
+
+
+def _lattice_section(p, lm, cm, smoke):
+    """Block-coupled lattice: vpu-vs-mxu on model AND measurement.
+
+    The scalar systems never let the MXU win (I, H too small: 128-padding
+    swamps the useful MACs), so this section is where the mxu arm of the
+    DSE earns its keep.  At 32 ring-coupled Chen nodes the contraction is
+    genuinely MXU-shaped and ``select_config`` must pick mxu on the cycle
+    model; the measured run re-draws the same traffic with each unit's
+    selected solution (same s_block/t_block/f32 for both, so the timing
+    isolates the compute-unit choice).
+
+    Measured-number caveat (recorded in the section): CPU interpret mode
+    executes the vpu path's ~I+H broadcast-FMA passes as that many XLA
+    ops per step where the mxu path issues a handful of matmuls, so the
+    measured mxu win is partly op-dispatch economics; on a real TPU the
+    same ordering comes from the 128x128 systolic array instead.  The
+    cycle model is the hardware-facing claim; the measured run checks the
+    ordering end to end.  The mxu-vs-vpu measured gate arms only on hosts
+    with >= 4 CPUs (same discipline as the sharded scaling gate); raw
+    numbers are always recorded.
+    """
+    import dataclasses
+    import os
+
+    from repro.core.ann import lattice_meta_tuple
+    from repro.core.dse import (VMEM_USABLE, select_config,
+                                stacked_gang_vmem_bytes)
+    from repro.kernels import ops
+
+    params = {k: jnp.asarray(v)
+              for k, v in default_params(system=LATTICE_SPEC).items()}
+    i_dim, h_dim = params["w1"].shape
+    n_nodes, base_dim, topo, strength = lattice_meta_tuple(
+        np.asarray(params["lattice_meta"]))
+    lanes = LATTICE_LANES
+    host_cpus = os.cpu_count() or 1
+
+    cands = {unit: select_config(i_dim, h_dim, s_total=lanes, unit=unit,
+                                 n_nodes=n_nodes)
+             for unit in ("vpu", "mxu")}
+    selected = select_config(i_dim, h_dim, s_total=lanes, n_nodes=n_nodes)
+
+    # Measured draw: identical blocking and f32 for both units (interpret
+    # mode's emulated bf16 would bill per-op conversions to whichever unit
+    # issues more ops); t_block clamped hard because interpret-mode trace
+    # cost grows ~quadratically in the unrolled body (t_block * (I + H)
+    # ops — at I=96, H=256 a t_block of 16 already costs minutes to trace).
+    t_blk = 4 if smoke else 8
+    n_steps = 4 * t_blk
+    n_words = (n_steps // 2) * lanes
+    units = {}
+    for unit, cand in cands.items():
+        run_cand = dataclasses.replace(cand, p=0, t_block=t_blk, unroll=2,
+                                       dtype_bytes=4)   # s_block = lanes
+        x0 = _splitmix_seeds(jnp.uint32(1), lanes, i_dim).astype(
+            jnp.dtype(run_cand.dtype_name))
+
+        def draw(c=run_cand, x=x0):
+            words, _ = chaotic_bits(params, x, n_steps,
+                                    backend="pallas_interpret", config=c)
+            return np.asarray(words)
+
+        us = time_fn(draw, n_iters=3, warmup=1)
+        meas = measure_candidate(cand)
+        units[unit] = {
+            "s_block": cand.s_block, "t_block": cand.t_block,
+            "unroll": cand.unroll, "dtype": cand.dtype_name,
+            "modeled_cycles_per_step": meas["cycles_per_step"],
+            "modeled_samples_per_s": meas["samples_per_sec"],
+            "words_per_s": n_words / (us / 1e6),
+        }
+
+    mxu_wins_model = (units["mxu"]["modeled_samples_per_s"]
+                      > units["vpu"]["modeled_samples_per_s"])
+    measured_speedup = (units["mxu"]["words_per_s"]
+                        / units["vpu"]["words_per_s"])
+    armed = host_cpus >= 4
+
+    # --- >= 24-member stacked-gang bit-identity vs solo lattice draws -----
+    C = 24
+    gc = dataclasses.replace(cands["vpu"], p=0, t_block=t_blk, unroll=2,
+                             dtype_bytes=4)              # s_block = lanes
+    dtype = jnp.dtype(gc.dtype_name)
+    x0_all = _splitmix_seeds(jnp.uint32(7), C * lanes, i_dim).astype(
+        dtype).reshape(C, lanes, i_dim)
+    gang_params = {k: jnp.stack([params[k]] * C)
+                   for k in ("w1", "b1", "w2", "b2")}
+    gang_params["coupling"] = params["coupling"]
+    gang_params["lattice_meta"] = params["lattice_meta"]
+    gwords, gstate = ops.chaotic_bits_gang_stacked(
+        gang_params, x0_all, n_steps, jnp.zeros((C, lanes), jnp.uint32),
+        backend="pallas_interpret", config=gc)
+    gwords, gstate = np.asarray(gwords), np.asarray(gstate)
+    gang_ok = True
+    for ci in range(C):
+        swords, sstate = chaotic_bits(params, x0_all[ci], n_steps,
+                                      backend="pallas_interpret", config=gc)
+        gang_ok &= bool(np.array_equal(gwords[:, ci, :], np.asarray(swords))
+                        and np.array_equal(gstate[ci], np.asarray(sstate)))
+
+    # --- stacked-layout VMEM cliff (the planner's fallback threshold) -----
+    cliff = 1
+    while stacked_gang_vmem_bytes(cands["vpu"], cliff) <= VMEM_USABLE:
+        cliff += 1
+        if cliff > 1_000_000:       # unreachable guard: tiny candidate
+            cliff = None
+            break
+
+    result = {
+        "system": LATTICE_SPEC,
+        "n_nodes": n_nodes, "base_dim": base_dim, "topology": topo,
+        "coupling_strength": strength,
+        "i_dim": i_dim, "h_dim": h_dim, "lanes": lanes,
+        "n_steps_measured": n_steps,
+        "units": units,
+        "selected_compute_unit": selected.compute_unit,
+        "mxu_wins_model": bool(mxu_wins_model),
+        "measured_speedup_mxu_vs_vpu": measured_speedup,
+        "mxu_wins_measured": bool(measured_speedup > 1.0),
+        "speedup_gate_armed": bool(armed),
+        "gang_members": C,
+        "gang_bit_identical": gang_ok,
+        "stacked_vmem_cliff_cores": cliff,
+        "stacked_gang_vmem_at_cliff": (
+            None if cliff is None
+            else stacked_gang_vmem_bytes(cands["vpu"], cliff)),
+        "vmem_usable_bytes": VMEM_USABLE,
+        "measured_note": (
+            "CPU interpret mode: the measured mxu win is partly per-op "
+            "dispatch economics (vpu issues ~I+H elementwise passes per "
+            "step, mxu a handful of matmuls); on TPU hardware the same "
+            "ordering comes from the systolic array. The cycle model is "
+            "the hardware-facing claim."),
+    }
+    if not armed:
+        result["speedup_gate_skip_reason"] = (
+            f"host has {host_cpus} CPUs: measured vpu-vs-mxu ordering is "
+            f"not trustworthy under contention")
+    emit("farm/lattice", units["mxu"]["words_per_s"],
+         f"spec={LATTICE_SPEC};selected={selected.compute_unit};"
+         f"mxu_model_speedup="
+         f"{units['mxu']['modeled_samples_per_s'] / units['vpu']['modeled_samples_per_s']:.2f}x;"
+         f"mxu_measured_speedup={measured_speedup:.2f}x;"
+         f"gang24_bit_identical={gang_ok};vmem_cliff_cores={cliff}")
+    return result
+
+
 TRANSIENT_RATE = 0.10             # the resilience storm's launch-fault coin
 FAULT_SEED = 2                    # chosen so the coin lands in a short run
 
@@ -940,11 +1101,20 @@ def _resilience_section(n_streams, p, lm, cm, smoke):
 def run_farm(n_streams: int = 256, n_steps: int = 1024, p: int = 1,
              out_json: str | None = "BENCH_farm.json",
              smoke: bool = False, nist_words: int = 20_000,
-             profile: bool = False) -> dict:
+             profile: bool = False, lattice_only: bool = False) -> dict:
     lm, cm = LatencyModel.fit(), CostModel.fit()
     if smoke:
         n_steps = min(n_steps, 256)
         nist_words = 0
+    lattice = _lattice_section(p, lm, cm, smoke)
+    if lattice_only:
+        res = {"config": {"n_streams": n_streams, "pareto_p": p,
+                          "backend": "pallas_interpret", "smoke": smoke,
+                          "lattice_only": True},
+               "lattice": lattice}
+        if out_json:
+            pathlib.Path(out_json).write_text(json.dumps(res, indent=2))
+        return res
     table = _system_rows(n_streams, n_steps, p, lm, cm, nist_words)
     gang = _gang_section(n_streams, p, lm, cm, smoke)
     async_ = _async_section(n_streams, p, lm, cm, smoke)
@@ -961,7 +1131,8 @@ def run_farm(n_streams: int = 256, n_steps: int = 1024, p: int = 1,
            "async_offload": async_offload,
            "planner": planner,
            "sharded": sharded,
-           "resilience": resilience}
+           "resilience": resilience,
+           "lattice": lattice}
     if out_json:
         pathlib.Path(out_json).write_text(json.dumps(res, indent=2))
     return res
@@ -1065,6 +1236,40 @@ def sharded_gate(res: dict) -> list[str]:
     return errors
 
 
+def lattice_gate(res: dict) -> list[str]:
+    """CI acceptance for the lattice/MXU arm: DSE must select mxu on the
+    32-node lattice shape, the cycle model must actually rank mxu ahead
+    of vpu there, the >= 24-member stacked gang must be bit-identical to
+    solo lattice draws, and the stacked-layout VMEM cliff must be
+    computed and recorded.  The measured mxu-vs-vpu ordering is enforced
+    only on hosts with the CPUs to trust it (armed flag recorded)."""
+    errors = []
+    L = res["lattice"]
+    if L["selected_compute_unit"] != "mxu":
+        errors.append(
+            f"select_config picked {L['selected_compute_unit']} for the "
+            f"{L['n_nodes']}-node lattice (I={L['i_dim']}, "
+            f"H={L['h_dim']}); the MXU arm never arms")
+    if not L["mxu_wins_model"]:
+        errors.append(
+            f"cycle model ranks vpu ahead of mxu on the lattice shape: "
+            f"{L['units']['mxu']['modeled_samples_per_s']:.3e} vs "
+            f"{L['units']['vpu']['modeled_samples_per_s']:.3e} samples/s")
+    if not L["gang_bit_identical"]:
+        errors.append(
+            f"{L['gang_members']}-member stacked lattice gang NOT "
+            f"bit-identical to solo lattice draws")
+    if L["stacked_vmem_cliff_cores"] is None:
+        errors.append("stacked-layout VMEM cliff not computed")
+    if L["speedup_gate_armed"] and not L["mxu_wins_measured"]:
+        errors.append(
+            f"measured lattice draw: mxu does not beat vpu "
+            f"({L['units']['mxu']['words_per_s']:.3e} vs "
+            f"{L['units']['vpu']['words_per_s']:.3e} words/s = "
+            f"{L['measured_speedup_mxu_vs_vpu']:.2f}x)")
+    return errors
+
+
 def resilience_gate(res: dict) -> list[str]:
     """CI perf-smoke acceptance for the self-healing layer: under the
     seeded 10%-transient + one-poisoned-core storm, the poisoned core
@@ -1098,17 +1303,33 @@ def resilience_gate(res: dict) -> list[str]:
 
 if __name__ == "__main__":
     import sys
+    lattice_only = "--lattice" in sys.argv
     res = run_farm(smoke="--smoke" in sys.argv,
-                   profile="--profile" in sys.argv)
-    errors = [f"PLANNER GATE FAIL: {e}" for e in planner_gate(res)]
-    errors += [f"ASYNC GATE FAIL: {e}" for e in async_gate(res)]
-    errors += [f"OFFLOAD GATE FAIL: {e}" for e in async_offload_gate(res)]
-    errors += [f"SHARDED GATE FAIL: {e}" for e in sharded_gate(res)]
-    errors += [f"RESILIENCE GATE FAIL: {e}" for e in resilience_gate(res)]
+                   profile="--profile" in sys.argv,
+                   lattice_only=lattice_only)
+    errors = [f"LATTICE GATE FAIL: {e}" for e in lattice_gate(res)]
+    if not lattice_only:
+        errors += [f"PLANNER GATE FAIL: {e}" for e in planner_gate(res)]
+        errors += [f"ASYNC GATE FAIL: {e}" for e in async_gate(res)]
+        errors += [f"OFFLOAD GATE FAIL: {e}"
+                   for e in async_offload_gate(res)]
+        errors += [f"SHARDED GATE FAIL: {e}" for e in sharded_gate(res)]
+        errors += [f"RESILIENCE GATE FAIL: {e}"
+                   for e in resilience_gate(res)]
     if errors:
         for e in errors:
             print(e, file=sys.stderr)
         raise SystemExit(1)
+    L = res["lattice"]
+    print(f"lattice gate OK: {L['system']} selected="
+          f"{L['selected_compute_unit']}, model mxu/vpu "
+          f"{L['units']['mxu']['modeled_samples_per_s'] / L['units']['vpu']['modeled_samples_per_s']:.2f}x, "
+          f"measured {L['measured_speedup_mxu_vs_vpu']:.2f}x "
+          f"({'armed' if L['speedup_gate_armed'] else 'disarmed'}), "
+          f"gang{L['gang_members']} bit-identical, VMEM cliff at "
+          f"{L['stacked_vmem_cliff_cores']} cores")
+    if lattice_only:
+        raise SystemExit(0)
     print(f"planner gate OK: skewed speedup "
           f"{res['planner']['skewed']['speedup']:.2f}x, uniform ratio "
           f"{res['planner']['uniform']['speedup']:.2f}x")

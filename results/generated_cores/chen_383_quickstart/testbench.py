@@ -11,7 +11,7 @@ import chen_383_quickstart as core  # noqa: E402
 
 
 def run(verbose=True):
-    from repro.kernels.ref import chaotic_ann_ref
+    from repro.kernels import ops
     from repro.core.ann import one_step_reference  # noqa: F401
     p = core.params()
     key = jax.random.PRNGKey(0)
@@ -20,11 +20,14 @@ def run(verbose=True):
 
     # 1) kernel vs oracle, short horizon (pre-divergence window; bf16's
     # ~8e-3 rounding is amplified ~2x/step by the chaotic map, so the
-    # comparable window is shorter than f32's)
+    # comparable window is shorter than f32's).  The ref backend routes
+    # scalar cores to the independent x @ w oracle and lattice cores to
+    # the bitwise-exact block-coupled oracle — one testbench for both.
     T = 3 if core.DTYPE == jnp.bfloat16 else 8
     got = core.generate(x0, T)
-    want = chaotic_ann_ref(p["w1"], p["b1"], p["w2"], p["b2"], x0, T,
-                           core.ACTIVATION)
+    want = ops.chaotic_trajectory(p, x0, T, activation=core.ACTIVATION,
+                                  backend="ref",
+                                  compute_unit=core.COMPUTE_UNIT)
     tol = 1.5e-1 if core.DTYPE == jnp.bfloat16 else 1e-4
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), atol=tol)

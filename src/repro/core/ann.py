@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.chaotic import ChaoticDataset, denormalize, get_system, rk4_step
+from repro.core.chaotic import (ChaoticDataset, _TOPOLOGY_CODES, denormalize,
+                                get_system, lattice_coupling_matrix, rk4_step)
 from repro.train.optimizer import Adam
 
 Array = jax.Array
@@ -149,6 +150,64 @@ def extract_parameters(params: Dict[str, Array]) -> Dict[str, np.ndarray]:
     """Paper §III-A: 'the network parameters are extracted for the hardware
     phase'.  Plain float32 numpy, the hand-off format for DSE + codegen."""
     return {k: np.asarray(v, dtype=np.float32) for k, v in params.items()}
+
+
+def expand_lattice_params(base_params: Dict[str, Array], *, n_nodes: int,
+                          coupling: float, topology: str = "ring"
+                          ) -> Dict[str, np.ndarray]:
+    """Derive a block-coupled lattice core's parameters from ONE trained
+    base oscillator — no dense N^2 training, the block-sparse scaling
+    route.
+
+    The returned dict keeps the standard ``w1/b1/w2/b2`` keys at lattice
+    size (block-diagonal per-node weight blocks, tiled biases), so every
+    downstream consumer — dim inference, gang weight stacking, codegen's
+    npz round trip — works unchanged.  Two extra keys carry the lattice:
+
+    * ``coupling`` — the dense (I, I) diffusive operator array (the MXU
+      contraction operand; block-sparse by construction);
+    * ``lattice_meta`` — ``[n_nodes, base_dim, topology_code, strength]``
+      as a plain numeric array (npz-serializable), from which the VPU
+      kernels rebuild the roll-based coupling without the matrix.
+
+    The lattice state dim must land on a whole number of sublanes
+    (``n_nodes * base_dim % 8 == 0``): the wrapped-roll coupling and the
+    sublane-stacked gang layout both need the per-node blocks packed
+    with no padding rows between nodes.
+    """
+    w1 = np.asarray(base_params["w1"], np.float32)
+    b1 = np.asarray(base_params["b1"], np.float32)
+    w2 = np.asarray(base_params["w2"], np.float32)
+    b2 = np.asarray(base_params["b2"], np.float32)
+    d, h = w1.shape
+    if n_nodes < 2:
+        raise ValueError(f"a lattice needs n_nodes >= 2, got {n_nodes}")
+    if (n_nodes * d) % 8 != 0:
+        raise ValueError(
+            f"lattice state dim {n_nodes}*{d}={n_nodes * d} must be a "
+            f"multiple of 8 sublanes (d={d}: n_nodes in "
+            f"{[n for n in range(2, 65) if n * d % 8 == 0][:4]}...)")
+    big_i, big_h = n_nodes * d, n_nodes * h
+    w1_l = np.zeros((big_i, big_h), np.float32)
+    w2_l = np.zeros((big_h, big_i), np.float32)
+    for n in range(n_nodes):
+        w1_l[n * d:(n + 1) * d, n * h:(n + 1) * h] = w1
+        w2_l[n * h:(n + 1) * h, n * d:(n + 1) * d] = w2
+    return {
+        "w1": w1_l, "b1": np.tile(b1, n_nodes),
+        "w2": w2_l, "b2": np.tile(b2, n_nodes),
+        "coupling": lattice_coupling_matrix(n_nodes, d, coupling, topology),
+        "lattice_meta": np.asarray(
+            [n_nodes, d, _TOPOLOGY_CODES[topology], coupling], np.float32),
+    }
+
+
+def lattice_meta_tuple(meta) -> Tuple[int, int, str, float]:
+    """Decode a ``lattice_meta`` array into the kernels' static lattice
+    descriptor ``(n_nodes, base_dim, topology, strength)``."""
+    m = np.asarray(meta, np.float32).reshape(-1)
+    names = {v: k for k, v in _TOPOLOGY_CODES.items()}
+    return (int(m[0]), int(m[1]), names[int(m[2])], float(m[3]))
 
 
 def one_step_reference(system_name: str, dataset: ChaoticDataset, x_norm: Array) -> Array:

@@ -10,8 +10,9 @@ oracle.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
-from typing import Callable, Tuple
+from typing import Callable, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -122,7 +123,128 @@ SYSTEMS = {s.name: s for s in (_chen(), _lorenz(), _rossler(), _chua(),
                                _hyperlorenz())}
 
 
+# ---------------------------------------------------------------------------
+# Block-coupled oscillator lattices (ROADMAP "Coupled-oscillator lattices")
+# ---------------------------------------------------------------------------
+
+# Diffusive coupling strength used for name-addressed lattices
+# ("chen@ring8").  Weak relative to the base dynamics: the lattice must
+# stay chaotic (strong coupling synchronizes the nodes, collapsing the
+# lattice back to one effective oscillator).
+DEFAULT_LATTICE_COUPLING = 0.05
+
+_TOPOLOGY_CODES = {"ring": 0, "grid": 1}
+
+
+def _grid_shape(n_nodes: int) -> Tuple[int, int]:
+    """Most-square P x Q factorization of ``n_nodes`` for grid topology."""
+    p = max(1, int(np.sqrt(n_nodes)))
+    while n_nodes % p:
+        p -= 1
+    return p, n_nodes // p
+
+
+def lattice_coupling_matrix(n_nodes: int, base_dim: int, strength: float,
+                            topology: str = "ring") -> np.ndarray:
+    """The dense form of the block-sparse diffusive coupling operator.
+
+    ``C = strength * (A - deg*I) (x) I_d`` for the ring/torus adjacency
+    ``A`` — the (negated, scaled) graph Laplacian applied per component.
+    Block-sparse by construction: only the diagonal and nearest-neighbour
+    (d x d) blocks are nonzero, never a dense N^2 coupling.  The dense
+    array form exists for the MXU contraction and the ODE-level matvec;
+    the VPU kernels never materialize it (wrapped rolls instead).
+    """
+    if topology not in _TOPOLOGY_CODES:
+        raise ValueError(f"unknown lattice topology {topology!r}; "
+                         f"have {sorted(_TOPOLOGY_CODES)}")
+    if n_nodes < 2:
+        raise ValueError(f"a lattice needs n_nodes >= 2, got {n_nodes}")
+    adj = np.zeros((n_nodes, n_nodes), np.float64)
+    if topology == "ring":
+        for n in range(n_nodes):
+            adj[n, (n - 1) % n_nodes] += 1.0
+            adj[n, (n + 1) % n_nodes] += 1.0
+    else:
+        pp, qq = _grid_shape(n_nodes)
+        for n in range(n_nodes):
+            p_i, q_i = divmod(n, qq)
+            adj[n, ((p_i - 1) % pp) * qq + q_i] += 1.0
+            adj[n, ((p_i + 1) % pp) * qq + q_i] += 1.0
+            adj[n, p_i * qq + (q_i - 1) % qq] += 1.0
+            adj[n, p_i * qq + (q_i + 1) % qq] += 1.0
+    deg = adj.sum(axis=1)
+    lap = adj - np.diag(deg)
+    cpl = float(strength) * np.kron(lap, np.eye(base_dim))
+    return cpl.astype(np.float32)
+
+
+def lattice(base_system: Union[str, ChaoticSystem], n_nodes: int,
+            coupling: float = DEFAULT_LATTICE_COUPLING,
+            topology: str = "ring") -> ChaoticSystem:
+    """Couple ``n_nodes`` copies of a base system into one high-dimensional
+    chaotic system: state dim = n_nodes * base.dim, nearest-neighbour
+    diffusive coupling on a ring or torus.
+
+        dX_n/dt = f_base(X_n) + coupling * sum_{m ~ n} (X_m - X_n)
+
+    The Jacobian is block-sparse (per-node blocks + neighbour identity
+    blocks) — this is the oscillatory-NN paper's escape from quadratic
+    hardware scaling, and what makes the MXU arm winnable: dims grow as
+    n_nodes * d, not n_nodes^2.
+    """
+    base = get_system(base_system) if isinstance(base_system, str) \
+        else base_system
+    cpl_np = lattice_coupling_matrix(n_nodes, base.dim, coupling, topology)
+    cpl = jnp.asarray(cpl_np)
+    dim = n_nodes * base.dim
+
+    def f(x: Array) -> Array:
+        nodes = x.reshape(x.shape[:-1] + (n_nodes, base.dim))
+        dyn = base.f(nodes).reshape(x.shape)
+        return dyn + x @ cpl.T.astype(x.dtype)
+
+    # Per-node perturbed seed: identical node seeds + symmetric coupling
+    # would start the lattice fully synchronized (one effective node).
+    x0 = tuple(v * (1.0 + 0.03 * n) + 0.01 * n
+               for n in range(n_nodes) for v in base.x0)
+    deg = 2 if topology == "ring" else 4
+    return ChaoticSystem(
+        name=f"{base.name}@{topology}{n_nodes}",
+        dim=dim, f=f,
+        # Block-sparse Eq. 4 counts: per-node dynamics plus one scale and
+        # ``deg`` neighbour adds per component — O(n_nodes), never N^2.
+        n_mul_dynamic=n_nodes * base.n_mul_dynamic + dim,
+        n_add_dynamic=n_nodes * base.n_add_dynamic + dim * deg,
+        x0=x0, dt=base.dt)
+
+
+def parse_lattice_name(name: str) -> Tuple[str, str, int]:
+    """Split a lattice system name into ``(base, topology, n_nodes)``.
+
+    Lattices are name-addressed throughout the stack as
+    ``<base>@<ring|grid><n>`` (e.g. ``chen@ring8``) — the weight registry,
+    the serving farm, and codegen all key on this one spelling.
+    """
+    base_name, spec = name.split("@", 1)
+    topo = spec.rstrip("0123456789")
+    tail = spec[len(topo):]
+    if topo not in _TOPOLOGY_CODES or not tail:
+        raise KeyError(
+            f"bad lattice system {name!r}; want <base>@<ring|grid><n>, "
+            f"e.g. 'chen@ring8'")
+    return base_name, topo, int(tail)
+
+
+@functools.lru_cache(maxsize=None)
+def _lattice_by_name(name: str) -> ChaoticSystem:
+    base_name, topo, n_nodes = parse_lattice_name(name)
+    return lattice(get_system(base_name), n_nodes, topology=topo)
+
+
 def get_system(name: str) -> ChaoticSystem:
+    if "@" in name:
+        return _lattice_by_name(name)
     try:
         return SYSTEMS[name]
     except KeyError:

@@ -55,7 +55,15 @@ def _pad(n: int, m: int) -> int:
 
 @dataclasses.dataclass(frozen=True, order=True)
 class Candidate:
-    """One point in the kernel design space (paper: one HLS solution)."""
+    """One point in the kernel design space (paper: one HLS solution).
+
+    ``n_nodes > 1`` marks a block-coupled lattice core: ``i_dim``/``h_dim``
+    are the full lattice dims (n_nodes x base dims), the weights are
+    block-diagonal by construction, and the step carries a diffusive
+    coupling term (an extra MXU contraction on the mxu path, roll/select
+    passes on the vpu path).  The field is last so older serialized
+    candidates (``Candidate(**solution["candidate"])``) keep loading.
+    """
 
     i_dim: int = 3
     h_dim: int = 8
@@ -64,6 +72,7 @@ class Candidate:
     dtype_bytes: int = 4        # 4 = f32, 2 = bf16
     unroll: int = 4
     t_block: int = 128
+    n_nodes: int = 1            # lattice nodes (1 = scalar system)
 
     @property
     def s_block(self) -> int:
@@ -115,6 +124,13 @@ def measure_candidate(c: Candidate) -> Dict[str, float]:
             + c.h_dim * vregs(c.i_pad, c.s_block)
             + vregs(c.h_pad, c.s_block) + vregs(c.i_pad, c.s_block)
         )
+        if c.n_nodes > 1:
+            # Block-sparse diffusive coupling: the kernel applies it as
+            # wrapped rolls + boundary selects + the scaled accumulate
+            # over the (i_pad, s_block) state — ~10 elementwise passes
+            # for a ring (grid pays ~2x; model the ring floor), NOT an
+            # n_nodes^2 matmul.
+            fma_vregs += 10 * vregs(c.i_pad, c.s_block)
         compute_cycles = fma_vregs / VPU_FMA_VREGS_PER_CYCLE
     else:
         macs_per_cycle = (MXU_MACS_PER_CYCLE_BF16 if c.dtype_bytes == 2
@@ -122,9 +138,19 @@ def measure_candidate(c: Candidate) -> Dict[str, float]:
         # Both matmuls pad contraction + one free dim to 128 on the MXU.
         macs = (_pad(c.i_pad, 128) * _pad(c.h_pad, 128) * c.s_block
                 + _pad(c.h_pad, 128) * _pad(c.i_pad, 128) * c.s_block)
+        extra_vpu = 0.0
+        if c.n_nodes > 1:
+            # The coupling operator is one more genuinely MXU-shaped
+            # contraction: (i_pad x i_pad) @ (i_pad x s_block).  The
+            # operator is block-sparse (nearest-neighbour blocks only),
+            # but the block-sparse route already did its work upstream —
+            # the lattice state is n_nodes x base_dim, not n_nodes^2, so
+            # a single 128-padded pass covers it.
+            macs += _pad(c.i_pad, 128) * _pad(c.i_pad, 128) * c.s_block
+            extra_vpu = vregs(c.i_pad, c.s_block)   # the += into y
         # activation + biases still run on the VPU
-        vpu_cycles = (vregs(c.h_pad, c.s_block) * 2 + vregs(c.i_pad, c.s_block)) \
-            / VPU_FMA_VREGS_PER_CYCLE
+        vpu_cycles = (vregs(c.h_pad, c.s_block) * 2 + vregs(c.i_pad, c.s_block)
+                      + extra_vpu) / VPU_FMA_VREGS_PER_CYCLE
         compute_cycles = macs / macs_per_cycle + vpu_cycles
 
     # HBM traffic per step: the trajectory write-out (state never leaves VMEM).
@@ -156,11 +182,37 @@ def vmem_bytes(c: Candidate) -> int:
     """Closed-form VMEM working set of the kernel instance (the cost)."""
     d = c.dtype_bytes
     weights = (c.i_pad * c.h_pad + c.h_pad + c.h_pad * c.i_pad + c.i_pad) * d
+    if c.n_nodes > 1 and c.compute_unit == "mxu":
+        weights += c.i_pad * c.i_pad * d     # resident coupling operator
     state = c.i_pad * c.s_block * d          # scratch carry
     hidden = c.h_pad * c.s_block * d * c.unroll   # live h per unrolled step
     x0_blk = c.i_pad * c.s_block * d
     out_blk = 2 * c.t_block * c.i_pad * c.s_block * d   # double-buffered
     return weights + state + hidden + x0_blk + out_blk
+
+
+def stacked_gang_vmem_bytes(c: Candidate, n_cores: int) -> int:
+    """VMEM working set of one ``chaotic_ann_gang_stacked_pallas`` launch
+    stacking ``n_cores`` equal pools on the sublane axis.
+
+    Everything the solo instance keeps per core — state carry, live
+    hidden, x0 block — is resident for all C cores at once, the
+    pre-broadcast weight tables are (i_dim, C*h_pad)/(h_dim, C*i_pad),
+    and the words block is (t_block/2, C, s_block) double-buffered.
+    This is the planner's stacked-layout feasibility check: the pool
+    size where this crosses ``VMEM_USABLE`` is the stacked-layout VMEM
+    cliff, past which the planner must fall back to a lane-concat
+    (ragged/padded) launch.
+    """
+    C = max(1, int(n_cores))
+    d = c.dtype_bytes
+    tables = (c.i_dim * C * c.h_pad + C * c.h_pad
+              + c.h_dim * C * c.i_pad + C * c.i_pad) * d
+    state = C * c.i_pad * c.s_block * d
+    hidden = C * c.h_pad * c.s_block * d * c.unroll
+    x0_blk = C * c.i_pad * c.s_block * d
+    out_blk = 2 * (c.t_block // 2) * C * c.s_block * 4   # uint32 words
+    return tables + state + hidden + x0_blk + out_blk
 
 
 # ---------------------------------------------------------------------------
@@ -526,11 +578,12 @@ def enumerate_candidates(i_dim: int, h_dim: int,
                          units: Sequence[str] = ("vpu", "mxu"),
                          dtypes: Sequence[int] = (4, 2),
                          unrolls: Sequence[int] = (1, 2, 4, 8),
-                         t_blocks: Sequence[int] = (32, 64, 128, 256)) -> List[Candidate]:
+                         t_blocks: Sequence[int] = (32, 64, 128, 256),
+                         n_nodes: int = 1) -> List[Candidate]:
     out = []
     for p, u, d, un, tb in itertools.product(p_levels, units, dtypes, unrolls, t_blocks):
         c = Candidate(i_dim=i_dim, h_dim=h_dim, p=p, compute_unit=u,
-                      dtype_bytes=d, unroll=un, t_block=tb)
+                      dtype_bytes=d, unroll=un, t_block=tb, n_nodes=n_nodes)
         if vmem_bytes(c) <= VMEM_USABLE:
             out.append(c)
     return out
@@ -546,7 +599,20 @@ def _objective_score(c: Candidate, i_dim: int, h_dim: int,
     smaller *measured* VMEM working set (the estimator is blind to
     (t_block, unroll) but the real footprint is not — out/hidden buffers
     scale with both), with overhead as the final tie-break.
+
+    Lattice candidates (``n_nodes > 1``) score on the extended cycle
+    model directly: the Eq. 8/9 estimators were fitted on scalar-core
+    sizes (I<=8, H<=32) and normalize per I*H, so extrapolating them to
+    lattice dims would erase exactly the block-sparse compute-unit
+    tradeoff the lattice arms of ``measure_candidate`` encode.
     """
+    if c.n_nodes > 1:
+        m = measure_candidate(c)
+        if objective == "min_latency":
+            return (m["per_stream_latency_cycles"], _overhead_share(c))
+        if objective == "lowest_cost":
+            return (m["vmem_bytes"], _overhead_share(c))
+        raise ValueError(f"unknown objective {objective!r}")
     if objective == "min_latency":
         primary = lm.predict(i_dim, h_dim, c.p, c.compute_unit, c.dtype_bytes)
         return (primary, _overhead_share(c))
@@ -585,12 +651,13 @@ def pareto_front(cands: Sequence[Candidate],
 
 def select(i_dim: int, h_dim: int, mode: str = "pareto", p: int | None = None,
             latency_model: LatencyModel | None = None,
-            cost_model: CostModel | None = None) -> Candidate:
+            cost_model: CostModel | None = None,
+            n_nodes: int = 1) -> Candidate:
     """Paper's three user options: 'min_latency', 'lowest_cost', or
     'pareto' with requested parallelism P."""
     lm = latency_model or LatencyModel.fit()
     cm = cost_model or CostModel.fit()
-    cands = enumerate_candidates(i_dim, h_dim)
+    cands = enumerate_candidates(i_dim, h_dim, n_nodes=n_nodes)
     if mode in ("min_latency", "lowest_cost"):
         return min(cands,
                    key=lambda c: _objective_score(c, i_dim, h_dim, lm, cm, mode))
@@ -621,7 +688,8 @@ def _fitted_models() -> Tuple[LatencyModel, CostModel]:
 @functools.lru_cache(maxsize=None)
 def select_config(i_dim: int, h_dim: int, s_total: Optional[int] = None,
                   dtype: object = "float32", unit: Optional[str] = None,
-                  objective: str = "min_latency") -> Candidate:
+                  objective: str = "min_latency",
+                  n_nodes: int = 1) -> Candidate:
     """Pick (s_block, t_block, unroll, compute_unit) for a kernel launch.
 
     The autotuned replacement for hand-picked per-call-site defaults: scores
@@ -643,7 +711,8 @@ def select_config(i_dim: int, h_dim: int, s_total: Optional[int] = None,
     if dt is None:
         raise ValueError(f"unknown dtype {dtype!r}")
     units = (unit,) if unit else ("vpu", "mxu")
-    cands = enumerate_candidates(i_dim, h_dim, units=units, dtypes=(dt,))
+    cands = enumerate_candidates(i_dim, h_dim, units=units, dtypes=(dt,),
+                                 n_nodes=n_nodes)
     if s_total is not None:
         # p=0 (s_block=128) always fits the cap, so this never empties cands.
         s_cap = max(LANES, _pad(s_total, LANES))

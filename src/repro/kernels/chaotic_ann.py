@@ -49,44 +49,175 @@ def _pad_to(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
 
 
+def _grid_dims(n_nodes: int) -> tuple:
+    """Most-square P x Q factorization for grid topology (must match
+    ``repro.core.chaotic._grid_shape`` — same operator, two layouts)."""
+    p = max(1, int(math.isqrt(n_nodes)))
+    while n_nodes % p:
+        p -= 1
+    return p, n_nodes // p
+
+
+def _lattice_delta(x, lattice):
+    """Diffusive-coupling increment of a block-coupled lattice, as wrapped
+    sublane rolls — the VPU form of the block-sparse coupling operator.
+
+    x: (R, s) with R a whole number of ``period = n_nodes * base_dim``
+    row groups (one for the solo kernel, C for the sublane-stacked gang —
+    the node index is periodic per group, so ONE formula serves both
+    layouts).  Each component row r accumulates its graph neighbours:
+    ``delta[r] = strength * (sum_neighbours x[r'] - deg * x[r])``, where
+    neighbour rows are reached by rolling the whole block by +-stride and
+    correcting the ring-wrap rows with an iota mask (1-D iota is illegal
+    on TPU; ``broadcasted_iota`` over (R, 1)).  Exactly the same jnp
+    expression runs in every kernel AND the ``ref`` backend scan, so the
+    coupled step is bitwise identical across all of them.
+    """
+    n_nodes, base_dim, topology, strength = lattice
+    period = n_nodes * base_dim
+    r = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], 1), 0)
+    node = (r % period) // base_dim
+
+    def ring_pair(idx, n_ring, stride):
+        prev = jnp.where(idx == 0,
+                         jnp.roll(x, -(n_ring - 1) * stride, axis=0),
+                         jnp.roll(x, stride, axis=0))
+        nxt = jnp.where(idx == n_ring - 1,
+                        jnp.roll(x, (n_ring - 1) * stride, axis=0),
+                        jnp.roll(x, -stride, axis=0))
+        return prev + nxt
+
+    if topology == "ring":
+        acc = ring_pair(node, n_nodes, base_dim)
+        deg = 2
+    else:  # grid: P x Q torus, two nested rings
+        pp, qq = _grid_dims(n_nodes)
+        acc = (ring_pair(node // qq, pp, qq * base_dim)
+               + ring_pair(node % qq, qq, base_dim))
+        deg = 4
+    eps = jnp.asarray(strength, x.dtype)
+    return (acc - deg * x) * eps
+
+
+def _check_lattice(lattice, i_dim: int, i_pad: int):
+    """Validate the static lattice descriptor against the kernel dims."""
+    n_nodes, base_dim, _topo, _eps = lattice
+    if n_nodes * base_dim != i_dim:
+        raise ValueError(f"lattice {n_nodes}x{base_dim} != i_dim {i_dim}")
+    if i_pad != i_dim:
+        raise ValueError(
+            f"lattice state dim {i_dim} must be a whole number of sublanes "
+            f"(got padding to {i_pad}); the wrapped-roll coupling cannot "
+            f"cross padding rows")
+
+
+def _round_half(v, dtype):
+    """Round an f32 accumulator to a half-width state dtype, non-elidably.
+
+    XLA's allow-excess-precision pass may cancel a bf16 round trip — the
+    ``convert(f32->bf16)`` every ``preferred_element_type=f32`` matmul
+    boundary emits, feeding the next step's ``convert(bf16->f32)`` — so a
+    multi-step kernel body can carry MORE precision between steps than a
+    one-step-per-carry scan, silently breaking bitwise kernel/ref identity
+    (the carry of a scan is materialized at bf16; a fused body's isn't).
+    ``reduce_precision`` cannot be elided, so the state rounds exactly once
+    per step everywhere.  f32 states pass through untouched.
+    """
+    if jnp.dtype(dtype) == jnp.bfloat16:
+        fi = jnp.finfo(jnp.bfloat16)
+        v = jax.lax.reduce_precision(v, fi.nexp, fi.nmant)
+    return v.astype(dtype)
+
+
 def _make_step(w1, b1, w2, b2, *, activation: str, compute_unit: str,
-               i_dim: int, h_dim: int):
+               i_dim: int, h_dim: int, lattice=None, cpl=None):
     """Shared oscillator update used by every kernel in this module.
 
     Operates on x of shape (I_pad, s): padded feature rows of the weights are
     zero, so padding never contaminates live rows.
+
+    ``lattice = (n_nodes, base_dim, topology, strength)`` adds the
+    block-coupled diffusive term: on mxu it is one more genuine MXU
+    contraction with the resident ``cpl`` (I, I) operand; on vpu it is the
+    roll-based ``_lattice_delta`` (no matrix ever materialized).  The two
+    units produce legitimately different word streams (different fp
+    expression trees) — determinism keys on ``compute_unit`` as ever.
     """
     phi = _activation(activation)
 
+    def couple(x):
+        if cpl is not None:
+            return _round_half(
+                jnp.dot(cpl, x, preferred_element_type=jnp.float32), x.dtype)
+        return _lattice_delta(x, lattice)
+
     def one_step(x):
         if compute_unit == "mxu":
-            h = phi(jnp.dot(w1.T, x, preferred_element_type=jnp.float32)
-                    .astype(x.dtype) + b1)
-            y = jnp.dot(w2.T, h, preferred_element_type=jnp.float32)
-            return y.astype(x.dtype) + b2
-        # VPU path: broadcast-FMA over lanes; static unroll over tiny dims.
-        h = jnp.zeros((w1.shape[1], x.shape[1]), x.dtype)
-        for i in range(i_dim):
-            h = h + w1[i, :][:, None] * x[i, :][None, :]
-        h = phi(h + b1)
-        y = jnp.zeros_like(x)
-        for j in range(h_dim):
-            y = y + w2[j, :][:, None] * h[j, :][None, :]
-        return y + b2
+            h = phi(_round_half(
+                jnp.dot(w1.T, x, preferred_element_type=jnp.float32),
+                x.dtype) + b1)
+            y = _round_half(
+                jnp.dot(w2.T, h, preferred_element_type=jnp.float32), x.dtype)
+            y = y + b2
+        else:
+            # VPU path: broadcast-FMA over lanes; static unroll over tiny
+            # dims.
+            h = jnp.zeros((w1.shape[1], x.shape[1]), x.dtype)
+            for i in range(i_dim):
+                h = h + w1[i, :][:, None] * x[i, :][None, :]
+            h = phi(h + b1)
+            y = jnp.zeros_like(x)
+            for j in range(h_dim):
+                y = y + w2[j, :][:, None] * h[j, :][None, :]
+            y = y + b2
+        if lattice is not None:
+            y = y + couple(x)
+        # pin the carry itself: the bf16 add chain after the matmul
+        # boundaries is equally subject to excess-precision fusion
+        return _round_half(y, y.dtype)
 
     return one_step
 
 
-def _kernel(w1_ref, b1_ref, w2_ref, b2_ref, x0_ref, out_ref, state_ref,
-            *, t_block: int, unroll: int, activation: str, compute_unit: str,
-            i_dim: int, h_dim: int):
+def _prep_lattice(lattice, coupling, compute_unit: str, i_dim: int,
+                  i_pad: int, dtype):
+    """Shared launch-side lattice validation.
+
+    Returns ``(use_cpl, cplp)``: whether the kernel takes the dense (I, I)
+    coupling operand (mxu only — the vpu paths rebuild the operator from the
+    static descriptor as wrapped rolls and never materialize a matrix), and
+    the dtype-cast operand itself.
+    """
+    if lattice is None:
+        return False, None
+    _check_lattice(lattice, i_dim, i_pad)
+    if compute_unit != "mxu":
+        return False, None
+    if coupling is None:
+        raise ValueError(
+            "mxu lattice launches need the dense coupling operand")
+    if coupling.shape != (i_dim, i_dim):
+        raise ValueError(f"coupling shape {coupling.shape} != "
+                         f"({i_dim}, {i_dim})")
+    return True, jnp.asarray(coupling, dtype)
+
+
+def _kernel(*refs, t_block: int, unroll: int, activation: str,
+            compute_unit: str, i_dim: int, h_dim: int, lattice, has_cpl):
     """One (stream-block, time-block) grid cell.
 
     Ref shapes (per block):
       w1: (I_pad, H_pad)  b1: (H_pad, 1)  w2: (H_pad, I_pad)  b2: (I_pad, 1)
+      [cpl: (I_pad, I_pad) — mxu lattice launches only]
       x0: (I_pad, s_block)      out: (t_block, I_pad, s_block)
       state (VMEM scratch): (I_pad, s_block)
     """
+    if has_cpl:
+        (w1_ref, b1_ref, w2_ref, b2_ref, cpl_ref, x0_ref, out_ref,
+         state_ref) = refs
+    else:
+        (w1_ref, b1_ref, w2_ref, b2_ref, x0_ref, out_ref, state_ref) = refs
+        cpl_ref = None
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -95,7 +226,8 @@ def _kernel(w1_ref, b1_ref, w2_ref, b2_ref, x0_ref, out_ref, state_ref,
 
     one_step = _make_step(w1_ref[...], b1_ref[...], w2_ref[...], b2_ref[...],
                           activation=activation, compute_unit=compute_unit,
-                          i_dim=i_dim, h_dim=h_dim)
+                          i_dim=i_dim, h_dim=h_dim, lattice=lattice,
+                          cpl=cpl_ref[...] if has_cpl else None)
 
     def unrolled_chunk(x, base):
         for u in range(unroll):
@@ -117,18 +249,23 @@ def _kernel(w1_ref, b1_ref, w2_ref, b2_ref, x0_ref, out_ref, state_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("n_steps", "s_block", "t_block", "unroll", "activation",
-                     "compute_unit", "interpret"),
+                     "compute_unit", "lattice", "interpret"),
 )
-def chaotic_ann_pallas(w1, b1, w2, b2, x0, *, n_steps: int,
+def chaotic_ann_pallas(w1, b1, w2, b2, x0, coupling=None, *, n_steps: int,
                        s_block: int = 256, t_block: int = 128, unroll: int = 1,
                        activation: str = "relu", compute_unit: str = "vpu",
-                       interpret: bool = False):
+                       lattice=None, interpret: bool = False):
     """Run the fused oscillator kernel.
 
     Args:
       w1 (I, H), b1 (H,), w2 (H, I), b2 (I,), x0 (S, I).
+      coupling: dense (I, I) diffusive operator — consumed only by mxu
+        lattice launches (one extra resident MXU operand).
       n_steps: total steps (padded up to a multiple of t_block internally).
       s_block/t_block/unroll/compute_unit: DSE-searchable microarchitecture.
+      lattice: optional static ``(n_nodes, base_dim, topology, strength)``
+        descriptor — turns the core into a block-coupled lattice (vpu
+        applies the coupling as wrapped sublane rolls, no matrix operand).
     Returns:
       (n_steps, S, I) trajectory matching ``ref.chaotic_ann_ref``.
     """
@@ -142,6 +279,8 @@ def chaotic_ann_pallas(w1, b1, w2, b2, x0, *, n_steps: int,
     h_pad = _pad_to(max(h_dim, 1), SUBLANES)
     s_pad = _pad_to(s_total, s_block)
     t_pad = _pad_to(n_steps, t_block)
+    use_cpl, cplp = _prep_lattice(lattice, coupling, compute_unit,
+                                  i_dim, i_pad, dtype)
 
     w1p = jnp.zeros((i_pad, h_pad), dtype).at[:i_dim, :h_dim].set(w1.astype(dtype))
     b1p = jnp.zeros((h_pad, 1), dtype).at[:h_dim, 0].set(b1.astype(dtype))
@@ -153,23 +292,31 @@ def chaotic_ann_pallas(w1, b1, w2, b2, x0, *, n_steps: int,
     grid = (s_pad // s_block, t_pad // t_block)
     scratch = [_VMEM((i_pad, s_block), dtype)] if _VMEM is not None else []
 
+    in_specs = [
+        pl.BlockSpec((i_pad, h_pad), lambda s, t: (0, 0)),    # w1
+        pl.BlockSpec((h_pad, 1), lambda s, t: (0, 0)),        # b1
+        pl.BlockSpec((h_pad, i_pad), lambda s, t: (0, 0)),    # w2
+        pl.BlockSpec((i_pad, 1), lambda s, t: (0, 0)),        # b2
+    ]
+    inputs = [w1p, b1p, w2p, b2p]
+    if use_cpl:
+        in_specs.append(pl.BlockSpec((i_pad, i_pad), lambda s, t: (0, 0)))
+        inputs.append(cplp)
+    in_specs.append(pl.BlockSpec((i_pad, s_block), lambda s, t: (0, s)))
+    inputs.append(x0p)
+
     out = pl.pallas_call(
         functools.partial(_kernel, t_block=t_block, unroll=unroll,
                           activation=activation, compute_unit=compute_unit,
-                          i_dim=i_dim, h_dim=h_dim),
+                          i_dim=i_dim, h_dim=h_dim, lattice=lattice,
+                          has_cpl=use_cpl),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((i_pad, h_pad), lambda s, t: (0, 0)),    # w1
-            pl.BlockSpec((h_pad, 1), lambda s, t: (0, 0)),        # b1
-            pl.BlockSpec((h_pad, i_pad), lambda s, t: (0, 0)),    # w2
-            pl.BlockSpec((i_pad, 1), lambda s, t: (0, 0)),        # b2
-            pl.BlockSpec((i_pad, s_block), lambda s, t: (0, s)),  # x0
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((t_block, i_pad, s_block), lambda s, t: (t, 0, s)),
         out_shape=jax.ShapeDtypeStruct((t_pad, i_pad, s_pad), dtype),
         scratch_shapes=scratch,
         interpret=interpret,
-    )(w1p, b1p, w2p, b2p, x0p)
+    )(*inputs)
 
     # (t_pad, I_pad, s_pad) -> (n_steps, S, I)
     return out[:n_steps, :i_dim, :s_total].transpose(0, 2, 1)
@@ -214,18 +361,26 @@ def _finalize(w):
     return w
 
 
-def _bits_kernel(w1_ref, b1_ref, w2_ref, b2_ref, x0_ref, off_ref,
-                 words_ref, state_ref, *, t_block: int, unroll: int,
-                 activation: str, compute_unit: str, i_dim: int, h_dim: int):
+def _bits_kernel(*refs, t_block: int, unroll: int,
+                 activation: str, compute_unit: str, i_dim: int, h_dim: int,
+                 lattice, has_cpl):
     """One (stream-block, time-block) grid cell of the fused PRNG kernel.
 
     Per block:
+      [cpl:  (I_pad, I_pad) coupling — mxu lattice launches only]
       off:   (1, s_block) uint32  per-stream word-row offset (Weyl counter)
       words: (t_block//2, s_block) uint32  output words
       state: (I_pad, s_block)  output, doubles as the VMEM carry across the
              time grid (same output block revisited for every t), so the
              float trajectory is never written to HBM.
     """
+    if has_cpl:
+        (w1_ref, b1_ref, w2_ref, b2_ref, cpl_ref, x0_ref, off_ref,
+         words_ref, state_ref) = refs
+    else:
+        (w1_ref, b1_ref, w2_ref, b2_ref, x0_ref, off_ref,
+         words_ref, state_ref) = refs
+        cpl_ref = None
     t = pl.program_id(1)
     rows_per_block = t_block // 2
 
@@ -235,7 +390,8 @@ def _bits_kernel(w1_ref, b1_ref, w2_ref, b2_ref, x0_ref, off_ref,
 
     one_step = _make_step(w1_ref[...], b1_ref[...], w2_ref[...], b2_ref[...],
                           activation=activation, compute_unit=compute_unit,
-                          i_dim=i_dim, h_dim=h_dim)
+                          i_dim=i_dim, h_dim=h_dim, lattice=lattice,
+                          cpl=cpl_ref[...] if has_cpl else None)
     offs = off_ref[...]
 
     def one_row(x, r):
@@ -280,14 +436,14 @@ def _bits_blocks(n_steps: int, t_block: int, unroll: int):
 @functools.partial(
     jax.jit,
     static_argnames=("n_steps", "s_block", "t_block", "unroll", "activation",
-                     "compute_unit", "interpret"),
+                     "compute_unit", "lattice", "interpret"),
 )
-def chaotic_ann_bits_pallas(w1, b1, w2, b2, x0, word_offset=0, *,
-                            n_steps: int, s_block: int = 256,
+def chaotic_ann_bits_pallas(w1, b1, w2, b2, x0, word_offset=0, coupling=None,
+                            *, n_steps: int, s_block: int = 256,
                             t_block: int = 128, unroll: int = 1,
                             activation: str = "relu",
                             compute_unit: str = "vpu",
-                            interpret: bool = False):
+                            lattice=None, interpret: bool = False):
     """Fused oscillator + bit-extraction: streams PRNG words straight out.
 
     Runs the same update as ``chaotic_ann_pallas`` but packs the low-mantissa
@@ -301,6 +457,9 @@ def chaotic_ann_bits_pallas(w1, b1, w2, b2, x0, word_offset=0, *,
       word_offset: scalar or (S,) uint32 — the global word-row counter(s) of
         the first emitted row; makes chunked draws resume the exact Weyl
         sequence of one long draw.
+      coupling / lattice: see ``chaotic_ann_pallas`` — the same static
+        lattice descriptor (and, for mxu, dense operand) turns the core
+        into a block-coupled oscillator lattice.
       n_steps: steps to run; must be even (2 samples -> 1 word row).
     Returns:
       words: (n_steps // 2, S) uint32 word rows,
@@ -317,6 +476,8 @@ def chaotic_ann_bits_pallas(w1, b1, w2, b2, x0, word_offset=0, *,
     h_pad = _pad_to(max(h_dim, 1), SUBLANES)
     s_pad = _pad_to(s_total, s_block)
     n_rows = n_steps // 2
+    use_cpl, cplp = _prep_lattice(lattice, coupling, compute_unit,
+                                  i_dim, i_pad, dtype)
 
     w1p = jnp.zeros((i_pad, h_pad), dtype).at[:i_dim, :h_dim].set(w1.astype(dtype))
     b1p = jnp.zeros((h_pad, 1), dtype).at[:h_dim, 0].set(b1.astype(dtype))
@@ -327,20 +488,30 @@ def chaotic_ann_bits_pallas(w1, b1, w2, b2, x0, word_offset=0, *,
     offp = jnp.zeros((1, s_pad), jnp.uint32).at[0, :s_total].set(
         jnp.broadcast_to(off, (s_total,)))
 
+    in_specs = [
+        pl.BlockSpec((i_pad, h_pad), lambda s, t: (0, 0)),    # w1
+        pl.BlockSpec((h_pad, 1), lambda s, t: (0, 0)),        # b1
+        pl.BlockSpec((h_pad, i_pad), lambda s, t: (0, 0)),    # w2
+        pl.BlockSpec((i_pad, 1), lambda s, t: (0, 0)),        # b2
+    ]
+    inputs = [w1p, b1p, w2p, b2p]
+    if use_cpl:
+        in_specs.append(pl.BlockSpec((i_pad, i_pad), lambda s, t: (0, 0)))
+        inputs.append(cplp)
+    in_specs += [
+        pl.BlockSpec((i_pad, s_block), lambda s, t: (0, s)),  # x0
+        pl.BlockSpec((1, s_block), lambda s, t: (0, s)),      # offsets
+    ]
+    inputs += [x0p, offp]
+
     grid = (s_pad // s_block, n_steps // t_block)
     words, state = pl.pallas_call(
         functools.partial(_bits_kernel, t_block=t_block, unroll=unroll,
                           activation=activation, compute_unit=compute_unit,
-                          i_dim=i_dim, h_dim=h_dim),
+                          i_dim=i_dim, h_dim=h_dim, lattice=lattice,
+                          has_cpl=use_cpl),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((i_pad, h_pad), lambda s, t: (0, 0)),    # w1
-            pl.BlockSpec((h_pad, 1), lambda s, t: (0, 0)),        # b1
-            pl.BlockSpec((h_pad, i_pad), lambda s, t: (0, 0)),    # w2
-            pl.BlockSpec((i_pad, 1), lambda s, t: (0, 0)),        # b2
-            pl.BlockSpec((i_pad, s_block), lambda s, t: (0, s)),  # x0
-            pl.BlockSpec((1, s_block), lambda s, t: (0, s)),      # offsets
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((t_block // 2, s_block), lambda s, t: (t, s)),
             pl.BlockSpec((i_pad, s_block), lambda s, t: (0, s)),
@@ -350,7 +521,7 @@ def chaotic_ann_bits_pallas(w1, b1, w2, b2, x0, word_offset=0, *,
             jax.ShapeDtypeStruct((i_pad, s_pad), dtype),
         ],
         interpret=interpret,
-    )(w1p, b1p, w2p, b2p, x0p, offp)
+    )(*inputs)
 
     return words[:, :s_total], state[:i_dim, :s_total].T
 
@@ -362,7 +533,7 @@ def chaotic_ann_bits_pallas(w1, b1, w2, b2, x0, word_offset=0, *,
 
 def _gang_bits_kernel(*refs, t_block: int, unroll: int, activation: str,
                       compute_unit: str, i_dim: int, h_dim: int,
-                      ragged: bool):
+                      ragged: bool, lattice, has_cpl):
     """One (lane-block, time-block) grid cell of the gang PRNG kernel.
 
     Identical math to ``_bits_kernel`` (state output doubles as the VMEM
@@ -381,13 +552,13 @@ def _gang_bits_kernel(*refs, t_block: int, unroll: int, activation: str,
     Word rows past a block's demand are left unwritten (garbage); callers
     slice to the per-block demand.
     """
-    if ragged:
-        (_cmap_ref, rmap_ref, w1_ref, b1_ref, w2_ref, b2_ref, x0_ref,
-         off_ref, words_ref, state_ref) = refs
-    else:
-        (_cmap_ref, w1_ref, b1_ref, w2_ref, b2_ref, x0_ref,
-         off_ref, words_ref, state_ref) = refs
-        rmap_ref = None
+    refs = list(refs)
+    _cmap_ref = refs.pop(0)
+    rmap_ref = refs.pop(0) if ragged else None
+    w1_ref, b1_ref, w2_ref, b2_ref = refs[:4]
+    refs = refs[4:]
+    cpl_ref = refs.pop(0) if has_cpl else None
+    x0_ref, off_ref, words_ref, state_ref = refs
     g = pl.program_id(0)
     t = pl.program_id(1)
     rows_per_block = t_block // 2
@@ -398,7 +569,8 @@ def _gang_bits_kernel(*refs, t_block: int, unroll: int, activation: str,
 
     one_step = _make_step(w1_ref[0], b1_ref[0], w2_ref[0], b2_ref[0],
                           activation=activation, compute_unit=compute_unit,
-                          i_dim=i_dim, h_dim=h_dim)
+                          i_dim=i_dim, h_dim=h_dim, lattice=lattice,
+                          cpl=cpl_ref[...] if has_cpl else None)
     offs = off_ref[...]
 
     def one_row(x, r):
@@ -453,15 +625,15 @@ def gang_effective_rows(row_map, n_steps: int, t_block: int,
 @functools.partial(
     jax.jit,
     static_argnames=("n_steps", "s_block", "t_block", "unroll", "activation",
-                     "compute_unit", "interpret"),
+                     "compute_unit", "lattice", "interpret"),
 )
 def chaotic_ann_gang_bits_pallas(w1, b1, w2, b2, x0, core_map, word_offset=0,
-                                 row_map=None, *, n_steps: int,
+                                 row_map=None, coupling=None, *, n_steps: int,
                                  s_block: int = 256,
                                  t_block: int = 128, unroll: int = 1,
                                  activation: str = "relu",
                                  compute_unit: str = "vpu",
-                                 interpret: bool = False):
+                                 lattice=None, interpret: bool = False):
     """Gang-scheduled fused PRNG: C stacked networks, one kernel launch.
 
     The farm's gang path: weights carry a leading core axis and the pooled
@@ -489,6 +661,10 @@ def chaotic_ann_gang_bits_pallas(w1, b1, w2, b2, x0, core_map, word_offset=0,
         computed prefix is bit-identical to a per-core launch of that many
         rows (absolute-row Weyl indexing).  None = every block computes
         all ``n_steps // 2`` rows (the padded group-max launch).
+      coupling / lattice: see ``chaotic_ann_pallas``.  ONE coupling operand
+        is shared by every lane block — a gang only admits cores with
+        identical lattice meta (the scheduler's compat key), so the shared
+        operand is exact, not an approximation.
       n_steps: steps to run; must be even (2 samples -> 1 word row).
     Returns:
       words: (n_steps // 2, S) uint32 word rows,
@@ -513,6 +689,8 @@ def chaotic_ann_gang_bits_pallas(w1, b1, w2, b2, x0, core_map, word_offset=0,
     i_pad = _pad_to(max(i_dim, 1), SUBLANES)
     h_pad = _pad_to(max(h_dim, 1), SUBLANES)
     n_rows = n_steps // 2
+    use_cpl, cplp = _prep_lattice(lattice, coupling, compute_unit,
+                                  i_dim, i_pad, dtype)
 
     w1p = jnp.zeros((n_cores, i_pad, h_pad), dtype
                     ).at[:, :i_dim, :h_dim].set(w1.astype(dtype))
@@ -538,17 +716,27 @@ def chaotic_ann_gang_bits_pallas(w1, b1, w2, b2, x0, core_map, word_offset=0,
     def _w(g, t, *maps):
         return (maps[0][g], 0, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, i_pad, h_pad), _w),
+        pl.BlockSpec((1, h_pad, 1), _w),
+        pl.BlockSpec((1, h_pad, i_pad), _w),
+        pl.BlockSpec((1, i_pad, 1), _w),
+    ]
+    inputs = [w1p, b1p, w2p, b2p]
+    if use_cpl:
+        in_specs.append(
+            pl.BlockSpec((i_pad, i_pad), lambda g, t, *m: (0, 0)))  # shared
+        inputs.append(cplp)
+    in_specs += [
+        pl.BlockSpec((i_pad, s_block), lambda g, t, *m: (0, g)),   # x0
+        pl.BlockSpec((1, s_block), lambda g, t, *m: (0, g)),  # offsets
+    ]
+    inputs += [x0p, offp]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=n_sc,
         grid=(n_blocks, n_steps // t_block),
-        in_specs=[
-            pl.BlockSpec((1, i_pad, h_pad), _w),
-            pl.BlockSpec((1, h_pad, 1), _w),
-            pl.BlockSpec((1, h_pad, i_pad), _w),
-            pl.BlockSpec((1, i_pad, 1), _w),
-            pl.BlockSpec((i_pad, s_block), lambda g, t, *m: (0, g)),   # x0
-            pl.BlockSpec((1, s_block), lambda g, t, *m: (0, g)),  # offsets
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((t_block // 2, s_block), lambda g, t, *m: (t, g)),
             pl.BlockSpec((i_pad, s_block), lambda g, t, *m: (0, g)),
@@ -557,14 +745,15 @@ def chaotic_ann_gang_bits_pallas(w1, b1, w2, b2, x0, core_map, word_offset=0,
     words, state = pl.pallas_call(
         functools.partial(_gang_bits_kernel, t_block=t_block, unroll=unroll,
                           activation=activation, compute_unit=compute_unit,
-                          i_dim=i_dim, h_dim=h_dim, ragged=ragged),
+                          i_dim=i_dim, h_dim=h_dim, ragged=ragged,
+                          lattice=lattice, has_cpl=use_cpl),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((n_rows, s_total), jnp.uint32),
             jax.ShapeDtypeStruct((i_pad, s_total), dtype),
         ],
         interpret=interpret,
-    )(*scalars, w1p, b1p, w2p, b2p, x0p, offp)
+    )(*scalars, *inputs)
 
     return words, state[:i_dim, :].T
 
@@ -597,7 +786,7 @@ def _stacked_fold16(x, n_cores: int, i_pad: int, i_dim: int):
 
 def _make_stacked_step(w1t, b1s, w2t, b2s, *, activation: str,
                        n_cores: int, i_pad: int, h_pad: int,
-                       i_dim: int, h_dim: int):
+                       i_dim: int, h_dim: int, lattice=None):
     """Whole-group oscillator update on sublane-stacked state.
 
     x: (C*I_pad, s) — core c's state occupies sublane rows
@@ -606,6 +795,12 @@ def _make_stacked_step(w1t, b1s, w2t, b2s, *, activation: str,
     so step ``h += w1t[i] * x[i of every core]`` is ONE fused
     multiply-add over the stacked group — same accumulation order per lane
     as the per-core VPU path, hence bit-identical words.
+
+    Lattice groups reuse ``_lattice_delta`` unchanged: with the enforced
+    ``i_pad == i_dim`` the stacked state is exactly C back-to-back lattice
+    periods, so the node-index iota is core-periodic and the wrapped rolls
+    add each core's own neighbour rows — the identical jnp expression (and
+    values) as the solo kernel, keeping the gang bit-identical per lane.
     """
     phi = _activation(activation)
 
@@ -619,14 +814,18 @@ def _make_stacked_step(w1t, b1s, w2t, b2s, *, activation: str,
         for j in range(h_dim):
             hj = jnp.repeat(h[j::h_pad, :], i_pad, axis=0)
             y = y + w2t[j] * hj
-        return y + b2s
+        y = y + b2s
+        if lattice is not None:
+            y = y + _lattice_delta(x, lattice)
+        return y
 
     return one_step
 
 
 def _gang_stacked_kernel(*refs, t_block: int, unroll: int,
                          activation: str, n_cores: int, i_pad: int,
-                         h_pad: int, i_dim: int, h_dim: int, ragged: bool):
+                         h_pad: int, i_dim: int, h_dim: int, ragged: bool,
+                         lattice):
     """One (lane-block, time-block) cell computing ALL C cores at once.
 
     Ragged variant: an extra (C, 1) row-map input freezes a core's state
@@ -653,7 +852,7 @@ def _gang_stacked_kernel(*refs, t_block: int, unroll: int,
     one_step = _make_stacked_step(
         w1t_ref[...], b1_ref[...], w2t_ref[...], b2_ref[...],
         activation=activation, n_cores=n_cores, i_pad=i_pad, h_pad=h_pad,
-        i_dim=i_dim, h_dim=h_dim)
+        i_dim=i_dim, h_dim=h_dim, lattice=lattice)
     offs = off_ref[...]
     rmap = rmap_ref[...] if ragged else None
 
@@ -690,7 +889,7 @@ def _gang_stacked_kernel(*refs, t_block: int, unroll: int,
 @functools.partial(
     jax.jit,
     static_argnames=("n_steps", "s_block", "t_block", "unroll", "activation",
-                     "compute_unit", "interpret"),
+                     "compute_unit", "lattice", "interpret"),
 )
 def chaotic_ann_gang_stacked_pallas(w1, b1, w2, b2, x0, word_offset=0,
                                     row_map=None, *,
@@ -698,7 +897,7 @@ def chaotic_ann_gang_stacked_pallas(w1, b1, w2, b2, x0, word_offset=0,
                                     t_block: int = 128, unroll: int = 1,
                                     activation: str = "relu",
                                     compute_unit: str = "vpu",
-                                    interpret: bool = False):
+                                    lattice=None, interpret: bool = False):
     """Gang launch for C equal-shape pools, stacked on the SUBLANE axis.
 
     Where ``chaotic_ann_gang_bits_pallas`` concatenates pools along the
@@ -745,6 +944,8 @@ def chaotic_ann_gang_stacked_pallas(w1, b1, w2, b2, x0, word_offset=0,
     h_pad = _pad_to(max(h_dim, 1), SUBLANES)
     s_pad = _pad_to(s_total, s_block)
     n_rows = n_steps // 2
+    if lattice is not None:
+        _check_lattice(lattice, i_dim, i_pad)
 
     # Pre-broadcast weight tables: w1t[i] (C*H_pad, 1) holds w1[c, i, j] at
     # row c*H_pad + j; w2t[j] (C*I_pad, 1) holds w2[c, j, i'] at c*I_pad+i'.
@@ -795,7 +996,8 @@ def chaotic_ann_gang_stacked_pallas(w1, b1, w2, b2, x0, word_offset=0,
         functools.partial(_gang_stacked_kernel, t_block=t_block,
                           unroll=unroll, activation=activation,
                           n_cores=n_cores, i_pad=i_pad, h_pad=h_pad,
-                          i_dim=i_dim, h_dim=h_dim, ragged=ragged),
+                          i_dim=i_dim, h_dim=h_dim, ragged=ragged,
+                          lattice=lattice),
         grid=grid,
         in_specs=in_specs,
         out_specs=[
@@ -853,12 +1055,13 @@ def gang_partition_maps(core_map, row_map, *, n_dev: int, n_rows: int):
 
 
 def chaotic_ann_gang_bits_sharded(w1, b1, w2, b2, x0, core_map,
-                                  word_offset=0, row_map=None, *, mesh,
+                                  word_offset=0, row_map=None, coupling=None,
+                                  *, mesh,
                                   mesh_axis: str = "data", n_steps: int,
                                   s_block: int = 256, t_block: int = 128,
                                   unroll: int = 1, activation: str = "relu",
                                   compute_unit: str = "vpu",
-                                  interpret: bool = False):
+                                  lattice=None, interpret: bool = False):
     """Lane-concat gang launch partitioned across ``mesh[mesh_axis]``.
 
     Weight slabs are replicated (passed through with ``P()`` specs — NOT
@@ -890,16 +1093,22 @@ def chaotic_ann_gang_bits_sharded(w1, b1, w2, b2, x0, core_map,
     args = [w1, b1, w2, b2, x0, off, cmap]
     if row_map is not None:
         args.append(jnp.asarray(row_map, jnp.int32))
+    has_cpl = lattice is not None and compute_unit == "mxu"
+    if has_cpl:
+        if coupling is None:
+            raise ValueError(
+                "mxu lattice launches need the dense coupling operand")
+        args.append(jnp.asarray(coupling))
     fn = _sharded_gang_bits_fn(
         mesh, mesh_axis, row_map is not None, n_steps, s_block, t_block,
-        unroll, activation, compute_unit, interpret)
+        unroll, activation, compute_unit, lattice, has_cpl, interpret)
     return fn(*args)
 
 
 @functools.lru_cache(maxsize=128)
 def _sharded_gang_bits_fn(mesh, mesh_axis, has_rmap, n_steps, s_block,
                           t_block, unroll, activation, compute_unit,
-                          interpret):
+                          lattice, has_cpl, interpret):
     """Jitted shard_map'd lane-concat gang launch, cached per (mesh,
     static kernel config).  Weights/pool/maps are traced arguments, so
     jit retraces only when a launch SHAPE is new — per-flush weight or
@@ -909,19 +1118,22 @@ def _sharded_gang_bits_fn(mesh, mesh_axis, has_rmap, n_steps, s_block,
 
     kw = dict(n_steps=n_steps, s_block=s_block, t_block=t_block,
               unroll=unroll, activation=activation,
-              compute_unit=compute_unit, interpret=interpret)
+              compute_unit=compute_unit, lattice=lattice,
+              interpret=interpret)
     in_specs = [P(), P(), P(), P(),
                 P(mesh_axis, None), P(mesh_axis), P(mesh_axis)]
     if has_rmap:
         in_specs.append(P(mesh_axis))
+    if has_cpl:
+        in_specs.append(P())       # coupling: replicated like the weights
 
-        def local(w1, b1, w2, b2, x_l, off_l, cmap_l, rmap_l):
-            return chaotic_ann_gang_bits_pallas(
-                w1, b1, w2, b2, x_l, cmap_l, off_l, rmap_l, **kw)
-    else:
-        def local(w1, b1, w2, b2, x_l, off_l, cmap_l):
-            return chaotic_ann_gang_bits_pallas(
-                w1, b1, w2, b2, x_l, cmap_l, off_l, None, **kw)
+    def local(w1, b1, w2, b2, x_l, off_l, cmap_l, *rest):
+        rest = list(rest)
+        rmap_l = rest.pop(0) if has_rmap else None
+        cpl = rest.pop(0) if has_cpl else None
+        return chaotic_ann_gang_bits_pallas(
+            w1, b1, w2, b2, x_l, cmap_l, off_l, rmap_l, cpl, **kw)
+
     return jax.jit(shard_map(
         local, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=(P(None, mesh_axis), P(mesh_axis, None)),
@@ -935,7 +1147,7 @@ def chaotic_ann_gang_stacked_sharded(w1, b1, w2, b2, x0, word_offset=0,
                                      unroll: int = 1,
                                      activation: str = "relu",
                                      compute_unit: str = "vpu",
-                                     interpret: bool = False):
+                                     lattice=None, interpret: bool = False):
     """Sublane-stacked gang launch partitioned across ``mesh[mesh_axis]``.
 
     The group's equal-size pools shard on the STREAM axis (every device
@@ -961,14 +1173,14 @@ def chaotic_ann_gang_stacked_sharded(w1, b1, w2, b2, x0, word_offset=0,
         args.append(jnp.asarray(row_map, jnp.int32))
     fn = _sharded_gang_stacked_fn(
         mesh, mesh_axis, row_map is not None, n_steps, s_block, t_block,
-        unroll, activation, compute_unit, interpret)
+        unroll, activation, compute_unit, lattice, interpret)
     return fn(*args)
 
 
 @functools.lru_cache(maxsize=128)
 def _sharded_gang_stacked_fn(mesh, mesh_axis, has_rmap, n_steps, s_block,
                              t_block, unroll, activation, compute_unit,
-                             interpret):
+                             lattice, interpret):
     """Jitted shard_map'd sublane-stacked gang launch, cached per (mesh,
     static kernel config) — see ``_sharded_gang_bits_fn``."""
     from jax.experimental.shard_map import shard_map
@@ -976,7 +1188,8 @@ def _sharded_gang_stacked_fn(mesh, mesh_axis, has_rmap, n_steps, s_block,
 
     kw = dict(n_steps=n_steps, s_block=s_block, t_block=t_block,
               unroll=unroll, activation=activation,
-              compute_unit=compute_unit, interpret=interpret)
+              compute_unit=compute_unit, lattice=lattice,
+              interpret=interpret)
     in_specs = [P(), P(), P(), P(),
                 P(None, mesh_axis, None), P(None, mesh_axis)]
     if has_rmap:

@@ -31,6 +31,28 @@ def _kernel_kwargs(config) -> Dict[str, object]:
                 unroll=config.unroll, compute_unit=config.compute_unit)
 
 
+def _lattice_args(params: Dict[str, jax.Array], compute_unit: str):
+    """Lattice routing from a params dict.
+
+    A block-coupled lattice core carries two extra keys next to the
+    standard (lattice-expanded) ``w1/b1/w2/b2``: ``lattice_meta`` (the
+    static descriptor) and ``coupling`` (the dense (I, I) operator).
+    Returns ``(lattice, coupling)`` for the kernels — coupling only on the
+    mxu route, where it is a resident MXU operand; the vpu kernels rebuild
+    the operator from the descriptor as wrapped rolls.
+    Scalar cores return ``(None, None)`` and every call site degrades to
+    the exact pre-lattice behavior.
+    """
+    if "lattice_meta" not in params:
+        return None, None
+    from repro.core.ann import lattice_meta_tuple
+    lattice = lattice_meta_tuple(np.asarray(params["lattice_meta"]))
+    cpl = None
+    if compute_unit == "mxu":
+        cpl = jnp.asarray(params["coupling"])
+    return lattice, cpl
+
+
 def chaotic_trajectory(params: Dict[str, jax.Array], x0: jax.Array, n_steps: int,
                        *, activation: str = "relu", backend: str = "auto",
                        s_block: int = 256, t_block: int = 128, unroll: int = 1,
@@ -44,16 +66,21 @@ def chaotic_trajectory(params: Dict[str, jax.Array], x0: jax.Array, n_steps: int
     output drives the kernel instantiation.
     """
     w1, b1, w2, b2 = params["w1"], params["b1"], params["w2"], params["b2"]
-    if backend == "ref":
-        return ref.chaotic_ann_ref(w1, b1, w2, b2, x0, n_steps, activation)
     kw = dict(s_block=s_block, t_block=t_block, unroll=unroll,
               compute_unit=compute_unit)
     if config is not None:
         kw = _kernel_kwargs(config)
+    lattice, cpl = _lattice_args(params, kw["compute_unit"])
+    if backend == "ref":
+        if lattice is not None:
+            return ref.chaotic_ann_lattice_ref(
+                w1, b1, w2, b2, x0, n_steps, activation, lattice=lattice,
+                coupling=cpl, compute_unit=kw["compute_unit"])
+        return ref.chaotic_ann_ref(w1, b1, w2, b2, x0, n_steps, activation)
     interpret = (backend == "pallas_interpret") or (backend == "auto" and not _ON_TPU)
     return chaotic_ann_pallas(
-        w1, b1, w2, b2, x0, n_steps=n_steps, activation=activation,
-        interpret=interpret, **kw)
+        w1, b1, w2, b2, x0, cpl, n_steps=n_steps, activation=activation,
+        lattice=lattice, interpret=interpret, **kw)
 
 
 def chaotic_bits(params: Dict[str, jax.Array], x0: jax.Array, n_steps: int,
@@ -71,17 +98,24 @@ def chaotic_bits(params: Dict[str, jax.Array], x0: jax.Array, n_steps: int,
     tests/test_fused_bits.py.
     """
     w1, b1, w2, b2 = params["w1"], params["b1"], params["w2"], params["b2"]
-    if backend == "ref":
-        traj = ref.chaotic_ann_ref(w1, b1, w2, b2, x0, n_steps, activation)
-        return pack_words(traj, word_offset), traj[-1]
     kw = dict(s_block=s_block, t_block=t_block, unroll=unroll,
               compute_unit=compute_unit)
     if config is not None:
         kw = _kernel_kwargs(config)
+    lattice, cpl = _lattice_args(params, kw["compute_unit"])
+    if backend == "ref":
+        if lattice is not None:
+            traj = ref.chaotic_ann_lattice_ref(
+                w1, b1, w2, b2, x0, n_steps, activation, lattice=lattice,
+                coupling=cpl, compute_unit=kw["compute_unit"])
+        else:
+            traj = ref.chaotic_ann_ref(w1, b1, w2, b2, x0, n_steps,
+                                       activation)
+        return pack_words(traj, word_offset), traj[-1]
     interpret = (backend == "pallas_interpret") or (backend == "auto" and not _ON_TPU)
     return chaotic_ann_bits_pallas(
-        w1, b1, w2, b2, x0, word_offset, n_steps=n_steps,
-        activation=activation, interpret=interpret, **kw)
+        w1, b1, w2, b2, x0, word_offset, cpl, n_steps=n_steps,
+        activation=activation, lattice=lattice, interpret=interpret, **kw)
 
 
 def chaotic_bits_gang(params: Dict[str, jax.Array], x0: jax.Array,
@@ -128,6 +162,7 @@ def chaotic_bits_gang(params: Dict[str, jax.Array], x0: jax.Array,
               compute_unit=compute_unit)
     if config is not None:
         kw = _kernel_kwargs(config)
+    lattice, cpl = _lattice_args(params, kw["compute_unit"])
     if backend == "ref":
         s_blk = kw["s_block"]
         cmap = [int(c) for c in jnp.asarray(core_map)]
@@ -146,9 +181,16 @@ def chaotic_bits_gang(params: Dict[str, jax.Array], x0: jax.Array,
                 words_parts.append(jnp.zeros((n_rows, s_blk), jnp.uint32))
                 state_parts.append(xg)
                 continue
-            traj = ref.chaotic_ann_ref(
-                params["w1"][c], params["b1"][c], params["w2"][c],
-                params["b2"][c], xg, 2 * r_g, activation)
+            if lattice is not None:
+                traj = ref.chaotic_ann_lattice_ref(
+                    params["w1"][c], params["b1"][c], params["w2"][c],
+                    params["b2"][c], xg, 2 * r_g, activation,
+                    lattice=lattice, coupling=cpl,
+                    compute_unit=kw["compute_unit"])
+            else:
+                traj = ref.chaotic_ann_ref(
+                    params["w1"][c], params["b1"][c], params["w2"][c],
+                    params["b2"][c], xg, 2 * r_g, activation)
             w = pack_words(traj, off[g * s_blk:(g + 1) * s_blk])
             if r_g < n_rows:
                 w = jnp.concatenate(
@@ -175,16 +217,16 @@ def chaotic_bits_gang(params: Dict[str, jax.Array], x0: jax.Array,
                 [offp, jnp.zeros(pad * s_blk, jnp.uint32)])
         words, state = chaotic_ann_gang_bits_sharded(
             params["w1"], params["b1"], params["w2"], params["b2"], xp,
-            cmap_p, offp, rmap_p, mesh=mesh, mesh_axis=mesh_axis,
-            n_steps=n_steps, activation=activation, interpret=interpret,
-            **kw)
+            cmap_p, offp, rmap_p, cpl, mesh=mesh, mesh_axis=mesh_axis,
+            n_steps=n_steps, activation=activation, lattice=lattice,
+            interpret=interpret, **kw)
         if pad:
             words, state = words[:, :s_total], state[:s_total]
         return words, state
     return chaotic_ann_gang_bits_pallas(
         params["w1"], params["b1"], params["w2"], params["b2"], x0,
-        core_map, word_offset, rmap, n_steps=n_steps, activation=activation,
-        interpret=interpret, **kw)
+        core_map, word_offset, rmap, cpl, n_steps=n_steps,
+        activation=activation, lattice=lattice, interpret=interpret, **kw)
 
 
 def chaotic_bits_gang_stacked(params: Dict[str, jax.Array], x0: jax.Array,
@@ -223,6 +265,7 @@ def chaotic_bits_gang_stacked(params: Dict[str, jax.Array], x0: jax.Array,
               compute_unit=compute_unit)
     if config is not None:
         kw = _kernel_kwargs(config)
+    lattice, cpl = _lattice_args(params, kw["compute_unit"])
     if backend == "ref":
         n_cores = x0.shape[0]
         n_rows = n_steps // 2
@@ -239,9 +282,16 @@ def chaotic_bits_gang_stacked(params: Dict[str, jax.Array], x0: jax.Array,
                     jnp.zeros((n_rows, x0.shape[1]), jnp.uint32))
                 state_parts.append(x0[c])
                 continue
-            traj = ref.chaotic_ann_ref(
-                params["w1"][c], params["b1"][c], params["w2"][c],
-                params["b2"][c], x0[c], 2 * r_c, activation)
+            if lattice is not None:
+                traj = ref.chaotic_ann_lattice_ref(
+                    params["w1"][c], params["b1"][c], params["w2"][c],
+                    params["b2"][c], x0[c], 2 * r_c, activation,
+                    lattice=lattice, coupling=cpl,
+                    compute_unit=kw["compute_unit"])
+            else:
+                traj = ref.chaotic_ann_ref(
+                    params["w1"][c], params["b1"][c], params["w2"][c],
+                    params["b2"][c], x0[c], 2 * r_c, activation)
             w = pack_words(traj, off[c])
             if r_c < n_rows:
                 w = jnp.concatenate(
@@ -256,12 +306,12 @@ def chaotic_bits_gang_stacked(params: Dict[str, jax.Array], x0: jax.Array,
         return chaotic_ann_gang_stacked_sharded(
             params["w1"], params["b1"], params["w2"], params["b2"], x0,
             word_offset, rmap, mesh=mesh, mesh_axis=mesh_axis,
-            n_steps=n_steps, activation=activation, interpret=interpret,
-            **kw)
+            n_steps=n_steps, activation=activation, lattice=lattice,
+            interpret=interpret, **kw)
     return chaotic_ann_gang_stacked_pallas(
         params["w1"], params["b1"], params["w2"], params["b2"], x0,
         word_offset, rmap, n_steps=n_steps, activation=activation,
-        interpret=interpret, **kw)
+        lattice=lattice, interpret=interpret, **kw)
 
 
 def uniform_from_trajectory(traj: jax.Array) -> jax.Array:

@@ -27,3 +27,49 @@ def chaotic_ann_ref(w1: Array, b1: Array, w2: Array, b2: Array,
 
     _, traj = jax.lax.scan(step, x0, None, length=n_steps)
     return traj
+
+
+def chaotic_ann_lattice_ref(w1: Array, b1: Array, w2: Array, b2: Array,
+                            x0: Array, n_steps: int,
+                            activation: str = "relu", *, lattice,
+                            coupling: Array | None = None,
+                            compute_unit: str = "vpu") -> Array:
+    """Block-coupled lattice oracle, bitwise identical to the Pallas kernels.
+
+    Unlike ``chaotic_ann_ref`` (an independent ``x @ w`` formulation that
+    matches the mxu kernel bitwise but the vpu kernel only to fp-order
+    ulps), the lattice oracle scans the kernels' own ``_make_step`` closure
+    on the kernels' own (I, S) layout — same expression tree, same
+    accumulation order — so ref-vs-Pallas equality is exact for BOTH
+    compute units, which is what pins down the coupled dynamics.
+
+    Args:
+      w1 (I, H), b1 (H,), w2 (H, I), b2 (I,), x0 (S, I) — lattice-expanded.
+      lattice: static ``(n_nodes, base_dim, topology, strength)``.
+      coupling: dense (I, I) operator; required when compute_unit="mxu".
+      compute_unit: which kernel expression tree to mirror — the two units
+        produce legitimately different (both deterministic) streams.
+    Returns:
+      (n_steps, S, I) trajectory (excluding x0), in x0's dtype.
+    """
+    from repro.kernels.chaotic_ann import _check_lattice, _make_step
+    dtype = x0.dtype
+    i_dim, h_dim = w1.shape
+    _check_lattice(lattice, i_dim, i_dim)
+    cpl = None
+    if compute_unit == "mxu":
+        if coupling is None:
+            raise ValueError("mxu lattice oracle needs the coupling operand")
+        cpl = coupling.astype(dtype)
+    step = _make_step(
+        w1.astype(dtype), b1.astype(dtype).reshape(-1, 1),
+        w2.astype(dtype), b2.astype(dtype).reshape(-1, 1),
+        activation=activation, compute_unit=compute_unit,
+        i_dim=i_dim, h_dim=h_dim, lattice=lattice, cpl=cpl)
+
+    def body(x, _):
+        y = step(x)
+        return y, y
+
+    _, traj = jax.lax.scan(body, x0.T, None, length=n_steps)
+    return traj.transpose(0, 2, 1)

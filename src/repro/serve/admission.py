@@ -82,7 +82,8 @@ class AdaptiveCeiling:
 
     def __init__(self, *, target_delay_ms: float = 50.0, window: int = 32,
                  min_rows: int = 64, max_rows: int = 1 << 20,
-                 cost_model=None, candidate=None):
+                 cost_model=None, candidate=None,
+                 rows_per_launch: Optional[int] = None):
         if target_delay_ms <= 0:
             raise ValueError(
                 f"target_delay_ms must be > 0, got {target_delay_ms}")
@@ -92,17 +93,27 @@ class AdaptiveCeiling:
         self.max_rows = int(max_rows)
         self.cost_model = cost_model
         self.candidate = candidate
+        self.rows_per_launch = (None if rows_per_launch is None
+                                else max(1, int(rows_per_launch)))
         self._obs: collections.deque = collections.deque(maxlen=self.window)
         self._last_stage_s: Optional[float] = None
         self.updates = 0
 
     def prior_rows_per_s(self) -> Optional[float]:
         """Cold-start throughput prior from the fitted cost model (None
-        without a model fitted to wall time, i.e. ``sec_per_cycle``)."""
+        without a model fitted to wall time, i.e. ``sec_per_cycle``).
+
+        The modeled launch is shaped like the *plan's* launch: ``q`` is
+        the gang plan's actual rows-per-launch when the caller supplied
+        it (``rows_per_launch``), else one nominal t_block/2-row block.
+        The candidate's dims carry the per-row cost, so a lattice core
+        (i_dim = n_nodes x base dim, plus the coupling term) models
+        n_nodes-fold slower rows instead of inheriting a scalar core's
+        prior and over-admitting on cold start."""
         m, c = self.cost_model, self.candidate
         if m is None or c is None or getattr(m, "sec_per_cycle", None) is None:
             return None
-        q = max(1, c.t_block // 2)
+        q = self.rows_per_launch or max(1, c.t_block // 2)
         sec = m.seconds(m.launch_cycles(c, [q]))
         return q / sec if sec and sec > 0 else None
 
@@ -282,6 +293,14 @@ class AdmissionController:
         ceiling when attached, else the static ``max_queued_rows`` —
         either one scaled by the degraded-capacity factor.
 
+        A degraded farm must never quantize to a zero ceiling: a small
+        base times a reduced-but-nonzero capacity factor used to round
+        to 0 and reject *all* traffic while healthy cores remained.
+        Whenever ``capacity_factor > 0`` the scaled ceiling is floored
+        at the adaptive ``min_rows`` (one row for a static ceiling),
+        never exceeding the undegraded base.  A factor of exactly 0
+        (every core quarantined) still means a zero ceiling.
+
         Lock-free on purpose: ``admit`` reads it while holding the
         controller lock, and ``set_capacity_factor`` publishes a single
         float (atomic under the GIL)."""
@@ -289,7 +308,12 @@ class AdmissionController:
                 else self.max_queued_rows)
         if base is None:
             return None
-        return int(base * self._capacity_factor)
+        scaled = int(base * self._capacity_factor)
+        if self._capacity_factor > 0.0:
+            floor = (self.adaptive.min_rows if self.adaptive is not None
+                     else 1)
+            scaled = max(scaled, min(int(base), floor))
+        return scaled
 
     def release(self, rows: int) -> None:
         """Return ``rows`` to the ceiling gauge (request left the queue:

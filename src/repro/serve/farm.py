@@ -42,7 +42,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dse import GangCostModel
+from repro.core.dse import VMEM_USABLE, GangCostModel, stacked_gang_vmem_bytes
 from repro.prng.stream import _round_rows
 from repro.serve.clock import Clock, SystemClock
 from repro.serve.health import CoreQuarantined
@@ -73,13 +73,28 @@ def _as_topo(t) -> Optional[Tuple]:
     return (str(t[0]), int(t[1]), tuple(int(x) for x in t[2]))
 
 
+def _lattice_sig(svc: PRNGService) -> Optional[Tuple]:
+    """Hashable lattice identity of one core's service, or ``None`` for a
+    scalar (uncoupled) core.  The coupling operator is a pure function of
+    this tuple (``lattice_coupling_matrix``), so equal signatures imply a
+    shared coupling operand is exact for every member of a gang."""
+    meta = svc.params.get("lattice_meta")
+    if meta is None:
+        return None
+    from repro.core.ann import lattice_meta_tuple
+    return lattice_meta_tuple(np.asarray(meta))
+
+
 def _compat_key(svc: PRNGService) -> Optional[Tuple]:
     """Gang-compatibility signature of one core's service.
 
     Two cores may share a stacked-weight launch iff every static property
     of the kernel instantiation matches: network shape (i_dim, h_dim),
     compute dtype, activation, backend, the full DSE kernel config
-    (s_block, t_block, unroll, compute_unit), and the device topology.
+    (s_block, t_block, unroll, compute_unit), the lattice signature
+    (scalar cores never gang with lattice cores, and lattice cores gang
+    only on identical (n_nodes, base_dim, topology, strength) — the
+    launch carries ONE shared coupling operand), and the device topology.
     Mesh-sharded pools gang with pools on the SAME mesh (axis name, device
     count, device ids): the group launches as one shard_map'd gang across
     that mesh — the single-device-only limit recorded by PR 4 is gone.
@@ -88,7 +103,7 @@ def _compat_key(svc: PRNGService) -> Optional[Tuple]:
     return (svc.dim, int(svc.params["w1"].shape[1]), str(svc.dtype),
             svc.activation, svc.backend,
             c.s_block, c.t_block, c.unroll, c.compute_unit,
-            _topology(svc))
+            _lattice_sig(svc), _topology(svc))
 
 
 class GangScheduler:
@@ -163,6 +178,12 @@ class GangScheduler:
         s_block = svc0.config.s_block
         params = {k: jnp.stack([svc.params[k] for _, svc in members])
                   for k in ("w1", "b1", "w2", "b2")}
+        # Lattice cores carry the coupling keys UN-stacked: the compat key
+        # pins an identical lattice signature across the group, so one
+        # shared (I, I) operand serves every member (ops._lattice_args).
+        for k in ("coupling", "lattice_meta"):
+            if k in svc0.params:
+                params[k] = jnp.asarray(svc0.params[k])
         sizes = [int(svc.pool_x.shape[0]) for _, svc in members]
         plan = {"sig": sig, "params": params, "s_block": s_block,
                 "mode": mode, "last_x": None, "handed": None}
@@ -234,9 +255,13 @@ class GangScheduler:
         n_dev = 1 if topo is None else topo[1]
         # the stacked kernel shards its LANE axis: each device needs an
         # equal lane slice, so stacked is only eligible when the (equal)
-        # pool size divides the device count
+        # pool size divides the device count — and the whole stack must
+        # fit VMEM (every core's carry/hidden/x0 is resident at once);
+        # past that cliff the planner falls back to the lane-concat layout
         stacked_ok = (len(set(sizes)) == 1 and c.compute_unit == "vpu"
-                      and sizes[0] % n_dev == 0)
+                      and sizes[0] % n_dev == 0
+                      and stacked_gang_vmem_bytes(c, len(members))
+                      <= VMEM_USABLE)
         model = self.cost_model
         all_idx = tuple(range(len(members)))
         dmax = max(demands)
@@ -284,7 +309,9 @@ class GangScheduler:
                     sub_sizes = [sizes[i] for i in idxs]
                     sub_stacked = (len(set(sub_sizes)) == 1
                                    and c.compute_unit == "vpu"
-                                   and sub_sizes[0] % n_dev == 0)
+                                   and sub_sizes[0] % n_dev == 0
+                                   and stacked_gang_vmem_bytes(c, len(idxs))
+                                   <= VMEM_USABLE)
                     lay = "stacked" if sub_stacked else "concat"
                     cost += model.gang_cost(
                         c, [d] * len(idxs), [blocks[i] for i in idxs],

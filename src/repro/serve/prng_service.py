@@ -36,7 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
-from repro.prng.stream import _lineage_counter, _round_rows, _splitmix_seeds
+from repro.prng.stream import (_lineage_counter, _round_rows,
+                               _splitmix_seeds, effective_burn_in)
 
 
 @dataclasses.dataclass(eq=False)
@@ -61,16 +62,20 @@ class PRNGService:
         self.params = {k: jnp.asarray(v) for k, v in params.items()}
         self.dim = self.params["w1"].shape[0]
         self.lanes_per_client = int(lanes_per_client)
-        self.burn_in = int(burn_in) + (int(burn_in) % 2)
+        self.burn_in = effective_burn_in(burn_in)
         self.activation = activation
         self.backend = backend
         # Kernel compute dtype: f32 unless serving a half-width (bf16) core.
         self.dtype = jnp.dtype(dtype) if dtype is not None else jnp.float32
         if config is None:
             from repro.core.dse import select_config
+            n_nodes = 1
+            if "lattice_meta" in self.params:
+                from repro.core.ann import lattice_meta_tuple
+                n_nodes = lattice_meta_tuple(self.params["lattice_meta"])[0]
             config = select_config(self.dim, self.params["w1"].shape[1],
                                    s_total=self.lanes_per_client,
-                                   dtype=self.dtype)
+                                   dtype=self.dtype, n_nodes=n_nodes)
         self.config = config
         self.mesh = mesh
         self.mesh_axis = mesh_axis
@@ -387,9 +392,19 @@ class PRNGService:
             },
             "launches": self.launches,
             "outbox": {k: v.copy() for k, v in self._outbox.items()},
+            # Effective burn-in is part of every stream's identity: a
+            # restore under a different burn-in would silently continue
+            # from stream positions the new engine can never reproduce.
+            "burn_in": self.burn_in,
         }
 
     def restore(self, snap: Dict[str, object]) -> None:
+        snap_burn = snap.get("burn_in")
+        if snap_burn is not None and int(snap_burn) != self.burn_in:
+            raise ValueError(
+                f"snapshot was taken with effective burn_in {snap_burn}, "
+                f"this service runs {self.burn_in}; streams would resume "
+                f"at positions the engine cannot reproduce")
         self.pool_x = (jnp.asarray(snap["pool_x"], self.dtype)
                        if snap["pool_x"] is not None else None)
         self.clients = {

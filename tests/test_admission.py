@@ -316,3 +316,70 @@ def test_adaptive_ceiling_fed_by_frontend_profile_stats():
         assert 16 <= ad.ceiling() < 1 << 20    # left max_rows: measured
 
     _run(go())
+
+
+def test_degraded_ceiling_never_quantizes_to_zero():
+    """Regression: a small base ceiling times a reduced-but-nonzero
+    capacity factor used to truncate to a ZERO ceiling — rejecting all
+    traffic while healthy cores remained.  A nonzero factor now floors
+    the scaled ceiling at one row (static) / ``min_rows`` (adaptive);
+    a factor of exactly 0 (every core quarantined) still closes the
+    gate."""
+    from repro.serve.admission import AdaptiveCeiling
+
+    ac = AdmissionController(max_queued_rows=3, clock=FakeClock())
+    ac.set_capacity_factor(0.2)              # int(3 * 0.2) == 0
+    assert ac.current_ceiling == 1
+    ac.admit("c", "t", 1, rows_est=1)        # one row still flows
+    ac.release(1)
+    ac.set_capacity_factor(0.0)
+    assert ac.current_ceiling == 0
+    with pytest.raises(Overloaded):
+        ac.admit("c", "t", 1, rows_est=1)
+
+    ad = AdaptiveCeiling(target_delay_ms=50.0, window=4,
+                         min_rows=8, max_rows=10_000)
+    for _ in range(4):
+        ad.observe(0.010, 50)                # 5000 rows/s -> base 250
+    acc = AdmissionController(adaptive=ad, clock=FakeClock())
+    assert acc.current_ceiling == 250
+    acc.set_capacity_factor(0.001)           # int(250 * 0.001) == 0
+    assert acc.current_ceiling == 8          # floored at min_rows
+    acc.set_capacity_factor(0.0)
+    assert acc.current_ceiling == 0
+
+
+def test_adaptive_prior_scales_with_launch_shape_and_lattice_dims():
+    """Regression: the cold-start prior always modeled one nominal
+    t_block/2-row launch, whatever the plan actually launches — so a
+    farm flushing bigger coalesced launches under-estimated its own
+    throughput, and a lattice core (i_dim = n_nodes x base dim) priced
+    its rows like a scalar core and over-admitted on cold start."""
+    from repro.core.dse import GangCostModel, select_config
+    from repro.serve.admission import AdaptiveCeiling
+    from test_async_frontend import CAND as c
+
+    fitted = GangCostModel(sec_per_cycle=1e-9)
+    base = AdaptiveCeiling(cost_model=fitted, candidate=c)
+    shaped = AdaptiveCeiling(cost_model=fitted, candidate=c,
+                             rows_per_launch=4 * c.t_block)
+    # bigger launches amortize per-launch overhead: a plan-shaped prior
+    # must credit that, not repeat the nominal-block estimate
+    assert shaped.prior_rows_per_s() > base.prior_rows_per_s()
+
+    # same launch shape, lattice-vs-scalar rows: pin rows_per_launch so
+    # only the per-row cost differs — a 32-node lattice row carries
+    # ~n_nodes the compute of the 3-D scalar core's and must price so
+    lat = select_config(96, 256, s_total=128, unit="vpu", n_nodes=32)
+    assert lat.n_nodes == 32
+    scal_prior = AdaptiveCeiling(cost_model=fitted, candidate=c,
+                                 rows_per_launch=128).prior_rows_per_s()
+    lat_prior = AdaptiveCeiling(cost_model=fitted, candidate=lat,
+                                rows_per_launch=128).prior_rows_per_s()
+    assert lat_prior < scal_prior / 4
+    # and the DSE's actual lattice pick (mxu) prices between the two:
+    # costlier than the scalar core, cheaper than brute-force vpu rows
+    latm = select_config(96, 256, s_total=128, unit="mxu", n_nodes=32)
+    latm_prior = AdaptiveCeiling(cost_model=fitted, candidate=latm,
+                                 rows_per_launch=128).prior_rows_per_s()
+    assert lat_prior < latm_prior < scal_prior
